@@ -1,0 +1,37 @@
+"""Paper Fig. 4 analogue: scalability in p and n, sparse vs dense graphs.
+
+Measures the full causal-order recovery (all p iterations). Serial oracle is
+measured at the smallest cell and extrapolated cubically elsewhere (the
+paper's own observation: serial runtime depends only on p and n)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import direct_lingam, sem
+from repro.core.paralingam import ParaLiNGAMConfig, causal_order
+
+
+def run():
+    serial_ref = None  # (p, n, seconds)
+    for density in ("sparse", "dense"):
+        for p, n in ((100, 1024), (200, 1024), (100, 4096)):
+            x = sem.generate(sem.SemSpec(p=p, n=n, density=density, seed=3))["x"]
+            t0 = time.time()
+            res = causal_order(x, ParaLiNGAMConfig(method="dense"))
+            t_para = time.time() - t0
+            if serial_ref is None:
+                t0 = time.time()
+                s_order = direct_lingam.causal_order(x)
+                t_serial = time.time() - t0
+                serial_ref = (p, n, t_serial)
+                match = s_order == res.order
+                derived = f"serial_s={t_serial:.1f};speedup={t_serial/t_para:.1f}x;match={match}"
+            else:
+                p0, n0, t0s = serial_ref
+                est = t0s * (p / p0) ** 3 * (n / n0)
+                derived = f"serial_est_s={est:.1f};speedup_est={est/t_para:.1f}x"
+            row(f"fig4_{density}_p{p}_n{n}", t_para * 1e6, derived)

@@ -1,0 +1,45 @@
+"""Kernel micro-benchmarks.
+
+The Pallas pairwise-score kernel targets TPU; on this CPU container it runs
+in interpret mode (correctness only — timings meaningless), so what we
+measure here is (a) the XLA-compiled jnp oracle it must beat, at several
+j-block shapes (the same blocking trade-off the kernel's BlockSpec makes),
+and (b) the analytic VMEM/arithmetic-intensity numbers per block shape that
+drive the TPU roofline in EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core.covariance import cov_matrix, normalize
+from repro.core.pairwise import residual_entropy_matrix
+
+# per-sample flop estimate of the fused residual-entropy inner loop
+FLOPS_PER_ELEM = 14  # sub, mul x3, abs, exp x2, log1p, adds
+
+
+def run():
+    rng = np.random.default_rng(0)
+    p, n = 256, 2048
+    xn = normalize(jnp.asarray(rng.standard_normal((p, n)), jnp.float32))
+    c = cov_matrix(xn)
+
+    for bj in (16, 32, 64, 128):
+        us = time_fn(lambda xn, c: residual_entropy_matrix(xn, c, block_j=bj), xn, c)
+        flops = p * p * n * FLOPS_PER_ELEM
+        gflops = flops / (us * 1e-6) / 1e9
+        row(f"kern_oracle_p{p}_n{n}_bj{bj}", us, f"cpu_gflops={gflops:.1f}")
+
+    # Pallas BlockSpec accounting (TPU-side, analytic):
+    for bi, bj, bn in ((8, 8, 512), (8, 16, 512), (16, 16, 256), (32, 8, 256)):
+        vmem = (bi * bn + bj * bn + 3 * bi * bj + bi * bj * bn) * 4
+        # bytes loaded per tile / flops per tile -> arithmetic intensity
+        bytes_tile = (bi * bn + bj * bn + bi * bj) * 4
+        flops_tile = bi * bj * bn * FLOPS_PER_ELEM
+        row(
+            f"kern_blockspec_bi{bi}_bj{bj}_bn{bn}",
+            0.0,
+            f"vmem_kib={vmem / 1024:.0f};intensity_flops_per_byte={flops_tile / bytes_tile:.1f}",
+        )

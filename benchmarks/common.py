@@ -1,0 +1,26 @@
+"""Shared benchmark helpers."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, iters: int = 3, warmup: int = 1):
+    """Median wall time per call in microseconds (blocks on jax outputs)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)) * 1e6
+
+
+def row(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,194 @@
+"""Fill EXPERIMENTS.md tables from results/, results_opt/ and bench_output.txt.
+
+    PYTHONPATH=src python -m benchmarks.report
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+from benchmarks.roofline import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    VPU_PEAK,
+    analytic_memory_gib,
+    model_flops_global,
+    suggestion,
+)
+
+
+def _load(results_dir, want_cost):
+    out = {}
+    for path in glob.glob(os.path.join(results_dir, "*.json")):
+        for rec in json.load(open(path)):
+            if rec.get("status") == "skipped":
+                out.setdefault(("skip", rec["cell"], rec.get("mesh_kind", "single")), rec)
+                continue
+            if rec.get("status") != "ok":
+                continue
+            is_cost = "cost_mode" in rec
+            if is_cost != want_cost:
+                continue
+            out[(rec["cell"], rec.get("mesh_kind", "single"))] = rec
+    return out
+
+
+def dryrun_table() -> str:
+    compiled = _load("results", want_cost=False)
+    from repro import configs
+    from repro.configs.shapes import SHAPES
+
+    lines = [
+        "| cell | mesh 16x16 | mesh 2x16x16 | mem meas (GiB) | mem analytic (GiB) |",
+        "|---|---|---|---|---|",
+    ]
+    for arch in configs.ARCH_NAMES:
+        cfg = configs.get(arch)
+        for sname, shape in SHAPES.items():
+            cell = f"{cfg.name}/{sname}"
+            r1 = compiled.get((cell, "single"))
+            r2 = compiled.get((cell, "multi"))
+            skip = compiled.get(("skip", cell, "single"))
+            if skip is not None:
+                lines.append(f"| {cell} | SKIP (documented) | SKIP | — | — |")
+                continue
+            if r1 is None and r2 is None:
+                lines.append(f"| {cell} | MISSING | MISSING | — | — |")
+                continue
+
+            def st(r):
+                if r is None:
+                    return "—"
+                return f"ok ({r['compile_s']:.0f}s)"
+
+            mem = "—"
+            if r1:
+                m = r1["memory"]
+                mem = f"{(m['argument_size_in_bytes'] + m['temp_size_in_bytes']) / 2**30:.1f}"
+            lines.append(
+                f"| {cell} | {st(r1)} | {st(r2)} | {mem} | "
+                f"{analytic_memory_gib(cfg, shape, 256):.1f} |"
+            )
+    # lingam cells
+    for key, rec in sorted(compiled.items()):
+        if isinstance(key[0], str) and key[0].startswith("lingam"):
+            m = rec.get("memory", {})
+            mem = (m.get("argument_size_in_bytes", 0) + m.get("temp_size_in_bytes", 0)) / 2**30
+            lines.append(
+                f"| {key[0]} | ok ({rec.get('compile_s', 0):.0f}s, {key[1]}) | — | {mem:.1f} | — |"
+            )
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    from repro import configs
+    from repro.configs.shapes import SHAPES
+
+    base = _load("results", want_cost=True)
+    opt = _load("results_opt", want_cost=True)
+    lines = [
+        "| cell | t_comp (ms) | t_mem (ms) | t_coll (ms) | dominant | useful % | "
+        "roofline frac | opt: t_coll (ms) | opt dominant |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    notes = []
+    for arch in configs.ARCH_NAMES:
+        cfg = configs.get(arch)
+        for sname, shape in SHAPES.items():
+            cell = f"{cfg.name}/{sname}"
+            r = base.get((cell, "single"))
+            if r is None:
+                continue
+            f, by = r["flops_per_device"], r["bytes_per_device"]
+            co = r["collectives"]["total_operand_bytes"]
+            t_c, t_m, t_l = f / PEAK_FLOPS, by / HBM_BW, co / ICI_BW
+            dom = max((("compute", t_c), ("memory", t_m), ("collective", t_l)),
+                      key=lambda kv: kv[1])[0]
+            mf = model_flops_global(cfg, shape) / 256
+            useful = mf / f if f else 0
+            frac = t_c / max(t_c, t_m, t_l) if max(t_c, t_m, t_l) else 0
+            o = opt.get((cell, "single"))
+            if o is not None:
+                of = o["flops_per_device"]
+                oco = o["collectives"]["total_operand_bytes"]
+                ot_c, ot_m, ot_l = (of / PEAK_FLOPS,
+                                    o["bytes_per_device"] / HBM_BW, oco / ICI_BW)
+                odom = max((("compute", ot_c), ("memory", ot_m), ("collective", ot_l)),
+                           key=lambda kv: kv[1])[0]
+                ocol = f"{ot_l*1e3:.2f}"
+            else:
+                odom, ocol = "—", "—"
+            lines.append(
+                f"| {cell} | {t_c*1e3:.2f} | {t_m*1e3:.2f} | {t_l*1e3:.2f} | {dom} | "
+                f"{100*useful:.0f}% | {100*frac:.0f}% | {ocol} | {odom} |"
+            )
+            notes.append(
+                f"* **{cell}** — bottleneck: {dom}; to improve: "
+                f"{suggestion(dom, shape.kind, cfg)}."
+            )
+    return "\n".join(lines), "\n".join(notes)
+
+
+def lingam_roofline() -> str:
+    base = _load("results", want_cost=False)
+    lines = [
+        "| lingam cell | flops/dev | t_comp@VPU (ms) | t_mem (ms) | t_coll (ms) | dominant |",
+        "|---|---|---|---|---|---|",
+    ]
+    for key, rec in sorted(base.items()):
+        if not (isinstance(key[0], str) and key[0].startswith("lingam")):
+            continue
+        f = rec["flops_per_device"]
+        t_c = f / VPU_PEAK
+        t_m = rec["bytes_per_device"] / HBM_BW
+        t_l = rec["collectives"]["total_operand_bytes"] / ICI_BW
+        dom = max((("compute", t_c), ("memory", t_m), ("collective", t_l)),
+                  key=lambda kv: kv[1])[0]
+        lines.append(
+            f"| {key[0]} ({key[1]}) | {f:.2e} | {t_c*1e3:.2f} | {t_m*1e3:.2f} | "
+            f"{t_l*1e3:.3f} | {dom} |"
+        )
+    return "\n".join(lines)
+
+
+def bench_tables() -> str:
+    if not os.path.exists("bench_output.txt"):
+        return "(run `python -m benchmarks.run | tee bench_output.txt` first)"
+    rows = []
+    for line in open("bench_output.txt"):
+        line = line.strip()
+        if not line or line.startswith("name,") or line.startswith("#"):
+            continue
+        parts = line.split(",", 2)
+        if len(parts) == 3:
+            rows.append(parts)
+    out = ["| benchmark | us/call | derived |", "|---|---|---|"]
+    for name, us, derived in rows:
+        out.append(f"| {name} | {float(us):.0f} | {derived.replace(';', '; ')} |")
+    return "\n".join(out)
+
+
+def main():
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    rt, notes = roofline_table()
+    rt = rt + "\n\n### LiNGAM (paper workload) cells\n\n" + lingam_roofline()
+    for marker, content in (
+        ("<!-- DRYRUN_TABLE -->", dryrun_table()),
+        ("<!-- ROOFLINE_TABLE -->", rt),
+        ("<!-- ROOFLINE_NOTES -->", "### Per-cell notes\n\n" + notes),
+        ("<!-- PAPER_BENCH_TABLES -->", bench_tables()),
+    ):
+        if marker in text:
+            text = text.replace(marker, content)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,214 @@
+"""Roofline analysis: compiled dry-run artifacts -> three-term roofline.
+
+Reads results/*.json produced by repro.launch.dryrun (compile matrix and
+cost-mode runs), computes per (arch x shape):
+
+    t_compute    = HLO flops/device   / PEAK_FLOPS
+    t_memory     = HLO bytes/device   / HBM_BW
+    t_collective = collective operand bytes/device / ICI_BW
+
+plus MODEL_FLOPS (6*N_active*D for train, 2*N_active*D prefill, 2*N_active*B
+decode), the useful-compute ratio, an analytic per-device memory model
+(the CPU backend materializes f32 copies of bf16 buffers, inflating
+memory_analysis ~2-3x; EXPERIMENTS.md documents the evidence), a dominant-
+term classification and a what-to-do-next sentence.
+
+Usage:  PYTHONPATH=src python -m benchmarks.roofline [--results results/] [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+# TPU v5e targets (per assignment)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9
+ICI_BW = 50e9  # per link
+VPU_PEAK = PEAK_FLOPS / 8  # transcendental/VPU-bound estimate (documented)
+
+CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def model_flops_global(cfg, shape) -> float:
+    """Useful model flops for the whole step (all chips)."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    # decode: one token per sequence + attention over the KV cache
+    flops = 2.0 * n_active * shape.global_batch
+    if cfg.family not in ("ssm",):
+        kv_dim = cfg.n_kv_heads * cfg.head_dim
+        n_attn_layers = (
+            cfg.n_layers if cfg.family != "hybrid" else cfg.n_groups
+        )
+        flops += (
+            4.0 * shape.global_batch * shape.seq_len * kv_dim * n_attn_layers
+        )
+    return flops
+
+
+def analytic_memory_gib(cfg, shape, chips: int) -> float:
+    """First-principles per-device bytes (TPU expectation)."""
+    n_params = cfg.param_count()
+    if shape.kind == "train":
+        state = 16.0 * n_params / chips  # fp32 params+grads+m+v, fully sharded
+        accum = 4
+        batch_shards = chips // 16  # data (x pod) axes
+        b_loc = max(1, shape.global_batch // accum // batch_shards)
+        g = cfg.n_groups
+        import math
+
+        n_outer = min((d + g // d, d) for d in range(1, g + 1) if g % d == 0)[1]
+        carries = (n_outer + g // n_outer) * b_loc * shape.seq_len * cfg.d_model * 2
+        logits = 2 * b_loc * shape.seq_len * cfg.vocab_padded / 16 * 4
+        transient = 1.5e9
+        return (state + carries + logits + transient) / 2**30
+    # serving
+    params = 2.0 * n_params / 16  # bf16, TP-sharded over model only
+    cache = 0.0
+    if shape.kind in ("prefill", "decode"):
+        b, s = shape.global_batch, shape.seq_len
+        if cfg.family == "ssm":
+            per_layer = b * (
+                cfg.n_ssm_heads * cfg.ssm_headdim * cfg.ssm_state * 4
+                + (cfg.ssm_conv - 1) * (cfg.d_inner + 2 * cfg.ssm_state) * 2
+            )
+            cache = cfg.n_layers * per_layer
+        elif cfg.family == "hybrid":
+            per_ssm = b * (
+                cfg.n_ssm_heads * cfg.ssm_headdim * cfg.ssm_state * 4
+                + (cfg.ssm_conv - 1) * (cfg.d_inner + 2 * cfg.ssm_state) * 2
+            )
+            kv = 2 * b * s * cfg.n_kv_heads * cfg.head_dim * 2
+            cache = cfg.n_layers * per_ssm + cfg.n_groups * kv
+        elif cfg.mla:
+            cache = cfg.n_layers * b * s * (cfg.kv_lora_rank + cfg.rope_head_dim) * 2
+        else:
+            cache = cfg.n_layers * 2 * b * s * cfg.n_kv_heads * cfg.head_dim * 2
+        cache /= chips  # batch over data x seq over model
+    act = 1.0e9 if shape.kind == "prefill" else 0.3e9
+    return (params + cache + act) / 2**30
+
+
+def suggestion(dom: str, kind: str, cfg) -> str:
+    if dom == "collective":
+        if kind == "train":
+            return ("bf16 gradient all-reduce + larger accumulation span to "
+                    "amortize the per-step reduce-scatter")
+        return "shard KV over more of the mesh / overlap all-gather with compute"
+    if dom == "memory":
+        if kind == "decode":
+            return ("decode is KV-bandwidth bound by nature: quantize KV to "
+                    "int8 or shrink the cache (MLA/eviction) to cut bytes")
+        return "fuse elementwise chains and keep activations bf16 end to end"
+    if kind == "train":
+        return ("compute-bound: raise MXU utilization — larger microbatch "
+                "per device or remove remat recompute on the cheap layers")
+    return "compute-bound: batch more requests per step"
+
+
+def analyze(results_dir: str):
+    from repro import configs
+    from repro.configs.shapes import SHAPES
+
+    # collect cost-mode records (preferred for flops/collectives) and
+    # compile-matrix records (memory + compile proof)
+    cost, compiled = {}, {}
+    for path in glob.glob(os.path.join(results_dir, "*.json")):
+        for rec in json.load(open(path)):
+            if rec.get("status") != "ok":
+                continue
+            key = (rec["cell"], rec.get("mesh_kind", "single"))
+            if "cost_mode" in rec:
+                cost[key] = rec
+            else:
+                compiled[key] = rec
+
+    rows = []
+    for arch in configs.ARCH_NAMES:
+        cfg = configs.get(arch)
+        for sname, shape in SHAPES.items():
+            cell = f"{cfg.name}/{sname}"
+            c_rec = cost.get((cell, "single"))
+            m_rec = compiled.get((cell, "single"))
+            if not c_rec and not m_rec:
+                continue
+            src = c_rec or m_rec
+            chips = 256
+            flops = src["flops_per_device"]
+            bytes_ = src["bytes_per_device"]
+            coll = src["collectives"]["total_operand_bytes"]
+            t_comp = flops / PEAK_FLOPS
+            t_mem = bytes_ / HBM_BW
+            t_coll = coll / ICI_BW
+            dom = max(
+                ("compute", t_comp), ("memory", t_mem), ("collective", t_coll),
+                key=lambda kv: kv[1],
+            )[0]
+            mf = model_flops_global(cfg, shape) / chips
+            ratio = mf / flops if flops else 0.0
+            bound = max(t_comp, t_mem, t_coll)
+            frac = t_comp / bound if bound else 0.0
+            rows.append({
+                "cell": cell,
+                "flops_dev": flops,
+                "bytes_dev": bytes_,
+                "coll_dev": coll,
+                "t_compute_s": t_comp,
+                "t_memory_s": t_mem,
+                "t_collective_s": t_coll,
+                "dominant": dom,
+                "model_flops_dev": mf,
+                "useful_ratio": ratio,
+                "roofline_fraction": frac,
+                "mem_measured_gib": (
+                    (m_rec["memory"]["argument_size_in_bytes"]
+                     + m_rec["memory"]["temp_size_in_bytes"]) / 2**30
+                    if m_rec else float("nan")
+                ),
+                "mem_analytic_gib": analytic_memory_gib(cfg, shape, chips),
+                "suggestion": suggestion(dom, shape.kind, cfg),
+                "cost_mode": (c_rec or {}).get("cost_mode", "scan(1-body)"),
+            })
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results")
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+    rows = analyze(args.results)
+    if args.md:
+        print("| cell | t_comp (ms) | t_mem (ms) | t_coll (ms) | dominant | "
+              "useful % | mem meas/analytic GiB |")
+        print("|---|---|---|---|---|---|---|")
+        for r in rows:
+            print(
+                f"| {r['cell']} | {r['t_compute_s']*1e3:.2f} | "
+                f"{r['t_memory_s']*1e3:.2f} | {r['t_collective_s']*1e3:.2f} | "
+                f"{r['dominant']} | {100*r['useful_ratio']:.0f}% | "
+                f"{r['mem_measured_gib']:.1f} / {r['mem_analytic_gib']:.1f} |"
+            )
+    else:
+        for r in rows:
+            print(
+                f"{r['cell']},{r['t_compute_s']*1e6:.1f},"
+                f"dom={r['dominant']};useful={100*r['useful_ratio']:.0f}%;"
+                f"t_mem_us={r['t_memory_s']*1e6:.0f};"
+                f"t_coll_us={r['t_collective_s']*1e6:.0f}"
+            )
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

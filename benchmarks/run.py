@@ -1,0 +1,35 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. The dry-run-derived roofline tables
+live in benchmarks/roofline.py (they need results/ from repro.launch.dryrun).
+
+    PYTHONPATH=src python -m benchmarks.run             # all CPU benches
+    PYTHONPATH=src python -m benchmarks.run --only fig3
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SUITES = ("table2", "fig3", "fig4", "threshold", "kernels")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma-separated suite names")
+    args = ap.parse_args()
+    wanted = tuple(args.only.split(",")) if args.only else SUITES
+
+    print("name,us_per_call,derived")
+    for name in wanted:
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        t0 = time.time()
+        mod.run()
+        print(f"# suite {name} finished in {time.time() - t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

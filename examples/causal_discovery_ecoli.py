@@ -1,0 +1,45 @@
+"""End-to-end driver at the paper's real-data scale: the E.coli-core cell of
+paper Table 1/2 (p = 85 variables, n = 10000 samples).
+
+The paper's serial DirectLiNGAM needs 485 s on this dataset (Table 2); the
+ParaLiNGAM formulation solves it here on CPU in a few seconds, and the same
+code path is what the dry-run lowers for the 256/512-chip meshes.
+
+    PYTHONPATH=src python examples/causal_discovery_ecoli.py [--method dense]
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import direct_lingam, sem
+from repro.core.paralingam import ParaLiNGAMConfig, causal_order, fit
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--method", default="threshold", choices=("dense", "threshold"))
+ap.add_argument("--p", type=int, default=85)
+ap.add_argument("--n", type=int, default=10_000)
+ap.add_argument("--serial-check", action="store_true",
+                help="also run the numpy serial oracle (slow) and compare")
+args = ap.parse_args()
+
+data = sem.generate(sem.SemSpec(p=args.p, n=args.n, density="sparse", seed=7))
+print(f"E.coli-core-sized problem: p={args.p}, n={args.n}")
+
+t0 = time.time()
+result, b_est = fit(
+    data["x"], ParaLiNGAMConfig(method=args.method, chunk=16)
+)
+dt = time.time() - t0
+print(f"ParaLiNGAM ({args.method}): {dt:.2f}s "
+      f"({result.comparisons} comparisons, "
+      f"{100 * result.saving_vs_serial:.1f}% saved vs serial)")
+print("order valid:", sem.is_valid_causal_order(result.order, data["b_true"]))
+print("max |B_est - B_true|:", float(np.abs(b_est - data['b_true']).max()))
+
+if args.serial_check:
+    t0 = time.time()
+    serial = direct_lingam.causal_order(data["x"])
+    print(f"serial DirectLiNGAM: {time.time() - t0:.1f}s; "
+          f"orders match: {serial == result.order}")

@@ -1,0 +1,43 @@
+"""Distributed ParaLiNGAM: the row-block ring find-root on an 8-device host
+mesh (the same shard_map code path the 512-chip dry-run exercises).
+
+    PYTHONPATH=src python examples/distributed_ring.py
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.covariance import cov_matrix, normalize
+from repro.core.paralingam import find_root_dense
+from repro.core.sem import SemSpec, generate
+from repro.dist.ring import ring_find_root_jit
+
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+print("mesh:", dict(zip(mesh.axis_names, mesh.devices.shape)))
+
+data = generate(SemSpec(p=64, n=4096, seed=1))
+xn = normalize(jnp.asarray(data["x"], jnp.float32))
+c = cov_matrix(xn)
+mask = jnp.ones((64,), bool)
+
+root_1, s_1 = find_root_dense(xn, c, mask, block_j=64)
+with jax.set_mesh(mesh):
+    fn = ring_find_root_jit(mesh)
+    root_8, s_8 = fn(xn, c, mask)  # compile
+    t0 = time.time()
+    for _ in range(5):
+        root_8, s_8 = fn(xn, c, mask)
+    jax.block_until_ready(s_8)
+    dt = (time.time() - t0) / 5
+
+print(f"single-device root={int(root_1)}  ring root={int(root_8)}  "
+      f"scores match: {bool(jnp.allclose(s_1, s_8, rtol=2e-4))}")
+print(f"ring find-root: {dt * 1e3:.1f} ms / iteration on 8 host devices")

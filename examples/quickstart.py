@@ -1,0 +1,27 @@
+"""Quickstart: recover a causal graph with ParaLiNGAM in ~10 seconds.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import sem
+from repro.core.paralingam import ParaLiNGAMConfig, fit
+
+# 1. Simulate a LiNGAM system (the paper's Section 5.4 generator).
+spec = sem.SemSpec(p=12, n=5000, density="sparse", seed=42)
+data = sem.generate(spec)
+print(f"generated p={spec.p} variables, n={spec.n} samples")
+
+# 2. Recover the causal order (step 1) and strengths B (step 2).
+result, b_est = fit(data["x"], ParaLiNGAMConfig(method="threshold", chunk=4))
+
+print("causal order:", result.order)
+print("order valid:", sem.is_valid_causal_order(result.order, data["b_true"]))
+print(
+    f"comparisons: {result.comparisons} "
+    f"(serial DirectLiNGAM would do {result.comparisons_serial}; "
+    f"saving {100 * result.saving_vs_serial:.1f}%)"
+)
+err = np.abs(b_est - data["b_true"]).max()
+print(f"max |B_est - B_true| = {err:.3f}")

@@ -1,0 +1,19 @@
+"""Serve a small model with batched requests (prefill + decode engine).
+
+    PYTHONPATH=src python examples/serve_lm.py
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-370m
+"""
+
+import argparse
+import sys
+
+from repro.launch import serve as serve_driver
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="granite-3-2b")
+args, rest = ap.parse_known_args()
+
+sys.exit(serve_driver.main(
+    ["--arch", args.arch, "--preset", "smoke", "--batch", "4",
+     "--prompt-len", "32", "--new-tokens", "16"] + rest
+))

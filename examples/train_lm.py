@@ -1,0 +1,28 @@
+"""Train an LM from the assigned-architecture zoo end to end.
+
+Default: a ~100M-param granite-family model for 300 steps with
+checkpoint/resume enabled (kill it mid-run and re-run: it resumes).
+
+    PYTHONPATH=src python examples/train_lm.py            # ~100M, 300 steps
+    PYTHONPATH=src python examples/train_lm.py --quick    # tiny, 60 steps
+"""
+
+import argparse
+import sys
+
+from repro.launch import train as train_driver
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--quick", action="store_true")
+ap.add_argument("--arch", default="granite-3-2b")
+ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+args, rest = ap.parse_known_args()
+
+if args.quick:
+    argv = ["--arch", args.arch, "--preset", "smoke", "--steps", "60",
+            "--batch", "8", "--seq", "64", "--ckpt-dir", args.ckpt_dir]
+else:
+    argv = ["--arch", args.arch, "--preset", "100m", "--steps", "300",
+            "--batch", "4", "--seq", "256", "--ckpt-dir", args.ckpt_dir]
+
+sys.exit(train_driver.main(argv + rest))

@@ -1,0 +1,13 @@
+"""repro -- ParaLiNGAM on TPU: causal structure learning + LM substrate.
+
+A production-grade JAX framework reproducing and extending
+
+    Shahbazinia, Salehkaleybar, Hashemi,
+    \"ParaLiNGAM: Parallel Causal Structure Learning for Linear
+     non-Gaussian Acyclic Models\" (2021).
+
+Subpackages: core (the paper), kernels (Pallas + oracles), models,
+configs, data, train, serve, dist, launch, utils.
+"""
+
+__version__ = "1.0.0"

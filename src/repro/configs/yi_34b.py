@@ -1,0 +1,22 @@
+"""Yi-34B [arXiv:2403.04652; hf] — llama-arch dense GQA."""
+
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="yi-34b",
+    family="dense",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=20480,
+    vocab=64000,
+    act="swiglu",
+    rope_theta=5_000_000.0,
+)
+
+SMOKE = CONFIG.with_overrides(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab=512, remat=False,
+)

@@ -1,0 +1,12 @@
+"""The paper's contribution: DirectLiNGAM + ParaLiNGAM causal discovery."""
+
+from repro.core import direct_lingam, entropy, pairwise, pruning, sem
+from repro.core.covariance import cov_matrix, normalize, update_cov, update_data
+from repro.core.paralingam import (
+    ParaLiNGAMConfig,
+    ParaLiNGAMResult,
+    causal_order,
+    find_root_dense,
+    find_root_threshold,
+    fit,
+)

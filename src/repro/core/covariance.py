@@ -1,0 +1,93 @@
+"""Normalization, covariance, and the paper's Eq. (10)/(11) rank-1 updates.
+
+Math simplification (paper Section 3.4): with normalized rows,
+
+  Eq. (10):  var(r_i^(j))            = 1 - cov(x_i, x_j)^2
+  Eq. (11):  cov(r_i^root, r_j^root) = cov(x_i, x_j) - b_i * b_j
+             with b_k = cov(x_k, x_root);
+             renormalized:  C'[i,j] = (C[i,j] - b_i b_j) / (s_i s_j),
+             s_k = sqrt(1 - b_k^2).
+
+These let every iteration after the first run off the covariance matrix alone
+(UpdateCovMat, Algorithm 8) plus a rank-1 data refresh (UpdateData,
+Algorithm 7) — no per-pair sample regressions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Guard for 1 - cov^2 when |cov| -> 1 (numerically collinear variables).
+VAR_EPS = 1e-12
+# Floor used by the *iteration updates*: caps the per-iteration amplification
+# of numerically collinear residuals at 1/sqrt(COLLINEAR_FLOOR) = 100x and is
+# followed by an explicit renormalization (update_data), so drift cannot
+# compound into overflow across the p iterations.
+COLLINEAR_FLOOR = 1e-4
+
+
+def normalize(x, axis: int = -1, ddof: int = 1):
+    """Standardize samples along ``axis`` (zero mean, unit adjusted variance)."""
+    mean = jnp.mean(x, axis=axis, keepdims=True)
+    centered = x - mean
+    n = x.shape[axis]
+    var = jnp.sum(jnp.square(centered), axis=axis, keepdims=True) / max(n - ddof, 1)
+    return centered / jnp.sqrt(jnp.maximum(var, VAR_EPS))
+
+
+def cov_matrix(xn, ddof: int = 1):
+    """Covariance matrix of row-variables ``xn: (p, n)`` (normalized rows ->
+    correlation matrix with unit diagonal)."""
+    n = xn.shape[-1]
+    return (xn @ xn.T) / max(n - ddof, 1)
+
+
+def residual_std(cov_ij):
+    """sqrt(var(r_i^(j))) = sqrt(1 - cov^2) per paper Eq. (10)."""
+    return jnp.sqrt(jnp.maximum(1.0 - jnp.square(cov_ij), VAR_EPS))
+
+
+def update_data(x, cov, root, mask):
+    """UpdateData (Algorithm 7): regress the root out of every remaining row
+    and renormalize via Eq. (10). Fully vectorized rank-1 update.
+
+    ``x: (p, n)`` normalized rows, ``cov: (p, p)``, ``root`` scalar index,
+    ``mask: (p,) bool`` rows still in U (including the root before removal).
+    Rows not in U (and the root row itself) are left untouched.
+
+    Eq. (10) renormalization is exact in infinite precision; in f32 the
+    residual variance drifts from 1 over many iterations (and explodes for
+    near-collinear pairs), so the Eq. (10) scale is floored and followed by
+    an explicit sample renormalization — a mathematical no-op that keeps the
+    invariant var(row) = 1 the rest of the algorithm relies on.
+    """
+    p, n = x.shape
+    idx = jnp.arange(p)
+    b = cov[:, root]
+    live = mask & (idx != root)
+    b = jnp.where(live, jnp.clip(b, -1.0, 1.0), 0.0)
+    s = jnp.sqrt(jnp.maximum(1.0 - jnp.square(b), COLLINEAR_FLOOR))
+    x_root = x[root][None, :]
+    out = (x - b[:, None] * x_root) / s[:, None]
+    # drift correction (exact renormalization of live rows)
+    var = jnp.sum(jnp.square(out), axis=1, keepdims=True) / max(n - 1, 1)
+    scale = jnp.where(live[:, None], jax.lax.rsqrt(jnp.maximum(var, VAR_EPS)), 1.0)
+    return out * scale
+
+
+def update_cov(cov, root, mask):
+    """UpdateCovMat (Algorithm 8): Eq. (11) rank-1 covariance update with
+    Eq. (10) renormalization. Entries involving removed rows are garbage by
+    contract and masked by callers."""
+    p = cov.shape[0]
+    idx = jnp.arange(p)
+    live = mask & (idx != root)
+    b = jnp.where(live, jnp.clip(cov[:, root], -1.0, 1.0), 0.0)
+    s = jnp.sqrt(jnp.maximum(1.0 - jnp.square(b), COLLINEAR_FLOOR))
+    new = (cov - jnp.outer(b, b)) / jnp.outer(s, s)
+    # Correlations cannot exceed 1; clipping prevents drift compounding.
+    new = jnp.clip(new, -1.0, 1.0)
+    # Keep the diagonal exactly 1 for live rows (it is mathematically 1).
+    eye = jnp.eye(p, dtype=bool)
+    return jnp.where(eye, 1.0, new)

@@ -1,0 +1,109 @@
+"""ICA-LiNGAM (Shimizu et al. 2006) — the paper's other baseline.
+
+FastICA (symmetric, log-cosh contrast) in pure JAX, followed by the LiNGAM
+post-processing: row-permute the unmixing matrix to a dominant diagonal,
+rescale, B = I - W, and extract a causal order by greedily permuting B
+towards strict lower-triangularity.
+
+DirectLiNGAM (and thus ParaLiNGAM) exists precisely because this estimator
+can get stuck in local optima and is scale-sensitive (paper Section 2.3);
+we include it for completeness of the paper's baseline set.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _whiten(x):
+    """x: (p, n) centered -> (z, whitener) with cov(z) = I."""
+    n = x.shape[1]
+    cov = (x @ x.T) / (n - 1)
+    vals, vecs = jnp.linalg.eigh(cov)
+    vals = jnp.maximum(vals, 1e-10)
+    k = (vecs * jax.lax.rsqrt(vals)[None, :]) @ vecs.T
+    return k @ x, k
+
+
+def _sym_decorrelate(w):
+    vals, vecs = jnp.linalg.eigh(w @ w.T)
+    vals = jnp.maximum(vals, 1e-12)
+    inv_sqrt = (vecs * jax.lax.rsqrt(vals)[None, :]) @ vecs.T
+    return inv_sqrt @ w
+
+
+def fast_ica(x, key=None, max_iter: int = 500, tol: float = 1e-6):
+    """x: (p, n) raw. Returns the unmixing matrix W with S = W X."""
+    x = jnp.asarray(x, jnp.float32)
+    p, n = x.shape
+    xc = x - x.mean(axis=1, keepdims=True)
+    z, k = _whiten(xc)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    w0 = _sym_decorrelate(jax.random.normal(key, (p, p), jnp.float32))
+
+    def body(state):
+        w, _, it = state
+        wz = w @ z  # (p, n)
+        g = jnp.tanh(wz)
+        g_prime = 1.0 - jnp.square(g)
+        w_new = (g @ z.T) / n - jnp.mean(g_prime, axis=1, keepdims=True) * w
+        w_new = _sym_decorrelate(w_new)
+        delta = jnp.max(jnp.abs(jnp.abs(jnp.sum(w_new * w, axis=1)) - 1.0))
+        return w_new, delta, it + 1
+
+    def cond(state):
+        _, delta, it = state
+        return (delta > tol) & (it < max_iter)
+
+    w, _, _ = jax.lax.while_loop(cond, body, (w0, jnp.asarray(1.0), 0))
+    return w @ k  # unmixing in the original (centered) coordinates
+
+
+def _permute_dominant_diagonal(w: np.ndarray) -> np.ndarray:
+    """Greedy assignment maximizing |diag| (Hungarian-lite)."""
+    p = w.shape[0]
+    cost = 1.0 / (np.abs(w) + 1e-12)
+    perm = np.full(p, -1)
+    used_rows, used_cols = set(), set()
+    order = np.dstack(np.unravel_index(np.argsort(cost, axis=None), cost.shape))[0]
+    for r, c in order:
+        if r not in used_rows and c not in used_cols:
+            perm[c] = r
+            used_rows.add(r)
+            used_cols.add(c)
+    return w[perm]
+
+
+def _causal_order_from_b(b: np.ndarray) -> list[int]:
+    """Greedy: repeatedly take the variable with least incoming mass from
+    the unresolved set (approximate strict-lower-triangular permutation)."""
+    p = b.shape[0]
+    remaining = list(range(p))
+    order = []
+    babs = np.abs(b)
+    while remaining:
+        sub = babs[np.ix_(remaining, remaining)]
+        incoming = sub.sum(axis=1)
+        k = int(np.argmin(incoming))
+        order.append(remaining.pop(k))
+    return order
+
+
+def ica_lingam(x, key=None, prune_below: float = 0.05):
+    """Full ICA-LiNGAM: returns (causal_order, B_est)."""
+    w = np.asarray(fast_ica(x, key))
+    w = _permute_dominant_diagonal(w)
+    w = w / np.diag(w)[:, None]
+    b = np.eye(w.shape[0]) - w
+    order = _causal_order_from_b(b)
+    # zero the upper triangle implied by the order (acyclicity projection)
+    pos = {v: i for i, v in enumerate(order)}
+    for i in range(b.shape[0]):
+        for j in range(b.shape[0]):
+            if pos[j] >= pos[i]:
+                b[i, j] = 0.0
+    if prune_below > 0:
+        b[np.abs(b) < prune_below] = 0.0
+    return order, b

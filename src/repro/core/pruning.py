@@ -1,0 +1,55 @@
+"""DirectLiNGAM step 2: estimate causal strengths B given a causal order.
+
+The paper notes step 2 is "fairly fast since we are only performing linear
+regressions"; we implement it in closed form. With variables arranged in
+causal order, X = B X + N with B strictly lower triangular and Cov(N) = Omega
+diagonal, so
+
+    Sigma = (I - B)^{-1} Omega (I - B)^{-T}
+          = A Omega A^T,             A := (I - B)^{-1}  (unit lower tri.)
+
+and the Cholesky factor of Sigma is L = A Omega^{1/2}. Hence
+
+    A = L diag(L)^{-1}      and      B = I - A^{-1}
+
+— one Cholesky + one triangular solve, O(p^3) total, instead of p separate
+regressions (O(p^4)). An optional hard threshold prunes spurious small edges.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def estimate_adjacency(x: np.ndarray, order: list[int], prune_below: float = 0.0) -> np.ndarray:
+    """Estimate B (p, p) from raw samples ``x: (p, n)`` and a causal order."""
+    x = np.asarray(x, np.float64)
+    p = x.shape[0]
+    order = list(order)
+    xo = x[order]
+    xo = xo - xo.mean(axis=1, keepdims=True)
+    sigma = (xo @ xo.T) / (x.shape[1] - 1)
+    # Ridge jitter for numerically singular sample covariances.
+    jitter = 1e-10 * np.trace(sigma) / p
+    chol = np.linalg.cholesky(sigma + jitter * np.eye(p))
+    a = chol / np.diag(chol)[None, :]  # unit lower triangular
+    a_inv = np.linalg.solve(a, np.eye(p))
+    b_ord = np.eye(p) - a_inv
+    if prune_below > 0.0:
+        b_ord[np.abs(b_ord) < prune_below] = 0.0
+    b = np.zeros_like(b_ord)
+    b[np.ix_(order, order)] = b_ord
+    return b
+
+
+def regression_residual_variances(x: np.ndarray, order: list[int]) -> np.ndarray:
+    """Diagonal of Omega (exogenous noise variances) in original variable ids."""
+    x = np.asarray(x, np.float64)
+    p = x.shape[0]
+    xo = x[order] - x[order].mean(axis=1, keepdims=True)
+    sigma = (xo @ xo.T) / (x.shape[1] - 1)
+    chol = np.linalg.cholesky(sigma + 1e-10 * np.trace(sigma) / p * np.eye(p))
+    omega_ord = np.diag(chol) ** 2
+    omega = np.zeros(p)
+    omega[list(order)] = omega_ord
+    return omega

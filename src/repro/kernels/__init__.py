@@ -1,0 +1,2 @@
+from repro.kernels import ops, ref
+from repro.kernels.ssd_decode import ssd_decode

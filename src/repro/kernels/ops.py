@@ -1,0 +1,45 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in ``interpret=True`` mode for
+correctness validation; on TPU they compile natively. The dry-run lowering
+path uses the pure-jnp oracles (``repro.core.pairwise``) so the compiled HLO
+reflects the XLA-native formulation on the 512-device mesh — kernel
+micro-performance is reasoned about separately in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import covupdate as _covupdate
+from repro.kernels import pairwise_score as _pairwise
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def residual_entropy_matrix(xn, c, *, block_i: int = 8, block_j: int = 8,
+                            block_n: int = 512):
+    """HR matrix via the Pallas pairwise-score kernel."""
+    return _pairwise.pairwise_score(
+        xn, c,
+        block_i=block_i, block_j=block_j, block_n=block_n,
+        interpret=not _on_tpu(),
+    )
+
+
+def update_data(x, x_root, b, *, block_i: int = 8, block_n: int = 512):
+    """Fused Algorithm 7 rank-1 data refresh via the covupdate kernel."""
+    return _covupdate.update_data(
+        x, x_root, b, block_i=block_i, block_n=block_n,
+        interpret=not _on_tpu(),
+    )
+
+
+def update_cov(c, b, *, block_i: int = 8, block_j: int = 128):
+    """Fused Algorithm 8 covariance refresh via the covupdate kernel."""
+    return _covupdate.update_cov(
+        c, b, block_i=block_i, block_j=block_j,
+        interpret=not _on_tpu(),
+    )

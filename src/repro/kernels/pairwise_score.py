@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: fused pairwise residual-entropy matrix.
+
+The ParaLiNGAM hot-spot. For every ordered pair (i, j) it computes
+
+    HR[i, j] = H_hat( (x_i - c_ij * x_j) / sqrt(1 - c_ij^2) )
+
+without materializing the (p, p, n) residual tensor in HBM: the grid is
+(p/BI, p/BJ, n/BN) with the sample dimension innermost, so each (BI, BJ) tile
+streams sample blocks through VMEM and accumulates the two entropy moments
+(E[log cosh u], E[u exp(-u^2/2)]) in VMEM scratch, applying the nonlinear
+entropy formula once on the last sample block.
+
+TPU considerations:
+  * BN is a multiple of 128 (VPU lane width); BI/BJ multiples of 8 (sublanes).
+  * The workload is transcendental-heavy (log1p/exp) -> VPU-bound, no MXU
+    use; arithmetic intensity grows with BI*BJ/(BI+BJ), so larger pair tiles
+    directly buy HBM-bandwidth headroom (block-shape sweep in
+    benchmarks/bench_kernels.py).
+  * Zero-padding of both p (to BI/BJ) and n (to BN) is exact: padded samples
+    contribute log_cosh(0) = 0 and 0*exp(0) = 0 to the moment sums, and the
+    wrapper divides by the *true* n.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.entropy import BETA, H_GAUSS, K1, K2
+
+VAR_EPS = 1e-12
+
+
+def _pairwise_kernel(n_true: int, nk: int, xi_ref, xj_ref, c_ref, hr_ref,
+                     elc_acc, exe_acc):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        elc_acc[...] = jnp.zeros_like(elc_acc)
+        exe_acc[...] = jnp.zeros_like(exe_acc)
+
+    xi = xi_ref[...]  # (BI, BN)
+    xj = xj_ref[...]  # (BJ, BN)
+    cij = c_ref[...]  # (BI, BJ)
+    inv = jax.lax.rsqrt(jnp.maximum(1.0 - cij * cij, VAR_EPS))
+    # u: (BI, BJ, BN)
+    u = (xi[:, None, :] - cij[:, :, None] * xj[None, :, :]) * inv[:, :, None]
+    a = jnp.abs(u)
+    log_cosh = a + jnp.log1p(jnp.exp(-2.0 * a)) - math.log(2.0)
+    u_exp = u * jnp.exp(-0.5 * u * u)
+    elc_acc[...] += jnp.sum(log_cosh, axis=-1)
+    exe_acc[...] += jnp.sum(u_exp, axis=-1)
+
+    @pl.when(k == nk - 1)
+    def _finalize():
+        m1 = elc_acc[...] / n_true
+        m2 = exe_acc[...] / n_true
+        hr_ref[...] = (
+            H_GAUSS - K1 * jnp.square(m1 - BETA) - K2 * jnp.square(m2)
+        ).astype(hr_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_i", "block_j", "block_n", "interpret")
+)
+def pairwise_score(
+    xn,
+    c,
+    *,
+    block_i: int = 8,
+    block_j: int = 8,
+    block_n: int = 512,
+    interpret: bool = False,
+):
+    """HR matrix via the Pallas kernel. ``xn: (p, n)`` normalized rows,
+    ``c: (p, p)`` correlations. Returns (p, p) float32."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    p, n = xn.shape
+    pad_p = (-p) % block_i
+    pad_pj = (-p) % block_j
+    pad_n = (-n) % block_n
+    p_i = p + pad_p
+    p_j = p + pad_pj
+    if p_i != p_j:  # keep output square: pad to the common size
+        p_i = p_j = max(p_i, p_j)
+    n_pad = n + pad_n
+    xi = jnp.pad(xn.astype(jnp.float32), ((0, p_i - p), (0, n_pad - n)))
+    cc = jnp.pad(c.astype(jnp.float32), ((0, p_i - p), (0, p_j - p)))
+
+    nk = n_pad // block_n
+    grid = (p_i // block_i, p_j // block_j, nk)
+
+    hr = pl.pallas_call(
+        functools.partial(_pairwise_kernel, n, nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_i, block_n), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_j, block_n), lambda i, j, k: (j, k)),
+            pl.BlockSpec((block_i, block_j), lambda i, j, k: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_i, block_j), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((p_i, p_j), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_i, block_j), jnp.float32),
+            pltpu.VMEM((block_i, block_j), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xi, xi, cc)
+    return hr[:p, :p]

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Kernels are validated against these references (shape/dtype sweeps with
+``assert_allclose`` in tests/test_kernels.py). The pairwise-score oracle is
+the same math as ``repro.core.pairwise`` but written as one self-contained
+dense einsum-free expression so the kernel comparison has no shared tiling
+logic with the implementation under test.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.covariance import VAR_EPS
+from repro.core.entropy import entropy_from_moments, log_cosh, u_exp_moment
+
+
+def residual_entropy_matrix_ref(xn, c):
+    """HR[i, j] = H_hat((x_i - c_ij x_j) / sqrt(1 - c_ij^2)); fully
+    materialized (p, p, n) — small inputs only."""
+    denom = jnp.sqrt(jnp.maximum(1.0 - jnp.square(c), VAR_EPS))
+    u = (xn[:, None, :] - c[:, :, None] * xn[None, :, :]) / denom[:, :, None]
+    m1 = jnp.mean(log_cosh(u), axis=-1)
+    m2 = jnp.mean(u_exp_moment(u), axis=-1)
+    return entropy_from_moments(m1, m2)
+
+
+def update_data_cov_ref(x, c, b, x_root):
+    """Fused Algorithm 7 + 8 reference.
+
+    x: (p, n) normalized rows; c: (p, p); b: (p,) = c[:, root] with the root
+    (and dead rows) zeroed by the caller; x_root: (n,) the root's row.
+    Returns (x_new, c_new) — diagonal of c_new restored to 1.
+    """
+    s = jnp.sqrt(jnp.maximum(1.0 - jnp.square(b), VAR_EPS))
+    x_new = (x - b[:, None] * x_root[None, :]) / s[:, None]
+    c_new = (c - jnp.outer(b, b)) / jnp.outer(s, s)
+    eye = jnp.eye(c.shape[0], dtype=bool)
+    c_new = jnp.where(eye, 1.0, c_new)
+    return x_new, c_new
+
+
+# SSD decode-step oracle lives beside its kernel (same math as
+# repro.models.ssm.mamba2_decode's inner update); re-exported here so every
+# kernel's reference is reachable from ref.py per the package convention.
+from repro.kernels.ssd_decode import ssd_decode_ref  # noqa: E402,F401

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: fused Mamba2/SSD decode-step state update.
+
+The long_500k decode hot loop (mamba2-370m, zamba2-2.7b): per token and per
+head the SSM state (P, N) is decayed, rank-1 updated, and contracted with C:
+
+    state' = state * exp(dt * A) + (dt * x) outer B
+    y      = state' @ C + D * x
+
+Unfused, XLA reads/writes the (B, H, P, N) state several times (decay,
+update, contraction); this kernel streams each (head-block, P, N) tile
+through VMEM exactly once — read state, write state', emit y — which is the
+whole game for a decode step that is pure HBM bandwidth.
+
+Grid: (B, H/BH). Blocks: state (1, BH, P, N); x/dt/B/C tiles per (batch,
+head-block). All accumulation in f32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_decode_kernel(state_ref, x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref,
+                       new_state_ref, y_ref):
+    state = state_ref[...]  # (1, BH, P, N) f32
+    x = x_ref[...]          # (1, BH, P)
+    dt = dt_ref[...]        # (1, BH)
+    b = b_ref[...]          # (1, N)
+    c = c_ref[...]          # (1, N)
+    a = a_ref[...]          # (1, BH)
+    d = d_ref[...]          # (1, BH)
+
+    decay = jnp.exp(dt * a)[..., None, None]          # (1, BH, 1, 1)
+    upd = (dt[..., None] * x)[..., None] * b[:, None, None, :]  # (1,BH,P,N)
+    new_state = state * decay + upd
+    new_state_ref[...] = new_state
+    y = jnp.sum(new_state * c[:, None, None, :], axis=-1)  # (1, BH, P)
+    y_ref[...] = y + d[..., None] * x
+
+
+@functools.partial(jax.jit, static_argnames=("block_h", "interpret"))
+def ssd_decode(state, x, dt, b, c, a, d, *, block_h: int = 8,
+               interpret: bool = False):
+    """Fused decode step.
+
+    state: (B, H, P, N) f32;  x: (B, H, P);  dt: (B, H);  b, c: (B, N);
+    a, d: (H,).  Returns (y (B, H, P), new_state).
+    """
+    bsz, h, p, n = state.shape
+    assert h % block_h == 0, "head count must divide block_h"
+    grid = (bsz, h // block_h)
+
+    a2 = jnp.broadcast_to(a[None, :], (bsz, h)).astype(jnp.float32)
+    d2 = jnp.broadcast_to(d[None, :], (bsz, h)).astype(jnp.float32)
+
+    new_state, y = pl.pallas_call(
+        _ssd_decode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_h, p, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, block_h, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_h), lambda i, j: (i, j)),
+            pl.BlockSpec((1, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_h), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_h), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_h, p, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, block_h, p), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, h, p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        state.astype(jnp.float32),
+        x.astype(jnp.float32),
+        dt.astype(jnp.float32),
+        b.astype(jnp.float32),
+        c.astype(jnp.float32),
+        a2,
+        d2,
+    )
+    return y, new_state
+
+
+def ssd_decode_ref(state, x, dt, b, c, a, d):
+    """Pure-jnp oracle (mirrors repro.models.ssm.mamba2_decode's core)."""
+    state = state.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    decay = jnp.exp(dt * a[None, :])
+    upd = jnp.einsum("bhp,bn->bhpn", x.astype(jnp.float32) * dt[..., None],
+                     b.astype(jnp.float32))
+    new_state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, c.astype(jnp.float32))
+    y = y + x.astype(jnp.float32) * d[None, :, None]
+    return y, new_state

@@ -1,0 +1,289 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost/collective analyses.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the dry-run needs 512 placeholder host devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k \
+      --mesh single --out results/
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out results/
+  ... --cost-mode   # 1-/2-group unrolled lowering for roofline cost terms
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.shapes import SHAPES, applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import make_cell
+from repro.utils.hlo import parse_collectives, summarize_collectives
+
+
+def _mem_dict(mem) -> dict:
+    return {
+        k: getattr(mem, k)
+        for k in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "alias_size_in_bytes",
+            "generated_code_size_in_bytes",
+        )
+    }
+
+
+def compile_cell(cfg, shape, mesh, verbose: bool = True,
+                 accum_steps: int = 4) -> dict:
+    t0 = time.time()
+    cell = make_cell(cfg, shape, mesh, accum_steps=accum_steps)
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(
+            cell.fn,
+            in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+            donate_argnums=cell.donate_argnums,
+        )
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    colls = parse_collectives(compiled.as_text())
+    rec = {
+        "cell": cell.name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": _mem_dict(mem),
+        "flops_per_device": cost.get("flops", 0.0),
+        "bytes_per_device": cost.get("bytes accessed", 0.0),
+        "collectives": summarize_collectives(colls),
+        "n_collective_ops": len(colls),
+    }
+    if verbose:
+        mm = rec["memory"]
+        total_mem = mm["argument_size_in_bytes"] + mm["temp_size_in_bytes"]
+        print(
+            f"[ok] {cell.name:42s} mesh={rec['mesh']:8s} "
+            f"compile={t_compile:6.1f}s mem/dev={total_mem/2**30:7.2f}GiB "
+            f"flops/dev={rec['flops_per_device']:.3e} "
+            f"coll={rec['collectives']['total_operand_bytes']/2**20:9.1f}MiB"
+        )
+    return rec
+
+
+def cost_mode_cell(cfg, shape, mesh, groups: tuple[int, int] = (1, 2)) -> dict:
+    """Unrolled 1-/2-group lowerings -> exact per-group cost delta."""
+    recs = {}
+    full_groups = cfg.n_groups
+    # accum_steps=1: the microbatch loop is also a scan whose body XLA counts
+    # once — cost terms must reflect the whole global batch.
+    if cfg.enc_dec or full_groups <= 2:
+        c = compile_cell(cfg.with_overrides(scan_layers=False), shape, mesh,
+                         verbose=False, accum_steps=1)
+        c["cost_mode"] = "full_unroll"
+        return c
+    for g in groups:
+        sub = cfg.with_overrides(n_groups_override=g, scan_layers=False)
+        recs[g] = compile_cell(sub, shape, mesh, verbose=False, accum_steps=1)
+    g1, g2 = groups
+    r1, r2 = recs[g1], recs[g2]
+    span = g2 - g1
+
+    def extrap(a, b):
+        return a + (full_groups - g1) * (b - a) / span
+
+    out = {
+        "cell": f"{cfg.name}/{shape.name}",
+        "mesh": r1["mesh"],
+        "status": "ok",
+        "cost_mode": f"delta_{g1}_{g2}",
+        "flops_per_device": extrap(r1["flops_per_device"], r2["flops_per_device"]),
+        "bytes_per_device": extrap(r1["bytes_per_device"], r2["bytes_per_device"]),
+        "collectives": {
+            "total_operand_bytes": extrap(
+                r1["collectives"]["total_operand_bytes"],
+                r2["collectives"]["total_operand_bytes"],
+            ),
+            "total_wire_bytes": extrap(
+                r1["collectives"]["total_wire_bytes"],
+                r2["collectives"]["total_wire_bytes"],
+            ),
+        },
+        "base_records": {str(g): recs[g] for g in groups},
+    }
+    print(
+        f"[cost] {out['cell']:40s} flops/dev={out['flops_per_device']:.3e} "
+        f"coll={out['collectives']['total_operand_bytes']/2**20:9.1f}MiB"
+    )
+    return out
+
+
+def lingam_cells(mesh) -> list[dict]:
+    """Dry-run the paper's own workload: dense find-root (baseline pjit),
+    the ppermute-ring find-root (optimized), and the iteration update.
+    Unrolled variants so cost_analysis reflects the whole computation."""
+    from repro.core.pairwise import dense_scores
+    from repro.core.paralingam import _update_iteration
+    from repro.dist.ring import ring_find_root
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    out = []
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    for name, lc in configs.LINGAM_CONFIGS.items():
+        p = 1 << (lc.p - 1).bit_length()  # bucketed size
+        n = (lc.n + 15) // 16 * 16
+        xn = jax.ShapeDtypeStruct((p, n), jnp.float32)
+        c = jax.ShapeDtypeStruct((p, p), jnp.float32)
+        mask = jax.ShapeDtypeStruct((p,), jnp.bool_)
+        x_sh = NamedSharding(mesh, P(batch_axes, "model"))
+        c_sh = NamedSharding(mesh, P(batch_axes, None))
+        m_sh = NamedSharding(mesh, P(None))
+        for fn_name, fn, args, in_sh in (
+            (
+                "find_root",
+                lambda xn, c, mask: dense_scores(
+                    xn, c, mask, block_j=min(128, p), unroll=True
+                ),
+                (xn, c, mask),
+                (x_sh, c_sh, m_sh),
+            ),
+            (
+                "find_root_ring",
+                lambda xn, c, mask: ring_find_root(
+                    xn, c, mask, mesh, row_axes=batch_axes, unroll=True
+                ),
+                (xn, c, mask),
+                (x_sh, c_sh, m_sh),
+            ),
+            (
+                "update",
+                lambda xn, c, mask: _update_iteration(xn, c, jnp.int32(0), mask),
+                (xn, c, mask),
+                (x_sh, c_sh, m_sh),
+            ),
+        ):
+            t0 = time.time()
+            try:
+                with jax.set_mesh(mesh):
+                    lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
+                    compiled = lowered.compile()
+                cost = compiled.cost_analysis()
+                colls = parse_collectives(compiled.as_text())
+                rec = {
+                    "cell": f"{name}/{fn_name}",
+                    "mesh": "x".join(map(str, mesh.devices.shape)),
+                    "status": "ok",
+                    "compile_s": round(time.time() - t0, 2),
+                    "memory": _mem_dict(compiled.memory_analysis()),
+                    "flops_per_device": cost.get("flops", 0.0),
+                    "bytes_per_device": cost.get("bytes accessed", 0.0),
+                    "collectives": summarize_collectives(colls),
+                    "p_bucket": p,
+                    "n_pad": n,
+                }
+                print(
+                    f"[ok] {rec['cell']:42s} mesh={rec['mesh']:8s} "
+                    f"compile={rec['compile_s']:6.1f}s "
+                    f"flops/dev={rec['flops_per_device']:.3e}"
+                )
+            except Exception as e:  # noqa: BLE001
+                rec = {
+                    "cell": f"{name}/{fn_name}", "status": "fail",
+                    "error": f"{type(e).__name__}: {e}",
+                }
+                print(f"[FAIL] {rec['cell']}: {rec['error']}")
+            out.append(rec)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--shape", default="")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--lingam", action="store_true")
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--cost-mode", action="store_true")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi", make_production_mesh(multi_pod=True)))
+
+    arch_names = configs.ARCH_NAMES if (args.all or not args.arch) else tuple(args.arch.split(","))
+    shape_names = tuple(SHAPES) if (args.all or not args.shape) else tuple(args.shape.split(","))
+
+    results = []
+    for mesh_name, mesh in meshes:
+        if args.lingam:
+            for rec in lingam_cells(mesh):
+                rec["mesh_kind"] = mesh_name
+                results.append(rec)
+            continue
+        for arch in arch_names:
+            cfg = configs.get(arch)
+            for shape_name in shape_names:
+                shape = SHAPES[shape_name]
+                ok, reason = applicable(cfg, shape)
+                if not ok:
+                    results.append(
+                        {
+                            "cell": f"{cfg.name}/{shape.name}",
+                            "mesh_kind": mesh_name,
+                            "status": "skipped",
+                            "reason": reason,
+                        }
+                    )
+                    print(f"[skip] {cfg.name}/{shape.name}: documented skip")
+                    continue
+                try:
+                    rec = (
+                        cost_mode_cell(cfg, shape, mesh)
+                        if args.cost_mode
+                        else compile_cell(cfg, shape, mesh)
+                    )
+                except Exception as e:  # noqa: BLE001
+                    rec = {
+                        "cell": f"{cfg.name}/{shape.name}",
+                        "status": "fail",
+                        "error": f"{type(e).__name__}: {e}",
+                        "trace": traceback.format_exc()[-2000:],
+                    }
+                    print(f"[FAIL] {cfg.name}/{shape.name}: {rec['error']}")
+                rec["mesh_kind"] = mesh_name
+                results.append(rec)
+
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        suffix = "cost" if args.cost_mode else ("lingam" if args.lingam else "dryrun")
+        tag = f"{args.arch or 'all'}_{args.shape or 'all'}_{args.mesh}_{suffix}".replace(
+            ",", "-"
+        ).replace("/", "-")
+        path = os.path.join(args.out, f"{tag}.json")
+        with open(path, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {path}")
+    n_fail = sum(1 for r in results if r["status"] == "fail")
+    print(f"== {len(results)} cells, {n_fail} failures ==")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

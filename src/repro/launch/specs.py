@@ -1,0 +1,198 @@
+"""Cell builders: (arch x shape x mesh) -> (step_fn, abstract args, shardings).
+
+``input_specs`` provides ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation. Used by the dry-run
+(lower + compile only) and by the real drivers (which allocate).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeSpec
+from repro.dist.sharding import make_rules
+from repro.models import lm
+from repro.models.config import ArchConfig
+from repro.train.optimizer import OptimizerConfig, opt_state_specs
+from repro.train.trainer import make_train_step
+
+
+@dataclass
+class Cell:
+    name: str
+    fn: Callable
+    args: tuple  # pytrees of ShapeDtypeStruct
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+
+def _batch_spec(mesh, b: int, *rest) -> P:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = int(np.prod([sizes[a] for a in axes])) if axes else 1
+    lead = axes if (axes and b % total == 0) else None
+    return P(lead, *rest)
+
+
+def _named(mesh, tree):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        tree,
+        is_leaf=lambda v: isinstance(v, P),
+    )
+
+
+def param_shapes(cfg: ArchConfig, dtype) -> Any:
+    return jax.eval_shape(
+        functools.partial(lm.init_params, cfg=cfg, dtype=dtype),
+        jax.random.PRNGKey(0),
+    )
+
+
+def make_cell(cfg: ArchConfig, shape: ShapeSpec, mesh,
+              opt_cfg: OptimizerConfig | None = None,
+              accum_steps: int = 4) -> Cell:
+    import os
+    from dataclasses import replace as dc_replace
+
+    rules = make_rules(cfg, mesh)
+    b, s = shape.global_batch, shape.seq_len
+    if b % max(rules.batch_shards, 1) != 0:
+        # e.g. long_500k's global_batch=1: batch cannot shard — replicate it
+        # everywhere (model-axis sharding still applies).
+        rules = make_rules(cfg, mesh, batch_axes=())
+    # Beyond-paper sharding (EXPERIMENTS.md §Perf): context-parallel residual
+    # stream + sequence-sharded attention for train/prefill of attention
+    # archs. Gated by REPRO_OPT so the paper-faithful baseline stays
+    # reproducible (REPRO_OPT="" or unset = baseline).
+    if (
+        "cp_seq" in os.environ.get("REPRO_OPT", "")
+        and shape.kind in ("train", "prefill")
+        and cfg.family not in ("ssm", "hybrid")
+        and s % max(rules.model_size, 1) == 0
+    ):
+        rules = dc_replace(rules, context_parallel=True, shard_heads=False)
+    if (
+        "kv_int8" in os.environ.get("REPRO_OPT", "")
+        and shape.kind == "decode"
+        and not cfg.mla
+        and cfg.family not in ("ssm",)
+    ):
+        cfg = cfg.with_overrides(kv_quant="int8")
+    pspec_tree = lm.param_specs(cfg)
+
+    if shape.kind == "train":
+        p_shapes = param_shapes(cfg, jnp.float32)  # fp32 master weights
+        # FSDP: training params (and hence grads/moments) are additionally
+        # sharded over the data axes — required for the ~34B archs whose fp32
+        # training state exceeds one chip even at TP=16 (MaxText-style
+        # default; XLA inserts the per-layer all-gather / reduce-scatter).
+        from dataclasses import replace as dc_replace
+
+        from repro.train.optimizer import zero1_specs
+
+        pspec_tree = zero1_specs(p_shapes, pspec_tree, mesh)
+        axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        rules = dc_replace(
+            rules,
+            fsdp_axes=tuple(
+                a for a in ("pod", "data") if axis_sizes.get(a, 1) > 1
+            ),
+        )
+        opt_shapes = {
+            "m": p_shapes, "v": p_shapes,
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        opt_specs = opt_state_specs(p_shapes, pspec_tree, mesh, zero1=True)
+        batch_shapes = {"tokens": jax.ShapeDtypeStruct((b, s + 1), jnp.int32)}
+        batch_specs = {"tokens": _batch_spec(mesh, b, None)}
+        if cfg.enc_dec:
+            batch_shapes["enc"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_len, cfg.d_model), jnp.bfloat16
+            )
+            batch_specs["enc"] = _batch_spec(mesh, b, None, None)
+
+        def loss_fn(params, batch):
+            return lm.train_loss(params, batch, cfg, rules)
+
+        step = make_train_step(
+            loss_fn, opt_cfg or OptimizerConfig(), accum_steps=accum_steps,
+            param_specs=pspec_tree,
+        )
+        return Cell(
+            name=f"{cfg.name}/{shape.name}",
+            fn=step,
+            args=(p_shapes, opt_shapes, batch_shapes),
+            in_shardings=(
+                _named(mesh, pspec_tree),
+                _named(mesh, opt_specs),
+                _named(mesh, batch_specs),
+            ),
+            out_shardings=(
+                _named(mesh, pspec_tree),
+                _named(mesh, opt_specs),
+                None,
+            ),
+            donate_argnums=(0, 1),
+        )
+
+    dtype = jnp.dtype(cfg.dtype)
+    p_shapes = param_shapes(cfg, dtype)
+
+    if shape.kind == "prefill":
+        tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        args = [p_shapes, tok]
+        in_sh = [_named(mesh, pspec_tree), NamedSharding(mesh, _batch_spec(mesh, b, None))]
+        if cfg.enc_dec:
+            enc = jax.ShapeDtypeStruct((b, cfg.enc_len, cfg.d_model), dtype)
+            args.append(enc)
+            in_sh.append(NamedSharding(mesh, _batch_spec(mesh, b, None, None)))
+
+            def fn(params, tokens, enc_in):
+                return lm.prefill(params, tokens, cfg, rules, enc_in=enc_in)
+        else:
+
+            def fn(params, tokens):
+                return lm.prefill(params, tokens, cfg, rules)
+
+        cache_sp = lm.cache_specs(cfg, rules)
+        logits_sp = NamedSharding(mesh, _batch_spec(mesh, b, "model"))
+        return Cell(
+            name=f"{cfg.name}/{shape.name}",
+            fn=fn,
+            args=tuple(args),
+            in_shardings=tuple(in_sh),
+            out_shardings=(logits_sp, _named(mesh, cache_sp)),
+        )
+
+    if shape.kind == "decode":
+        cache_shapes = jax.eval_shape(
+            functools.partial(lm.init_cache, cfg, b, s, dtype)
+        )
+        cache_sp = lm.cache_specs(cfg, rules)
+        tok = jax.ShapeDtypeStruct((b,), jnp.int32)
+        pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+        bspec = NamedSharding(mesh, _batch_spec(mesh, b))
+
+        def fn(params, token, caches, position):
+            return lm.decode_step(params, token, caches, position, cfg, rules)
+
+        logits_sp = NamedSharding(mesh, _batch_spec(mesh, b, "model"))
+        return Cell(
+            name=f"{cfg.name}/{shape.name}",
+            fn=fn,
+            args=(p_shapes, tok, cache_shapes, pos),
+            in_shardings=(_named(mesh, pspec_tree), bspec, _named(mesh, cache_sp), bspec),
+            out_shardings=(logits_sp, _named(mesh, cache_sp)),
+            donate_argnums=(2,),
+        )
+
+    raise ValueError(shape.kind)

@@ -1,0 +1,2 @@
+from repro.models import attention, config, layers, lm, moe, ssm
+from repro.models.config import ArchConfig

@@ -1,0 +1,374 @@
+"""Attention: GQA/MQA, sliding-window (banded), MLA, and split-KV decode.
+
+All variants share the convention q: (B, S, H, dh), k/v: (B, S, KV, dh),
+with H = KV * q_per_kv. Softmax in f32. Sliding-window attention is computed
+*banded* (each window-chunk attends to itself + the previous chunk) so its
+FLOPs are O(S * W) rather than O(S^2) — this matters for the gemma3 roofline.
+
+Decode sharding: the KV cache is sequence-sharded over the ``model`` axis
+(split-KV / flash-decoding); XLA inserts the max/sum all-reduces for the
+global softmax automatically from the sharding constraints.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import _init_dense, apply_rope, init_rmsnorm, rmsnorm
+
+NEG_INF = -2.0**30
+
+
+def init_attention(key, cfg, dtype):
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params = {
+        "wq": _init_dense(k1, (d, cfg.q_dim), d, dtype),
+        "wk": _init_dense(k2, (d, cfg.kv_dim), d, dtype),
+        "wv": _init_dense(k3, (d, cfg.kv_dim), d, dtype),
+        "wo": _init_dense(k4, (cfg.q_dim, d), cfg.q_dim, dtype),
+    }
+    spec = {
+        "wq": P(None, "model"),
+        "wk": P(None, "model") if cfg.n_kv_heads % 16 == 0 else P(None, None),
+        "wv": P(None, "model") if cfg.n_kv_heads % 16 == 0 else P(None, None),
+        "wo": P("model", None),
+    }
+    if cfg.qk_norm:
+        params["q_norm"], _ = init_rmsnorm(cfg.head_dim)
+        params["k_norm"], _ = init_rmsnorm(cfg.head_dim)
+        spec["q_norm"] = P(None)
+        spec["k_norm"] = P(None)
+    return params, spec
+
+
+def _split_heads(x, n, dh):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, dh)
+
+
+def qkv(params, x, cfg, positions, rules):
+    q = _split_heads(x @ params["wq"], cfg.n_heads, cfg.head_dim)
+    k = _split_heads(x @ params["wk"], cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(x @ params["wv"], cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = rules.act(q, "heads")
+    k = rules.act(k, "kv_heads")
+    v = rules.act(v, "kv_heads")
+    return q, k, v
+
+
+def _gqa_scores(q, k):
+    """(B,S,H,dh) x (B,T,KV,dh) -> (B, KV, qpk, S, T) f32 scores."""
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    qg = q.reshape(b, s, kv, h // kv, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    return scores / math.sqrt(dh)
+
+
+def _gqa_out(probs, v, h):
+    b, kv, g, s, t = probs.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(b, s, h, v.shape[-1])
+
+
+def causal_attention(q, k, v, q_positions, kv_positions, window: int = 0):
+    """Full (or windowed, via masking) causal attention. Materializes the
+    (S, T) score matrix — use blocked_attention for long sequences."""
+    scores = _gqa_scores(q, k)  # (B,KV,g,S,T)
+    mask = kv_positions[:, None, :] <= q_positions[:, :, None]  # (B,S,T)
+    if window > 0:
+        mask &= kv_positions[:, None, :] > q_positions[:, :, None] - window
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(probs, v, q.shape[2])
+
+
+def pick_q_chunk(b: int, h: int, s: int, batch_shards: int = 1,
+                 budget_bytes: int = 1 << 30) -> int:
+    """Largest power-of-two q-chunk whose f32 score buffer fits the budget
+    (per device: b/batch_shards x h x chunk x s x 4 bytes)."""
+    b_loc = max(1, b // max(batch_shards, 1))
+    chunk = 512
+    while chunk > 64 and b_loc * h * chunk * s * 4 > budget_bytes:
+        chunk //= 2
+    return chunk
+
+
+def blocked_attention(q, k, v, q_positions, kv_positions, window: int = 0,
+                      q_chunk: int = 256):
+    """Memory-bounded attention: scan over q chunks.
+
+    * full causal: each q chunk scores against the whole KV (masked);
+      live f32 buffer = (B, H, q_chunk, S) instead of (B, H, S, S).
+    * windowed (q_chunk == window): each chunk scores against a 2W KV slice
+      starting at (ci-1)*W — O(S*W) FLOPs, exact (mask from positions).
+    """
+    b, s, h, dh = q.shape
+    if window > 0:
+        q_chunk = window
+    if s % q_chunk != 0 or s <= q_chunk:
+        return causal_attention(q, k, v, q_positions, kv_positions, window)
+    nc = s // q_chunk
+
+    qc = q.reshape(b, nc, q_chunk, h, dh)
+    qp = q_positions.reshape(b, nc, q_chunk)
+
+    if window > 0:
+        w = window
+
+        def body(_, inputs):
+            ci, q_i, qp_i = inputs
+            start = jnp.maximum(ci * w - w, 0)
+            k_i = jax.lax.dynamic_slice_in_dim(k, start, 2 * w, axis=1)
+            v_i = jax.lax.dynamic_slice_in_dim(v, start, 2 * w, axis=1)
+            kp_i = jax.lax.dynamic_slice_in_dim(kv_positions, start, 2 * w, axis=1)
+            out_i = causal_attention(q_i, k_i, v_i, qp_i, kp_i, window=w)
+            return None, out_i
+    else:
+
+        def body(_, inputs):
+            ci, q_i, qp_i = inputs
+            out_i = causal_attention(q_i, k_i_full, v_i_full, qp_i, kv_positions)
+            return None, out_i
+
+        k_i_full, v_i_full = k, v
+
+    # Checkpoint the chunk body: otherwise differentiating the scan stacks
+    # every chunk's f32 score residuals — reconstituting the full (S, S)
+    # buffer remat was supposed to avoid.
+    body = jax.checkpoint(body, prevent_cse=False)
+    _, outs = jax.lax.scan(
+        body,
+        None,
+        (jnp.arange(nc), jnp.moveaxis(qc, 1, 0), jnp.moveaxis(qp, 1, 0)),
+    )
+    # output head dim follows v (MLA: q is nope+rope wide, v is head_dim wide)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, h, v.shape[-1])
+
+
+def banded_attention(q, k, v, positions, window: int):
+    """Sliding-window attention with O(S*W) FLOPs: chunk the sequence into
+    window-size chunks; chunk c attends to chunks (c-1, c) with the causal +
+    window mask. Exact for window <= chunk size."""
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    w = window
+    assert s % w == 0, "sequence must be divisible by the window for banded attention"
+    nc = s // w
+    qc = q.reshape(b, nc, w, h, dh)
+    kc = k.reshape(b, nc, w, kv, dh)
+    vc = v.reshape(b, nc, w, kv, dh)
+    pad_k = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], axis=1)
+    pad_v = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], axis=1)
+    k2 = jnp.concatenate([pad_k, kc], axis=2)  # (b, nc, 2w, kv, dh)
+    v2 = jnp.concatenate([pad_v, vc], axis=2)
+    qg = qc.reshape(b, nc, w, kv, h // kv, dh)
+    scores = jnp.einsum("bcskgd,bctkd->bckgst", qg, k2).astype(jnp.float32)
+    scores = scores / math.sqrt(dh)
+    pos_q = positions.reshape(b, nc, w)
+    pos_k = jnp.concatenate(
+        [pos_q - w, pos_q], axis=-1
+    )  # previous chunk positions then own
+    valid = (pos_k[:, :, None, :] <= pos_q[:, :, :, None]) & (
+        pos_k[:, :, None, :] > pos_q[:, :, :, None] - w
+    ) & (pos_k[:, :, None, :] >= 0)
+    scores = jnp.where(valid[:, :, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bckgst,bctkd->bcskgd", probs.astype(v.dtype), v2)
+    return out.reshape(b, s, h, dh)
+
+
+def decode_attention(q, k_cache, v_cache, pos, window: int = 0):
+    """One-token decode: q (B, 1, H, dh) against a (B, S, KV, dh) cache,
+    valid positions < pos (per-batch). Cache is sequence-sharded (split-KV)."""
+    b, _, h, dh = q.shape
+    kv = k_cache.shape[2]
+    s = k_cache.shape[1]
+    qg = q.reshape(b, kv, h // kv, dh)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache).astype(jnp.float32)
+    scores = scores / math.sqrt(dh)
+    t = jnp.arange(s)[None, :]
+    valid = t < pos[:, None]
+    if window > 0:
+        valid &= t >= pos[:, None] - window
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, h, dh)
+
+
+def attention_block(params, x, cfg, positions, rules, *, window: int,
+                    kv_cache=None, cache_pos=None):
+    """Full attention block: qkv -> (cached) attention -> output projection.
+
+    Returns (out, new_kv) where new_kv is (k, v) written into the cache
+    layout when a cache is provided (decode/prefill), else the fresh (k, v).
+    """
+    q, k, v = qkv(params, x, cfg, positions, rules)
+    if kv_cache is not None and x.shape[1] == 1:
+        if cfg.kv_quant == "int8":
+            kq, ks, vq, vs = kv_cache
+            kq, ks = _cache_write_q(kq, ks, k, cache_pos)
+            vq, vs = _cache_write_q(vq, vs, v, cache_pos)
+            k_deq = dequantize_kv(kq, ks, k.dtype)
+            v_deq = dequantize_kv(vq, vs, v.dtype)
+            out = decode_attention(q, k_deq, v_deq, cache_pos + 1, window)
+            new_kv = (kq, ks, vq, vs)
+        else:
+            k_cache, v_cache = kv_cache
+            k_cache = _cache_write(k_cache, k, cache_pos)
+            v_cache = _cache_write(v_cache, v, cache_pos)
+            out = decode_attention(q, k_cache, v_cache, cache_pos + 1, window)
+            new_kv = (k_cache, v_cache)
+    else:
+        q_chunk = pick_q_chunk(
+            x.shape[0], cfg.n_heads, x.shape[1],
+            getattr(rules, "batch_shards", 1),
+        )
+        out = blocked_attention(q, k, v, positions, positions, window, q_chunk)
+        if cfg.kv_quant == "int8" and kv_cache is not None:
+            kq, ks = quantize_kv(k)
+            vq, vs = quantize_kv(v)
+            new_kv = (kq, ks, vq, vs)
+        else:
+            new_kv = (k, v)
+    out = out.reshape(*x.shape[:2], cfg.q_dim)
+    out = out @ params["wo"]
+    return rules.act(out, "act"), new_kv
+
+
+def _cache_write(cache, new, pos):
+    """Scatter one token (B, 1, KV, dh) into (B, S, KV, dh) at per-batch pos.
+
+    Uses an indexed scatter (not a masked jnp.where) so the HBM traffic is
+    O(new) instead of a full cache read+write per decode step — with donated
+    caches XLA updates in place. (§Perf iteration 1 on the decode cells.)"""
+    b = cache.shape[0]
+    return cache.at[jnp.arange(b), pos].set(new[:, 0].astype(cache.dtype))
+
+
+# ---------------------------------------------------------------------------
+# int8 KV cache (§Perf iteration 2 on the decode cells): per-(token, head)
+# absmax scales; halves the decode-attention read bytes vs bf16.
+# ---------------------------------------------------------------------------
+
+
+def quantize_kv(x):
+    """(B, S, KV, dh) float -> (int8 values, (B, S, KV) bf16 scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q, scale, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+def _cache_write_q(cache_q, cache_scale, new, pos):
+    b = cache_q.shape[0]
+    q, s = quantize_kv(new)
+    cache_q = cache_q.at[jnp.arange(b), pos].set(q[:, 0])
+    cache_scale = cache_scale.at[jnp.arange(b), pos].set(s[:, 0])
+    return cache_q, cache_scale
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): compressed KV cache, absorbed decode
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg, dtype):
+    d = cfg.d_model
+    r = cfg.kv_lora_rank
+    dn, dr, dh = cfg.nope_head_dim, cfg.rope_head_dim, cfg.head_dim
+    h = cfg.n_heads
+    keys = jax.random.split(key, 5)
+    params = {
+        "wq": _init_dense(keys[0], (d, h * (dn + dr)), d, dtype),
+        "w_dkv": _init_dense(keys[1], (d, r + dr), d, dtype),
+        "w_uk": _init_dense(keys[2], (r, h * dn), r, dtype),
+        "w_uv": _init_dense(keys[3], (r, h * dh), r, dtype),
+        "wo": _init_dense(keys[4], (h * dh, d), h * dh, dtype),
+        "kv_norm": jnp.zeros((r,), jnp.float32),
+    }
+    spec = {
+        "wq": P(None, "model"),
+        "w_dkv": P(None, None),
+        "w_uk": P(None, "model"),
+        "w_uv": P(None, "model"),
+        "wo": P("model", None),
+        "kv_norm": P(None),
+    }
+    return params, spec
+
+
+def mla_block(params, x, cfg, positions, rules, *, kv_cache=None, cache_pos=None):
+    """MLA attention. Cache = (c_kv: (B,S,r), k_rope: (B,S,dr)).
+
+    Prefill/train: decompress and run standard attention (materialized form).
+    Decode: absorbed form — scores via q_nope @ W_uk against the compressed
+    cache; output re-projected with W_uv. The cache stays r + dr wide.
+    """
+    b, s, _ = x.shape
+    h, dn, dr, dh, r = (
+        cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim, cfg.head_dim,
+        cfg.kv_lora_rank,
+    )
+    q = (x @ params["wq"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = x @ params["w_dkv"]  # (B, S, r + dr)
+    c_kv, k_rope = dkv[..., :r], dkv[..., r:]
+    c_kv = rmsnorm(c_kv, params["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+
+    if kv_cache is not None and s == 1:
+        c_cache, kr_cache = kv_cache
+        bidx = jnp.arange(b)
+        c_cache = c_cache.at[bidx, cache_pos].set(c_kv[:, 0].astype(c_cache.dtype))
+        kr_cache = kr_cache.at[bidx, cache_pos].set(k_rope[:, 0].astype(kr_cache.dtype))
+        c_cache = rules.act(c_cache, "mla_cache")
+        # absorbed scores: q_eff (B,H,r) = q_nope @ W_uk[h]
+        w_uk = params["w_uk"].reshape(r, h, dn)
+        q_eff = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)
+        scores = (
+            jnp.einsum("bhr,btr->bht", q_eff, c_cache)
+            + jnp.einsum("bhd,btd->bht", q_rope[:, 0], kr_cache)
+        ).astype(jnp.float32) / math.sqrt(dn + dr)
+        pos_t = jnp.arange(c_cache.shape[1])[None, :]
+        valid = pos_t <= cache_pos[:, None]
+        scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        attn_c = jnp.einsum("bht,btr->bhr", probs.astype(c_cache.dtype), c_cache)
+        w_uv = params["w_uv"].reshape(r, h, dh)
+        out = jnp.einsum("bhr,rhd->bhd", attn_c, w_uv)[:, None]
+        new_cache = (c_cache, kr_cache)
+    else:
+        k_nope = (c_kv @ params["w_uk"]).reshape(b, s, h, dn)
+        v = (c_kv @ params["w_uv"]).reshape(b, s, h, dh)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, dr))], axis=-1
+        )
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        q_full = rules.act(q_full, "heads")
+        k_full = rules.act(k_full, "heads")
+        q_chunk = pick_q_chunk(b, h, s, getattr(rules, "batch_shards", 1))
+        out = blocked_attention(q_full, k_full, v, positions, positions,
+                                q_chunk=q_chunk)
+        new_cache = (c_kv, k_rope)
+    out = out.reshape(b, s, h * dh) @ params["wo"]
+    return rules.act(out, "act"), new_cache

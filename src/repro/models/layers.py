@@ -1,0 +1,140 @@
+"""Shared neural-net layers: norms, RoPE, gated MLPs, embeddings.
+
+Conventions:
+  * params are plain nested dicts of jnp arrays (framework-free);
+  * every ``init_*`` returns (params, spec) where ``spec`` is a matching
+    pytree of ``jax.sharding.PartitionSpec`` for the production mesh;
+  * compute runs in ``cfg.dtype`` (bf16 by default) with f32 accumulation
+    where it matters (norms, softmax, loss).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _init_dense(key, shape, in_axis_size, dtype):
+    scale = 1.0 / math.sqrt(in_axis_size)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return jnp.zeros((d,), dtype), P(None)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions: (...,) int -> (…, head_dim//2) angles."""
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    )
+    return positions[..., None].astype(jnp.float32) * freqs[None, :]
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, dh); positions: (B, S) or (S,)."""
+    dh = x.shape[-1]
+    ang = rope_angles(positions, dh, theta)  # (B, S, dh/2) or (S, dh/2)
+    if ang.ndim == 2:
+        ang = ang[None, :, :]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "wi_gate": _init_dense(k1, (d_model, d_ff), d_model, dtype),
+        "wi_up": _init_dense(k2, (d_model, d_ff), d_model, dtype),
+        "wo": _init_dense(k3, (d_ff, d_model), d_ff, dtype),
+    }
+    spec = {
+        "wi_gate": P(None, "model"),
+        "wi_up": P(None, "model"),
+        "wo": P("model", None),
+    }
+    return params, spec
+
+
+def mlp(params, x, act: str, rules):
+    gate = x @ params["wi_gate"]
+    up = x @ params["wi_up"]
+    gate = rules.act(gate, "ffn")
+    up = rules.act(up, "ffn")
+    if act == "geglu":
+        h = jax.nn.gelu(gate, approximate=True) * up
+    else:
+        h = jax.nn.silu(gate) * up
+    out = h @ params["wo"]
+    return rules.act(out, "act")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab_padded: int, d_model: int, dtype, tie: bool):
+    k1, k2 = jax.random.split(key)
+    params = {"tok": (jax.random.normal(k1, (vocab_padded, d_model), jnp.float32) * 0.02).astype(dtype)}
+    spec = {"tok": P("model", None)}
+    if not tie:
+        params["head"] = _init_dense(k2, (d_model, vocab_padded), d_model, dtype)
+        spec["head"] = P(None, "model")
+    return params, spec
+
+
+def embed(params, tokens, rules):
+    out = jnp.take(params["tok"], tokens, axis=0)
+    return rules.act(out, "act")
+
+
+def unembed(params, x, rules, vocab: int):
+    if "head" in params:
+        logits = x @ params["head"]
+    else:
+        logits = x @ params["tok"].T
+    logits = rules.act(logits, "logits")
+    # mask vocab padding out of the softmax
+    v_pad = logits.shape[-1]
+    if v_pad != vocab:
+        neg = jnp.finfo(jnp.float32).min
+        pad_mask = jnp.arange(v_pad) >= vocab
+        logits = jnp.where(pad_mask, neg, logits.astype(jnp.float32)).astype(logits.dtype)
+    return logits
+
+
+def softmax_xent(logits, labels, vocab: int):
+    """Mean token cross-entropy; logits f32-upcast; labels < vocab."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

@@ -1,0 +1,580 @@
+"""Model assembler: every assigned architecture as one scanned-group LM.
+
+Layers are organized into *groups* — the repeating unit of the architecture —
+and ``lax.scan`` runs over stacked group parameters so the HLO stays O(group)
+regardless of depth (essential for the 512-device dry-run compile times):
+
+  dense (yi/granite/gemma-7b/chameleon):  group = [attn]
+  gemma3:                                 group = [attn_w]*5 + [attn]
+  llama4-scout:                           group = [attn_moe]
+  deepseek-v2-lite:  prologue [mla_dense], group = [mla_moe]
+  mamba2:                                 group = [ssm]
+  zamba2:                                 group = [ssm]*6 + [hybrid_attn]
+  whisper: encoder groups [enc], decoder groups = [xattn]
+
+``hybrid_attn`` (Zamba2) is a *shared-weight* attention+MLP block: weights
+live once in ``params["shared"]``; only the per-application 2d->d input
+projection (concat of hidden state and the initial embedding) is stacked.
+
+Entry points: ``init_params``, ``param_specs``, ``train_loss``, ``prefill``,
+``decode_step``, ``init_cache`` (+ ``cache_specs``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import NO_SHARDING, ShardingRules
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ArchConfig
+from repro.models.layers import (
+    _init_dense,
+    embed,
+    init_embedding,
+    init_mlp,
+    init_rmsnorm,
+    mlp,
+    rmsnorm,
+    softmax_xent,
+    unembed,
+)
+
+# ---------------------------------------------------------------------------
+# layouts
+# ---------------------------------------------------------------------------
+
+
+def group_layout(cfg: ArchConfig) -> tuple[str, ...]:
+    if cfg.enc_dec:
+        return ("xattn",)
+    if cfg.family in ("ssm",):
+        return ("ssm",)
+    if cfg.family == "hybrid":
+        return ("ssm",) * cfg.hybrid_attn_every + ("hybrid_attn",)
+    if cfg.local_global_ratio > 0:
+        return ("attn_w",) * cfg.local_global_ratio + ("attn",)
+    if cfg.is_moe:
+        return ("mla_moe" if cfg.mla else "attn_moe",)
+    return ("mla" if cfg.mla else "attn",)
+
+
+def prologue_layout(cfg: ArchConfig) -> tuple[str, ...]:
+    if cfg.first_dense_layers:
+        return ("mla" if cfg.mla else "attn",) * cfg.first_dense_layers
+    return ()
+
+
+# ---------------------------------------------------------------------------
+# per-kind init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, kind: str, cfg: ArchConfig, dtype):
+    keys = jax.random.split(key, 4)
+    d = cfg.d_model
+    params, spec = {}, {}
+    params["ln1"], spec["ln1"] = init_rmsnorm(d)
+
+    if kind in ("attn", "attn_w", "attn_moe", "enc"):
+        params["attn"], spec["attn"] = attn.init_attention(keys[0], cfg, dtype)
+    elif kind in ("mla", "mla_moe"):
+        params["attn"], spec["attn"] = attn.init_mla(keys[0], cfg, dtype)
+    elif kind == "ssm":
+        params["ssm"], spec["ssm"] = ssm_mod.init_mamba2(keys[0], cfg, dtype)
+        return params, spec  # ssm blocks have no separate MLP
+    elif kind == "hybrid_attn":
+        params["proj"] = _init_dense(keys[0], (2 * d, d), 2 * d, dtype)
+        spec["proj"] = P(None, None)
+        return params, spec  # block weights are shared (params["shared"])
+    elif kind == "xattn":
+        params["attn"], spec["attn"] = attn.init_attention(keys[0], cfg, dtype)
+        params["ln_x"], spec["ln_x"] = init_rmsnorm(d)
+        params["xattn"], spec["xattn"] = attn.init_attention(keys[3], cfg, dtype)
+    else:
+        raise ValueError(kind)
+
+    params["ln2"], spec["ln2"] = init_rmsnorm(d)
+    if kind in ("attn_moe", "mla_moe"):
+        params["moe"], spec["moe"] = moe_mod.init_moe(keys[1], cfg, dtype)
+    else:
+        params["mlp"], spec["mlp"] = init_mlp(keys[1], d, cfg.d_ff, dtype)
+    return params, spec
+
+
+def init_params(key, cfg: ArchConfig, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    params: dict = {}
+    params["embed"], _ = init_embedding(keys[0], cfg.vocab_padded, cfg.d_model, dtype, cfg.tie_embeddings)
+    params["final_norm"], _ = init_rmsnorm(cfg.d_model)
+
+    layout = group_layout(cfg)
+    g = cfg.n_groups
+
+    def init_group(k):
+        ks = jax.random.split(k, len(layout))
+        return {
+            f"pos{i}": _init_layer(ks[i], kind, cfg, dtype)[0]
+            for i, kind in enumerate(layout)
+        }
+
+    params["groups"] = jax.vmap(init_group)(jax.random.split(keys[1], g))
+
+    for i, kind in enumerate(prologue_layout(cfg)):
+        params[f"prologue{i}"] = _init_layer(jax.random.fold_in(keys[2], i), kind, cfg, dtype)[0]
+
+    if cfg.family == "hybrid":
+        shared = {}
+        shared["ln1"], _ = init_rmsnorm(cfg.d_model)
+        shared["attn"], _ = attn.init_attention(keys[3], cfg, dtype)
+        shared["ln2"], _ = init_rmsnorm(cfg.d_model)
+        shared["mlp"], _ = init_mlp(keys[4], cfg.d_model, cfg.d_ff, dtype)
+        params["shared"] = shared
+
+    if cfg.enc_dec:
+        def init_enc_layer(k):
+            return _init_layer(k, "enc", cfg, dtype)[0]
+
+        params["enc_groups"] = jax.vmap(init_enc_layer)(
+            jax.random.split(keys[5], cfg.n_enc_layers)
+        )
+        params["enc_norm"], _ = init_rmsnorm(cfg.d_model)
+        params["enc_pos"] = (
+            jax.random.normal(keys[6], (cfg.enc_len, cfg.d_model), jnp.float32) * 0.02
+        ).astype(dtype)
+
+    return params
+
+
+def param_specs(cfg: ArchConfig):
+    """Pytree of PartitionSpec matching init_params exactly."""
+    specs: dict = {}
+    embed_spec = {"tok": P("model", None)}
+    if not cfg.tie_embeddings:
+        embed_spec["head"] = P(None, "model")
+    specs["embed"] = embed_spec
+    specs["final_norm"] = P(None)
+
+    layout = group_layout(cfg)
+
+    def group_spec(stacked: bool):
+        out = {}
+        for i, kind in enumerate(layout):
+            _, s = _init_layer(jax.random.PRNGKey(0), kind, cfg, jnp.float32)
+            if stacked:
+                s = jax.tree.map(
+                    lambda ps: P(None, *ps), s,
+                    is_leaf=lambda v: isinstance(v, P),
+                )
+            out[f"pos{i}"] = s
+        return out
+
+    specs["groups"] = group_spec(stacked=True)
+    for i, kind in enumerate(prologue_layout(cfg)):
+        _, s = _init_layer(jax.random.PRNGKey(0), kind, cfg, jnp.float32)
+        specs[f"prologue{i}"] = s
+    if cfg.family == "hybrid":
+        _, attn_s = attn.init_attention(jax.random.PRNGKey(0), cfg, jnp.float32)
+        _, mlp_s = init_mlp(jax.random.PRNGKey(0), cfg.d_model, cfg.d_ff, jnp.float32)
+        specs["shared"] = {"ln1": P(None), "attn": attn_s, "ln2": P(None), "mlp": mlp_s}
+    if cfg.enc_dec:
+        _, s = _init_layer(jax.random.PRNGKey(0), "enc", cfg, jnp.float32)
+        specs["enc_groups"] = jax.tree.map(
+            lambda ps: P(None, *ps), s, is_leaf=lambda v: isinstance(v, P)
+        )
+        specs["enc_norm"] = P(None)
+        specs["enc_pos"] = P(None, None)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer(lp, kind, x, cfg, positions, rules, *, shared=None, emb0=None,
+                 enc_out=None, cache=None, cache_pos=None, aux=0.0):
+    """One layer. Returns (x, new_cache_entry, aux)."""
+    if kind == "ssm":
+        h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        if cache is not None and x.shape[1] == 1:
+            out, new_state = ssm_mod.mamba2_decode(lp["ssm"], h, cfg, rules, cache)
+        else:
+            out, new_state = ssm_mod.mamba2_forward(lp["ssm"], h, cfg, rules)
+        return x + out, new_state, aux
+
+    if kind == "hybrid_attn":
+        cat = jnp.concatenate([x, emb0], axis=-1)
+        h = cat @ lp["proj"]
+        h = rmsnorm(h, shared["ln1"], cfg.norm_eps)
+        out, new_kv = attn.attention_block(
+            shared["attn"], h, cfg, positions, rules, window=0,
+            kv_cache=cache, cache_pos=cache_pos,
+        )
+        x = x + out
+        h2 = rmsnorm(x, shared["ln2"], cfg.norm_eps)
+        x = x + mlp(shared["mlp"], h2, cfg.act, rules)
+        return x, new_kv, aux
+
+    if kind == "xattn":
+        h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        self_cache = cache["self"] if cache is not None else None
+        out, new_self = attn.attention_block(
+            lp["attn"], h, cfg, positions, rules, window=0,
+            kv_cache=self_cache, cache_pos=cache_pos,
+        )
+        x = x + out
+        hx = rmsnorm(x, lp["ln_x"], cfg.norm_eps)
+        if cache is not None and "cross" in cache and x.shape[1] == 1:
+            ck, cv = cache["cross"]
+            q = attn._split_heads(hx @ lp["xattn"]["wq"], cfg.n_heads, cfg.head_dim)
+            enc_pos_arr = jnp.full((x.shape[0],), ck.shape[1], jnp.int32)
+            out_x = attn.decode_attention(q, ck, cv, enc_pos_arr)
+            new_cross = (ck, cv)
+        else:
+            q = attn._split_heads(hx @ lp["xattn"]["wq"], cfg.n_heads, cfg.head_dim)
+            ck = attn._split_heads(enc_out @ lp["xattn"]["wk"], cfg.n_kv_heads, cfg.head_dim)
+            cv = attn._split_heads(enc_out @ lp["xattn"]["wv"], cfg.n_kv_heads, cfg.head_dim)
+            enc_positions = jnp.broadcast_to(
+                jnp.arange(ck.shape[1])[None, :], (x.shape[0], ck.shape[1])
+            )
+            q_pos = jnp.full_like(positions, ck.shape[1])  # attend everywhere
+            out_x = attn.causal_attention(q, ck, cv, q_pos, enc_positions)
+            new_cross = (ck, cv)
+        out_x = out_x.reshape(*x.shape[:2], cfg.q_dim) @ lp["xattn"]["wo"]
+        x = x + rules.act(out_x, "act")
+        h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        x = x + mlp(lp["mlp"], h2, cfg.act, rules)
+        return x, {"self": new_self, "cross": new_cross}, aux
+
+    # attention (+ mlp | moe) kinds
+    h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    window = cfg.window if kind == "attn_w" else 0
+    if kind in ("mla", "mla_moe"):
+        out, new_kv = attn.mla_block(
+            lp["attn"], h, cfg, positions, rules,
+            kv_cache=cache, cache_pos=cache_pos,
+        )
+    else:
+        out, new_kv = attn.attention_block(
+            lp["attn"], h, cfg, positions, rules, window=window,
+            kv_cache=cache, cache_pos=cache_pos,
+        )
+    x = x + out
+    h2 = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if kind in ("attn_moe", "mla_moe"):
+        out2, layer_aux = moe_mod.moe_ffn(lp["moe"], h2, cfg, rules)
+        aux = aux + layer_aux
+    else:
+        out2 = mlp(lp["mlp"], h2, cfg.act, rules)
+    x = x + out2
+    return x, new_kv, aux
+
+
+def _encode(params, enc_in, cfg, rules):
+    """Whisper encoder: bidirectional attention over frame embeddings."""
+    x = enc_in + params["enc_pos"][None, : enc_in.shape[1], :].astype(enc_in.dtype)
+    positions = jnp.broadcast_to(
+        jnp.arange(x.shape[1])[None, :], x.shape[:2]
+    )
+
+    def body(carry, lp):
+        h = rmsnorm(carry, lp["ln1"], cfg.norm_eps)
+        q, k, v = attn.qkv(lp["attn"], h, cfg, positions, rules)
+        # bidirectional: every position attends everywhere
+        q_pos = jnp.full_like(positions, x.shape[1])
+        out = attn.causal_attention(q, k, v, q_pos, positions)
+        out = out.reshape(*h.shape[:2], cfg.q_dim) @ lp["attn"]["wo"]
+        carry = carry + rules.act(out, "act")
+        h2 = rmsnorm(carry, lp["ln2"], cfg.norm_eps)
+        carry = carry + mlp(lp["mlp"], h2, cfg.act, rules)
+        return carry, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_groups"])
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# full forward passes
+# ---------------------------------------------------------------------------
+
+
+def _best_outer(g: int) -> int:
+    """Divisor of g minimizing n_outer + g / n_outer (sqrt-L remat split)."""
+    best, best_cost = 1, g + 1
+    for d in range(1, g + 1):
+        if g % d == 0:
+            cost = d + g // d
+            if cost < best_cost:
+                best, best_cost = d, cost
+    return best
+
+
+def _backbone(params, x, cfg, rules, positions, *, caches=None, cache_pos=None,
+              enc_out=None, train=False):
+    """Run prologue layers + scanned groups. Returns (x, new_caches, aux)."""
+    layout = group_layout(cfg)
+    emb0 = x if cfg.family == "hybrid" else None
+    aux = jnp.zeros((), jnp.float32)
+
+    new_prologue_caches = []
+    for i, kind in enumerate(prologue_layout(cfg)):
+        c = caches[f"prologue{i}"] if caches is not None else None
+        x, nc, aux = _apply_layer(
+            params[f"prologue{i}"], kind, x, cfg, positions, rules,
+            cache=c, cache_pos=cache_pos, aux=aux,
+        )
+        new_prologue_caches.append(nc)
+
+    shared = params.get("shared")
+
+    def group_body(carry, scanned):
+        x, aux = carry
+        gp = scanned[0]
+        gcache = scanned[1] if caches is not None else None
+        new_cache = {}
+        for i, kind in enumerate(layout):
+            c = gcache[f"pos{i}"] if gcache is not None else None
+            x, nc, aux = _apply_layer(
+                gp[f"pos{i}"], kind, x, cfg, positions, rules,
+                shared=shared, emb0=emb0, enc_out=enc_out,
+                cache=c, cache_pos=cache_pos, aux=aux,
+            )
+            # None when not caching: scan must not stack throwaway K/V as ys.
+            new_cache[f"pos{i}"] = nc if caches is not None else None
+        return (x, aux), new_cache
+
+    body = group_body
+    policy = {
+        "nothing": jax.checkpoint_policies.nothing_saveable,
+        "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        "default": None,
+    }[cfg.remat_policy]
+    if cfg.remat and train:
+        body = jax.checkpoint(group_body, prevent_cse=False, policy=policy)
+
+    xs = (params["groups"], caches["groups"]) if caches is not None else (params["groups"],)
+    n_groups = jax.tree.leaves(params["groups"])[0].shape[0]
+    use_sqrt_remat = (
+        cfg.remat and train and cfg.scan_layers and caches is None
+        and _best_outer(n_groups) > 1
+    )
+    if use_sqrt_remat:
+        # Two-level (sqrt-L) activation checkpointing: only n_outer carries
+        # are stacked by the forward scan; each superblock's inner carries
+        # are rematerialized during its backward. Peak residual-stream saves
+        # drop from G to n_outer + G/n_outer.
+        n_outer = _best_outer(n_groups)
+        n_inner = n_groups // n_outer
+        xs_r = jax.tree.map(
+            lambda leaf: leaf.reshape(n_outer, n_inner, *leaf.shape[1:]), xs
+        )
+
+        def run_inner(carry, outer_xs):
+            return jax.lax.scan(group_body, carry, outer_xs)
+
+        inner_ck = jax.checkpoint(run_inner, prevent_cse=False, policy=policy)
+
+        def outer_body(carry, outer_xs):
+            return inner_ck(carry, outer_xs)
+
+        (x, aux), group_caches = jax.lax.scan(outer_body, (x, aux), xs_r)
+    elif cfg.scan_layers:
+        (x, aux), group_caches = jax.lax.scan(body, (x, aux), xs)
+    else:
+        # Unrolled (dry-run cost extraction: XLA counts scan bodies once, so
+        # roofline terms are measured on 1-/2-group unrolled lowerings).
+        outs = []
+        n_g = jax.tree.leaves(params["groups"])[0].shape[0]
+        for gi in range(n_g):
+            xs_i = jax.tree.map(lambda leaf: leaf[gi], xs)
+            (x, aux), cache_i = body((x, aux), xs_i)
+            outs.append(cache_i)
+        group_caches = (
+            jax.tree.map(lambda *ls: jnp.stack(ls), *outs) if caches is not None else None
+        )
+
+    new_caches = None
+    if caches is not None:
+        new_caches = {"groups": group_caches}
+        for i, nc in enumerate(new_prologue_caches):
+            new_caches[f"prologue{i}"] = nc
+    return x, new_caches, aux
+
+
+def forward(params, tokens, cfg: ArchConfig, rules: ShardingRules = NO_SHARDING,
+            positions=None, enc_in=None, train=False):
+    """Full-sequence forward -> logits (B, S, vocab_padded)."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x = embed(params["embed"], tokens, rules)
+    enc_out = None
+    if cfg.enc_dec:
+        enc_out = _encode(params, enc_in, cfg, rules)
+    x, _, aux = _backbone(params, x, cfg, rules, positions, enc_out=enc_out, train=train)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, rules, cfg.vocab)
+    return logits, aux
+
+
+def train_loss(params, batch, cfg: ArchConfig, rules: ShardingRules = NO_SHARDING,
+               aux_coef: float = 0.01):
+    """batch: {"tokens": (B, S+1)} (+ "enc": (B, enc_len, D) for enc-dec)."""
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    logits, aux = forward(
+        params, inputs, cfg, rules, enc_in=batch.get("enc"), train=True
+    )
+    loss = softmax_xent(logits, labels, cfg.vocab)
+    return loss + aux_coef * aux
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache_shape(kind: str, cfg: ArchConfig, batch: int, max_seq: int, dtype):
+    kv_shape = (batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    if kind in ("attn", "attn_w", "attn_moe", "hybrid_attn"):
+        if cfg.kv_quant == "int8":
+            scale_shape = (batch, max_seq, cfg.n_kv_heads)
+            return (
+                jnp.zeros(kv_shape, jnp.int8),
+                jnp.zeros(scale_shape, jnp.bfloat16),
+                jnp.zeros(kv_shape, jnp.int8),
+                jnp.zeros(scale_shape, jnp.bfloat16),
+            )
+        return (jnp.zeros(kv_shape, dtype), jnp.zeros(kv_shape, dtype))
+    if kind in ("mla", "mla_moe"):
+        return (
+            jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+            jnp.zeros((batch, max_seq, cfg.rope_head_dim), dtype),
+        )
+    if kind == "ssm":
+        c = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+        return (
+            jnp.zeros((batch, cfg.n_ssm_heads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+            jnp.zeros((batch, cfg.ssm_conv - 1, c), dtype),
+        )
+    if kind == "xattn":
+        enc_kv = (batch, cfg.enc_len, cfg.n_kv_heads, cfg.head_dim)
+        return {
+            "self": (jnp.zeros(kv_shape, dtype), jnp.zeros(kv_shape, dtype)),
+            "cross": (jnp.zeros(enc_kv, dtype), jnp.zeros(enc_kv, dtype)),
+        }
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    layout = group_layout(cfg)
+    g = cfg.n_groups
+
+    def one_group(_):
+        return {
+            f"pos{i}": _layer_cache_shape(kind, cfg, batch, max_seq, dtype)
+            for i, kind in enumerate(layout)
+        }
+
+    caches = {"groups": jax.tree.map(
+        lambda leaf: jnp.zeros((g, *leaf.shape), leaf.dtype),
+        one_group(None),
+    )}
+    for i, kind in enumerate(prologue_layout(cfg)):
+        caches[f"prologue{i}"] = _layer_cache_shape(kind, cfg, batch, max_seq, dtype)
+    return caches
+
+
+def cache_specs(cfg: ArchConfig, rules: ShardingRules):
+    """PartitionSpec pytree matching init_cache (split-KV: seq over model)."""
+    b = tuple(rules.batch_axes) or None
+    m = rules.model_axis
+
+    def kind_spec(kind: str, stacked: bool):
+        lead = (None,) if stacked else ()
+        if kind in ("attn", "attn_w", "attn_moe", "hybrid_attn"):
+            s = P(*lead, b, m, None, None)
+            if cfg.kv_quant == "int8":
+                sc = P(*lead, b, m, None)
+                return (s, sc, s, sc)
+            return (s, s)
+        if kind in ("mla", "mla_moe"):
+            return (P(*lead, b, m, None), P(*lead, b, m, None))
+        if kind == "ssm":
+            return (P(*lead, b, m, None, None), P(*lead, b, None, m))
+        if kind == "xattn":
+            s = P(*lead, b, m, None, None)
+            c = P(*lead, b, None, None, None)
+            return {"self": (s, s), "cross": (c, c)}
+        raise ValueError(kind)
+
+    layout = group_layout(cfg)
+    specs = {"groups": {
+        f"pos{i}": kind_spec(kind, True) for i, kind in enumerate(layout)
+    }}
+    for i, kind in enumerate(prologue_layout(cfg)):
+        specs[f"prologue{i}"] = kind_spec(kind, False)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, tokens, cfg: ArchConfig, rules: ShardingRules = NO_SHARDING,
+            max_seq: int | None = None, enc_in=None):
+    """Run the prompt, build the cache. Returns (last_logits, caches)."""
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x = embed(params["embed"], tokens, rules)
+    enc_out = _encode(params, enc_in, cfg, rules) if cfg.enc_dec else None
+
+    fresh = init_cache(cfg, b, s, jnp.dtype(cfg.dtype))
+    x, caches, _ = _backbone(
+        params, x, cfg, rules, positions, caches=fresh, cache_pos=None,
+        enc_out=enc_out,
+    )
+
+    if max_seq != s:
+        def pad(leaf, spec_axis):
+            pad_width = [(0, 0)] * leaf.ndim
+            pad_width[spec_axis] = (0, max_seq - s)
+            return jnp.pad(leaf, pad_width)
+        # attention caches have seq at axis -3 (B,S,KV,dh) / (G,B,S,KV,dh);
+        # mla at axis -2; ssm states carry no seq dim — leave untouched.
+        caches = jax.tree.map(
+            lambda leaf: pad(leaf, leaf.ndim - 3)
+            if leaf.ndim >= 4 and leaf.shape[leaf.ndim - 3] == s
+            else (pad(leaf, leaf.ndim - 2) if leaf.ndim >= 3 and leaf.shape[leaf.ndim - 2] == s else leaf),
+            caches,
+        )
+
+    x = rmsnorm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, rules, cfg.vocab)
+    return logits[:, 0], caches
+
+
+def decode_step(params, token, caches, pos, cfg: ArchConfig,
+                rules: ShardingRules = NO_SHARDING):
+    """One decode step. token: (B,) int32; pos: (B,) int32 (current length).
+
+    Returns (logits (B, vocab_padded), new_caches)."""
+    b = token.shape[0]
+    positions = pos[:, None]
+    x = embed(params["embed"], token[:, None], rules)
+    x, new_caches, _ = _backbone(
+        params, x, cfg, rules, positions, caches=caches, cache_pos=pos,
+    )
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, rules, cfg.vocab)
+    return logits[:, 0], new_caches

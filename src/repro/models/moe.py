@@ -1,0 +1,191 @@
+"""Mixture-of-Experts FFN with expert parallelism over the ``model`` axis.
+
+Design (DESIGN.md Section 4): activations entering the FFN are replicated
+over ``model`` (batch lives on pod/data), and experts are sharded over
+``model`` — so dispatch is *communication-free*: every device routes the same
+tokens, scatters only the tokens belonging to its local experts into an
+(E_loc, C, D) buffer (gather/scatter, no one-hot matmuls), runs the batched
+expert GEMMs, combines locally, and a single ``psum`` over ``model`` merges
+partial outputs — the exact collective a dense row-parallel FFN needs anyway.
+Shared experts (DeepSeek-style) are folded into the same psum as manually
+column/row-sharded dense MLPs.
+
+Implemented with ``shard_map`` when a mesh is active; the identical local
+routine runs unsharded on a single device (smoke tests).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import _init_dense
+
+
+def init_moe(key, cfg, dtype):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    keys = jax.random.split(key, 7)
+    params = {
+        "router": _init_dense(keys[0], (d, e), d, jnp.float32),
+        "wi_gate": _init_dense(keys[1], (e, d, f), d, dtype),
+        "wi_up": _init_dense(keys[2], (e, d, f), d, dtype),
+        "wo": _init_dense(keys[3], (e, f, d), f, dtype),
+    }
+    spec = {
+        "router": P(None, None),
+        "wi_gate": P("model", None, None),
+        "wi_up": P("model", None, None),
+        "wo": P("model", None, None),
+    }
+    if cfg.n_shared_experts:
+        fs = (cfg.d_ff_shared or cfg.d_ff_expert) * cfg.n_shared_experts
+        params["shared"] = {
+            "wi_gate": _init_dense(keys[4], (d, fs), d, dtype),
+            "wi_up": _init_dense(keys[5], (d, fs), d, dtype),
+            "wo": _init_dense(keys[6], (fs, d), fs, dtype),
+        }
+        spec["shared"] = {
+            "wi_gate": P(None, "model"),
+            "wi_up": P(None, "model"),
+            "wo": P("model", None),
+        }
+    return params, spec
+
+
+def _act(gate, up, act: str):
+    if act == "geglu":
+        return jax.nn.gelu(gate, approximate=True) * up
+    return jax.nn.silu(gate) * up
+
+
+def _moe_local(params, x2d, cfg, e_lo: int | jax.Array, e_loc: int, n_shards: int):
+    """Route + dispatch + expert GEMMs + combine for local experts
+    [e_lo, e_lo + e_loc). ``x2d: (T, D)``. Returns (partial_out, aux_loss)."""
+    t, d = x2d.shape
+    e, k = cfg.n_experts, cfg.top_k
+    # Dropless when the token set is small (decode steps): capacity-factor
+    # dropping only pays off for large prefill/train token counts.
+    if t * k <= 256:
+        cap = t * k
+    else:
+        cap = max(1, math.ceil(t * k / e * cfg.capacity_factor))
+
+    logits = (x2d.astype(jnp.float32)) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    gates, eids = jax.lax.top_k(probs, k)  # (T, K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balancing stats (Switch aux): per-expert assignment fraction and
+    # mean router prob. Returned as stats so distributed callers can reduce
+    # them over token shards *before* the (nonlinear) product.
+    oh = jax.nn.one_hot(eids[:, 0], e, dtype=jnp.float32)
+    stats = (oh.mean(0), probs.mean(0))
+
+    flat_e = eids.reshape(-1)  # (T*K,)
+    flat_g = gates.reshape(-1)
+    tok_idx = jnp.repeat(jnp.arange(t), k)
+    # position of each assignment within its expert (arrival order)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (T*K, E)
+    pos = (jnp.cumsum(onehot, axis=0) - onehot)  # prior count per expert
+    pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < cap
+
+    mine = keep & (flat_e >= e_lo) & (flat_e < e_lo + e_loc)
+    slot = jnp.where(mine, (flat_e - e_lo) * cap + pos, e_loc * cap)  # dump row
+    buf = jnp.zeros((e_loc * cap + 1, d), x2d.dtype)
+    buf = buf.at[slot].add(jnp.where(mine[:, None], x2d[tok_idx], 0))
+    h_in = buf[:-1].reshape(e_loc, cap, d)
+
+    gate_h = jnp.einsum("ecd,edf->ecf", h_in, params["wi_gate"])
+    up_h = jnp.einsum("ecd,edf->ecf", h_in, params["wi_up"])
+    y = jnp.einsum("ecf,efd->ecd", _act(gate_h, up_h, cfg.act), params["wo"])
+
+    y_flat = jnp.concatenate([y.reshape(e_loc * cap, d), jnp.zeros((1, d), y.dtype)])
+    per_assign = y_flat[slot] * jnp.where(mine, flat_g, 0.0)[:, None].astype(y.dtype)
+    out = jnp.zeros_like(x2d).at[tok_idx].add(per_assign)
+
+    if "shared" in params:
+        sp = params["shared"]
+        g_s = x2d @ sp["wi_gate"]
+        u_s = x2d @ sp["wi_up"]
+        out = out + _act(g_s, u_s, cfg.act) @ sp["wo"]
+
+    return out, stats
+
+
+def _aux_from_stats(frac, pbar, e):
+    return e * jnp.mean(frac * pbar)
+
+
+def moe_ffn(params, x, cfg, rules):
+    """x: (B, S, D) -> (out, aux_loss)."""
+    b, s, d = x.shape
+    if rules.model_axis is None:
+        out, (frac, pbar) = _moe_local(
+            params, x.reshape(-1, d), cfg, 0, cfg.n_experts, 1
+        )
+        return out.reshape(b, s, d), _aux_from_stats(frac, pbar, cfg.n_experts)
+
+    mesh = jax.sharding.get_abstract_mesh()
+    n_shards = rules.model_size
+    e_loc = cfg.n_experts // n_shards
+    batch = tuple(rules.batch_axes)
+    fsdp = tuple(rules.fsdp_axes)
+
+    # in_specs must MATCH the parameters' actual (FSDP) sharding — otherwise
+    # shard_map inserts a resharding whose transpose materializes the
+    # scan-stacked expert gradients unsharded (observed: 7.5 GiB/device
+    # buffers on llama4). The body all-gathers weights over the FSDP axes at
+    # use; the AD transpose is then a reduce-scatter and gradients stay
+    # sharded end to end.
+    expert_spec = P("model", fsdp if fsdp else None, None)
+    param_specs = {
+        "router": P(None, None),
+        "wi_gate": expert_spec,
+        "wi_up": expert_spec,
+        "wo": expert_spec,
+    }
+    if "shared" in params:
+        param_specs["shared"] = {
+            "wi_gate": P(fsdp if fsdp else None, "model"),
+            "wi_up": P(fsdp if fsdp else None, "model"),
+            "wo": P("model", fsdp if fsdp else None),
+        }
+
+    def gather_w(w, axis):
+        if not fsdp:
+            return w
+        return jax.lax.all_gather(w, fsdp, axis=axis, tiled=True)
+
+    def body(p, xb):
+        p = dict(p)
+        p["wi_gate"] = gather_w(p["wi_gate"], 1)
+        p["wi_up"] = gather_w(p["wi_up"], 1)
+        p["wo"] = gather_w(p["wo"], 1)
+        if "shared" in p:
+            sp = dict(p["shared"])
+            sp["wi_gate"] = gather_w(sp["wi_gate"], 0)
+            sp["wi_up"] = gather_w(sp["wi_up"], 0)
+            sp["wo"] = gather_w(sp["wo"], 1)
+            p["shared"] = sp
+        t = xb.shape[0] * xb.shape[1]
+        e_lo = jax.lax.axis_index("model") * e_loc
+        out, (frac, pbar) = _moe_local(p, xb.reshape(t, -1), cfg, e_lo, e_loc, n_shards)
+        out = jax.lax.psum(out, "model")
+        if batch:  # reduce router stats over token shards BEFORE the product
+            frac = jax.lax.pmean(frac, batch)
+            pbar = jax.lax.pmean(pbar, batch)
+        aux = _aux_from_stats(frac, pbar, cfg.n_experts)
+        return out.reshape(xb.shape), aux
+
+    out, aux = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(param_specs, P(batch, None, None)),
+        out_specs=(P(batch, None, None), P()),
+        check_vma=False,
+    )(params, x)
+    return out, aux

@@ -1,0 +1,208 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) blocks.
+
+Chunked SSD: the sequence is split into chunks of ``cfg.ssm_chunk``; within a
+chunk the output is the dual quadratic (attention-like) form; across chunks a
+sequential O(S/Q)-step ``lax.scan`` carries the (H, P, N) state. Decode is
+the O(1) recurrent step with a rolling depthwise-conv state.
+
+Sharding: heads (and the inner channel dim) over ``model``; the (g=1, N)
+B/C projections are small and replicated; states are head-sharded.
+``ngroups == 1`` is assumed (true for every assigned architecture).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import _init_dense
+
+
+def init_mamba2(key, cfg, dtype):
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h, w = cfg.ssm_ngroups, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_conv
+    assert g == 1, "ngroups > 1 not supported"
+    keys = jax.random.split(key, 6)
+    params = {
+        "w_zx": _init_dense(keys[0], (d, 2 * di), d, dtype),
+        "w_bc": _init_dense(keys[1], (d, 2 * g * n), d, dtype),
+        "w_dt": _init_dense(keys[2], (d, h), d, dtype),
+        "conv_w": (jax.random.normal(keys[3], (w, di + 2 * g * n), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di + 2 * g * n,), dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),  # A = -exp(a_log) = -1
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.zeros((di,), jnp.float32),
+        "w_out": _init_dense(keys[4], (di, d), di, dtype),
+    }
+    spec = {
+        "w_zx": P(None, "model"),
+        "w_bc": P(None, None),
+        "w_dt": P(None, "model"),
+        "conv_w": P(None, None),
+        "conv_b": P(None),
+        "a_log": P("model"),
+        "d_skip": P("model"),
+        "dt_bias": P("model"),
+        "norm": P("model"),
+        "w_out": P("model", None),
+    }
+    return params, spec
+
+
+def _gated_rmsnorm(y, z, scale, eps):
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * (1.0 + scale)).astype(y.dtype)
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B, S, C), w: (W, C)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    return out + b[None, None, :]
+
+
+def _segsum(dta):
+    """(B, C, H, Q) log-decays -> (B, C, H, Q, Q) lower-triangular
+    L[i, j] = sum_{k=j+1..i} dta[k] (and -inf above the diagonal)."""
+    q = dta.shape[-1]
+    cs = jnp.cumsum(dta, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _projections(params, x, cfg):
+    zx = x @ params["w_zx"]
+    z, xin = jnp.split(zx, 2, axis=-1)
+    bc = x @ params["w_bc"]
+    dt = jax.nn.softplus(
+        (x @ params["w_dt"]).astype(jnp.float32) + params["dt_bias"]
+    )
+    return z, jnp.concatenate([xin, bc], axis=-1), dt
+
+
+def mamba2_forward(params, x, cfg, rules, initial_state=None):
+    """Chunked SSD over a full sequence. x: (B, S, D).
+
+    Returns (out, (ssm_state, conv_tail)) — final states for decode handoff.
+    """
+    b, s_true, _ = x.shape
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_headdim
+    q = min(cfg.ssm_chunk, s_true)
+    # Pad the sequence to a chunk multiple; padded positions get dt = 0 so
+    # they neither update the state (dt*B*x = 0) nor decay it (exp(0*A) = 1).
+    s = (s_true + q - 1) // q * q
+    if s != s_true:
+        x = jnp.pad(x, ((0, 0), (0, s - s_true), (0, 0)))
+    nc = s // q
+
+    z, conv_in, dt = _projections(params, x, cfg)  # dt: (B, S, H)
+    if s != s_true:
+        valid = (jnp.arange(s) < s_true)[None, :, None]
+        dt = dt * valid
+    conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv_w"], params["conv_b"]))
+    xin, b_in, c_in = (
+        conv_out[..., :di],
+        conv_out[..., di : di + n],
+        conv_out[..., di + n :],
+    )
+
+    xc = xin.reshape(b, nc, q, h, p)
+    bc_ = b_in.reshape(b, nc, q, n)
+    cc_ = c_in.reshape(b, nc, q, n)
+    dtc = dt.reshape(b, nc, q, h)
+    a = -jnp.exp(params["a_log"])  # (H,)
+    dtac = dtc * a[None, None, None, :]  # (B, nc, Q, H) log-decay
+
+    dta_h = jnp.moveaxis(dtac, -1, -2)  # (B, nc, H, Q)
+    decay = jnp.exp(_segsum(dta_h))  # (B, nc, H, Q, Q)
+
+    # intra-chunk dual quadratic form
+    cb = jnp.einsum("bcin,bcjn->bcij", cc_, bc_)  # (B, nc, Q, Q)
+    dtj = jnp.moveaxis(dtc, -1, -2)  # (B, nc, H, Q)
+    scores = cb[:, :, None, :, :] * decay * dtj[:, :, :, None, :]
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", scores.astype(jnp.float32), xc.astype(jnp.float32))
+
+    # chunk-boundary states
+    cum = jnp.cumsum(dtac, axis=2)  # (B, nc, Q, H)
+    rem = jnp.exp(cum[:, :, -1:, :] - cum)  # decay j -> chunk end
+    wx = xc.astype(jnp.float32) * (dtc * rem)[..., None]  # (B, nc, Q, H, P)
+    s_chunk = jnp.einsum("bcjn,bcjhp->bchpn", bc_.astype(jnp.float32), wx)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(jnp.sum(dtac, axis=2))  # (B, nc, H)
+    state0 = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def scan_body(state, inputs):
+        s_c, dec = inputs
+        prev = state
+        state = state * dec[..., None, None] + s_c
+        return state, prev
+
+    final_state, prev_states = jax.lax.scan(
+        scan_body,
+        state0,
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B, nc, H, P, N)
+
+    in_decay = jnp.exp(cum)  # (B, nc, Q, H)
+    y_inter = jnp.einsum("bcin,bchpn->bcihp", cc_.astype(jnp.float32), prev_states)
+    y_inter = y_inter * in_decay[..., None]
+
+    y = y_intra + y_inter
+    y = y + xc.astype(jnp.float32) * params["d_skip"][None, None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    if s != s_true:
+        y = y[:, :s_true]
+        z = z[:, :s_true]
+
+    y = _gated_rmsnorm(y, z, params["norm"], cfg.norm_eps)
+    out = y @ params["w_out"]
+    out = rules.act(out, "act")
+
+    conv_tail = conv_in[:, s_true - (cfg.ssm_conv - 1) : s_true, :]
+    return out, (final_state, conv_tail)
+
+
+def mamba2_decode(params, x, cfg, rules, state):
+    """One-token recurrent step. x: (B, 1, D); state = (ssm, conv_tail)."""
+    b = x.shape[0]
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_headdim
+    ssm_state, conv_tail = state  # (B, H, P, N), (B, W-1, C)
+
+    z, conv_in, dt = _projections(params, x, cfg)
+    dt = dt[:, 0]  # (B, H)
+    window = jnp.concatenate([conv_tail, conv_in], axis=1)  # (B, W, C)
+    conv_out = jax.nn.silu(
+        jnp.sum(window * params["conv_w"][None], axis=1) + params["conv_b"][None]
+    )  # (B, C)
+    xin, b_t, c_t = (
+        conv_out[..., :di],
+        conv_out[..., di : di + n],
+        conv_out[..., di + n :],
+    )
+    xh = xin.reshape(b, h, p).astype(jnp.float32)
+
+    a = -jnp.exp(params["a_log"])
+    da = jnp.exp(dt * a[None, :])  # (B, H)
+    upd = jnp.einsum("bhp,bn->bhpn", xh * dt[..., None], b_t.astype(jnp.float32))
+    ssm_state = ssm_state * da[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", ssm_state, c_t.astype(jnp.float32))
+    y = y + xh * params["d_skip"][None, :, None]
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, params["norm"], cfg.norm_eps)
+    out = y @ params["w_out"]
+    out = rules.act(out, "act")
+    return out, (ssm_state, window[:, 1:, :])

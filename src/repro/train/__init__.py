@@ -1,0 +1,3 @@
+from repro.train import checkpoint, compression, optimizer, trainer
+from repro.train.optimizer import OptimizerConfig, adamw_update, init_opt_state
+from repro.train.trainer import TrainerConfig, make_train_step, train

@@ -1,0 +1,115 @@
+"""Sharded, atomic, async checkpointing with mesh-agnostic restore.
+
+Layout:  <dir>/step_<n>/   (written as step_<n>.tmp then renamed — atomic)
+           meta.json         {step, leaf names, shapes, dtypes}
+           <leaf-name>.npy   one file per pytree leaf (host-gathered)
+
+Fault-tolerance contract (trainer.py):
+  * writes happen on a background thread (training is never blocked);
+  * a checkpoint directory is visible only after the atomic rename, so a
+    preempted/killed job can never observe a torn checkpoint;
+  * ``latest_step``/``restore`` pick up the newest complete checkpoint —
+    restart-after-failure is just rerunning the same command;
+  * restore is *mesh-agnostic*: leaves are loaded on host and re-placed with
+    the current mesh's shardings (elastic restarts across different meshes).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.utils.log import get_logger
+from repro.utils.tree import tree_flatten_with_names
+
+log = get_logger("repro.checkpoint")
+
+_SAFE = re.compile(r"[^A-Za-z0-9_.-]")
+
+
+def _fname(name: str) -> str:
+    return _SAFE.sub("_", name)
+
+
+def save(ckpt_dir: str, step: int, tree, *, keep: int = 3, block: bool = False):
+    """Write checkpoint for ``step``. Returns a join()-able thread."""
+    host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+    def _write():
+        t0 = time.time()
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        named = tree_flatten_with_names(host_tree)
+        meta = {"step": step, "leaves": []}
+        for name, leaf in named:
+            arr = np.asarray(leaf)
+            np.save(os.path.join(tmp, _fname(name) + ".npy"), arr)
+            meta["leaves"].append(
+                {"name": name, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+            )
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        _gc(ckpt_dir, keep)
+        log.info("checkpoint step %d written in %.2fs", step, time.time() - t0)
+
+    th = threading.Thread(target=_write, daemon=True)
+    th.start()
+    if block:
+        th.join()
+    return th
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for d in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", d)
+        if m and os.path.exists(os.path.join(ckpt_dir, d, "meta.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like, shardings=None):
+    """Load checkpoint ``step`` into the structure of ``like``.
+
+    ``shardings``: optional matching pytree of NamedSharding — leaves are
+    placed onto the (possibly different) current mesh."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    named = tree_flatten_with_names(like)
+    flat_shardings = (
+        jax.tree.leaves(
+            shardings, is_leaf=lambda v: isinstance(v, jax.sharding.Sharding)
+        )
+        if shardings is not None
+        else [None] * len(named)
+    )
+    leaves = []
+    for (name, ref), shd in zip(named, flat_shardings):
+        arr = np.load(os.path.join(path, _fname(name) + ".npy"))
+        assert tuple(arr.shape) == tuple(ref.shape), (name, arr.shape, ref.shape)
+        leaves.append(jax.device_put(arr, shd) if shd is not None else arr)
+    treedef = jax.tree.structure(like)
+    return jax.tree.unflatten(treedef, leaves)

@@ -1,0 +1,2 @@
+from repro.utils.tree import param_count, param_bytes, tree_flatten_with_names
+from repro.utils.log import get_logger

@@ -1,0 +1,112 @@
+"""Parse collective traffic out of compiled HLO text (for the roofline's
+collective term — cost_analysis does not report it)."""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_LINE_RE = re.compile(
+    r"=\s*(?P<shape>[^=]*?)\s+(?P<op>"
+    + "|".join(_COLLECTIVES)
+    + r")(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len([t for t in m.group(1).split(",") if t.strip()])
+    return 1
+
+
+def parse_collectives(hlo_text: str) -> list[dict]:
+    """One record per collective op: {op, out_bytes, operand_bytes,
+    wire_bytes, group_size, line}.
+
+    operand_bytes follows the assignment convention (sum of per-device
+    operand sizes); wire_bytes is the ring-algorithm estimate.
+    """
+    out = []
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        out_bytes = _shape_bytes(m.group("shape"))
+        g = max(_group_size(line), 1)
+        if op == "all-reduce":
+            operand = out_bytes
+            wire = 2 * out_bytes * (g - 1) / g
+        elif op == "all-gather":
+            operand = out_bytes // g
+            wire = out_bytes * (g - 1) / g
+        elif op == "reduce-scatter":
+            operand = out_bytes * g
+            wire = out_bytes * (g - 1)
+        elif op == "all-to-all":
+            operand = out_bytes
+            wire = out_bytes * (g - 1) / g
+        else:  # collective-permute
+            operand = out_bytes
+            wire = out_bytes
+        out.append(
+            {
+                "op": op,
+                "out_bytes": out_bytes,
+                "operand_bytes": int(operand),
+                "wire_bytes": float(wire),
+                "group_size": g,
+                "line": line.strip()[:200],
+            }
+        )
+    return out
+
+
+def summarize_collectives(records: list[dict]) -> dict:
+    agg = defaultdict(lambda: {"count": 0, "operand_bytes": 0, "wire_bytes": 0.0})
+    for r in records:
+        a = agg[r["op"]]
+        a["count"] += 1
+        a["operand_bytes"] += r["operand_bytes"]
+        a["wire_bytes"] += r["wire_bytes"]
+    total_operand = sum(a["operand_bytes"] for a in agg.values())
+    total_wire = sum(a["wire_bytes"] for a in agg.values())
+    return {
+        "by_op": dict(agg),
+        "total_operand_bytes": total_operand,
+        "total_wire_bytes": total_wire,
+    }

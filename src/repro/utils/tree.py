@@ -1,0 +1,37 @@
+"""Pytree helpers used across the framework."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def tree_flatten_with_names(tree):
+    """Flatten a pytree into (dotted_name, leaf) pairs."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(_key_str(k) for k in path)
+        out.append((name, leaf))
+    return out
+
+
+def _key_str(k):
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def param_count(tree) -> int:
+    """Total number of scalar parameters in a pytree."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def param_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays / ShapeDtypeStructs."""
+    return sum(
+        int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+        for x in jax.tree_util.tree_leaves(tree)
+    )

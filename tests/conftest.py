@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests see the real device count (1 CPU). The dry-run-scale tests that need
+# many devices spawn subprocesses with their own XLA_FLAGS.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

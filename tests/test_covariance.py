@@ -1,0 +1,63 @@
+"""Property tests for the paper's Eq. (10)/(11) math simplifications."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.covariance import (
+    cov_matrix,
+    normalize,
+    residual_std,
+    update_cov,
+    update_data,
+)
+
+
+def _random_corr_data(seed: int, p: int, n: int):
+    rng = np.random.default_rng(seed)
+    # correlated rows via a random mixing matrix (LiNGAM-ish)
+    mix = rng.standard_normal((p, p)) * 0.4 + np.eye(p)
+    x = mix @ rng.standard_normal((p, n))
+    return jnp.asarray(x, jnp.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), p=st.integers(3, 12))
+def test_eq10_residual_variance(seed, p):
+    """var((x_i - c x_j)) == 1 - c^2 for normalized rows (paper Eq. 10)."""
+    x = normalize(_random_corr_data(seed, p, 4000))
+    c = cov_matrix(x)
+    i, j = 0, p - 1
+    r = x[i] - c[i, j] * x[j]
+    sample_var = float(jnp.sum(r * r) / (r.shape[0] - 1))
+    assert abs(sample_var - float(1 - c[i, j] ** 2)) < 1e-4
+    assert abs(float(residual_std(c[i, j])) - np.sqrt(max(sample_var, 1e-12))) < 1e-3
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), p=st.integers(3, 10))
+def test_eq11_cov_update_matches_recompute(seed, p):
+    """UpdateCovMat (Alg. 8) == covariance recomputed from UpdateData'd
+    samples (Alg. 7) — the core claim of paper Section 3.4."""
+    x = normalize(_random_corr_data(seed, p, 5000))
+    c = cov_matrix(x)
+    mask = jnp.ones((p,), bool)
+    root = 1
+
+    x2 = update_data(x, c, root, mask)
+    c2_updated = update_cov(c, root, mask)
+    live = np.asarray([k for k in range(p) if k != root])
+
+    c2_recomputed = cov_matrix(x2)
+    a = np.asarray(c2_updated)[np.ix_(live, live)]
+    b = np.asarray(c2_recomputed)[np.ix_(live, live)]
+    np.testing.assert_allclose(a, b, atol=2e-3)
+
+
+def test_update_preserves_normalization():
+    x = normalize(_random_corr_data(3, 8, 3000))
+    c = cov_matrix(x)
+    mask = jnp.ones((8,), bool)
+    x2 = update_data(x, c, 0, mask)
+    live_var = jnp.sum(x2[1:] ** 2, axis=1) / (x2.shape[1] - 1)
+    np.testing.assert_allclose(np.asarray(live_var), 1.0, atol=1e-3)

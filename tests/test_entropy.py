@@ -1,0 +1,44 @@
+"""Unit tests for the Hyvarinen entropy approximation (paper Eq. 8)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.entropy import H_GAUSS, entropy, log_cosh, u_exp_moment
+
+
+def test_gaussian_entropy_close_to_h_gauss():
+    rng = np.random.default_rng(0)
+    u = rng.standard_normal(200_000)
+    u = (u - u.mean()) / u.std()
+    h = float(entropy(jnp.asarray(u, jnp.float32)))
+    assert abs(h - H_GAUSS) < 0.01  # estimator is exact for the Gaussian
+
+
+def test_non_gaussian_entropy_below_gaussian():
+    """Gaussian maximizes entropy among unit-variance distributions."""
+    rng = np.random.default_rng(1)
+    for sample in (
+        rng.laplace(size=100_000),
+        rng.uniform(-1, 1, size=100_000),
+        np.sign(rng.standard_normal(100_000)) * np.abs(rng.standard_normal(100_000)) ** 1.5,
+    ):
+        s = (sample - sample.mean()) / sample.std()
+        h = float(entropy(jnp.asarray(s, jnp.float32)))
+        assert h < H_GAUSS + 1e-4
+
+
+def test_log_cosh_stability():
+    u = jnp.asarray([-50.0, -1.0, 0.0, 1.0, 50.0])
+    vals = log_cosh(u)
+    assert bool(jnp.all(jnp.isfinite(vals)))
+    # log cosh(0) = 0; symmetric; ~|u| - log 2 for large |u|
+    assert abs(float(vals[2])) < 1e-6
+    assert abs(float(vals[0] - vals[4])) < 1e-6
+    assert abs(float(vals[4]) - (50.0 - np.log(2.0))) < 1e-4
+
+
+def test_u_exp_moment_odd():
+    u = jnp.linspace(-4, 4, 101)
+    v = u_exp_moment(u)
+    np.testing.assert_allclose(np.asarray(v), -np.asarray(v[::-1]), atol=1e-6)

@@ -1,0 +1,46 @@
+"""HLO collective parser unit tests (synthetic lines + a real lowering)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.hlo import parse_collectives, summarize_collectives
+
+SAMPLE = """
+%all-reduce.5 = f32[1,4096,4096]{2,1,0} all-reduce(%x), channel_id=1, replica_groups=[32,16]<=[512], use_global_device_ids=true, to_apply=%add
+%ag = bf16[128,1024]{1,0} all-gather(%y), channel_id=2, replica_groups=[4,8]<=[32], dimensions={0}
+%rs = f32[16,64]{1,0} reduce-scatter(%z), channel_id=3, replica_groups=[2,4]<=[8], to_apply=%add
+%cp = bf16[8,8]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+%done = f32[4]{0} all-reduce-done(%ar)
+"""
+
+
+def test_parse_sample():
+    recs = parse_collectives(SAMPLE)
+    ops = [r["op"] for r in recs]
+    assert ops == ["all-reduce", "all-gather", "reduce-scatter", "collective-permute"]
+    ar = recs[0]
+    assert ar["out_bytes"] == 4096 * 4096 * 4
+    assert ar["group_size"] == 16
+    assert ar["operand_bytes"] == ar["out_bytes"]
+    ag = recs[1]
+    assert ag["group_size"] == 8
+    assert ag["operand_bytes"] == 128 * 1024 * 2 // 8
+    rs = recs[2]
+    assert rs["operand_bytes"] == 16 * 64 * 4 * 4
+
+
+def test_summarize():
+    s = summarize_collectives(parse_collectives(SAMPLE))
+    assert s["total_operand_bytes"] > 0
+    assert set(s["by_op"]) == {
+        "all-reduce", "all-gather", "reduce-scatter", "collective-permute"
+    }
+
+
+def test_real_lowering_has_no_collectives_single_device():
+    comp = jax.jit(lambda x: (x @ x).sum()).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ).compile()
+    recs = parse_collectives(comp.as_text())
+    assert recs == []

@@ -1,0 +1,94 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + no NaNs; prefill/decode == full forward."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import lm
+
+
+@pytest.fixture(scope="module")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("name", configs.ARCH_NAMES)
+def test_train_step_no_nans(name, rng_key):
+    cfg = configs.smoke(name)
+    params = lm.init_params(rng_key, cfg, dtype=jnp.float32)
+    b, s = 2, 32
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s + 1), 0, cfg.vocab)
+    batch = {"tokens": tokens}
+    if cfg.enc_dec:
+        batch["enc"] = jax.random.normal(
+            jax.random.PRNGKey(2), (b, cfg.enc_len, cfg.d_model), jnp.float32
+        )
+    loss, grads = jax.value_and_grad(
+        lambda p: lm.train_loss(p, batch, cfg)
+    )(params)
+    assert np.isfinite(float(loss))
+    assert float(loss) < 1.2 * np.log(cfg.vocab_padded)
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("name", configs.ARCH_NAMES)
+def test_forward_shapes(name, rng_key):
+    cfg = configs.smoke(name)
+    params = lm.init_params(rng_key, cfg, dtype=jnp.float32)
+    b, s = 2, 32
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    enc = (
+        jax.random.normal(jax.random.PRNGKey(2), (b, cfg.enc_len, cfg.d_model), jnp.float32)
+        if cfg.enc_dec else None
+    )
+    logits, aux = lm.forward(params, tokens, cfg, enc_in=enc)
+    assert logits.shape == (b, s, cfg.vocab_padded)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+
+@pytest.mark.parametrize("name", configs.ARCH_NAMES)
+def test_prefill_decode_consistency(name, rng_key):
+    cfg = configs.smoke(name)
+    params = lm.init_params(rng_key, cfg, dtype=jnp.float32)
+    b, s = 2, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    enc = (
+        jax.random.normal(jax.random.PRNGKey(2), (b, cfg.enc_len, cfg.d_model), jnp.float32)
+        if cfg.enc_dec else None
+    )
+    logits_full, _ = lm.forward(params, tokens, cfg, enc_in=enc)
+    last_logits, caches = lm.prefill(params, tokens[:, : s - 1], cfg, max_seq=s, enc_in=enc)
+    np.testing.assert_allclose(
+        np.asarray(last_logits), np.asarray(logits_full[:, s - 2]), atol=2e-4
+    )
+    pos = jnp.full((b,), s - 1, jnp.int32)
+    dec_logits, _ = lm.decode_step(params, tokens[:, s - 1], caches, pos, cfg)
+    np.testing.assert_allclose(
+        np.asarray(dec_logits), np.asarray(logits_full[:, s - 1]), atol=2e-4
+    )
+
+
+def test_config_registry_complete():
+    assert len(configs.ARCH_NAMES) == 10
+    for name in configs.ARCH_NAMES:
+        full = configs.get(name)
+        assert full.n_groups >= 1
+        assert full.vocab_padded % 256 == 0
+        smoke = configs.smoke(name)
+        assert smoke.family == full.family
+        assert smoke.param_count() < full.param_count()
+
+
+def test_param_count_sane():
+    # sanity: analytic parameter counts are in the right ballpark
+    approx = {
+        "yi-34b": 34e9, "gemma3-12b": 12e9, "granite-3-2b": 2.6e9,
+        "gemma-7b": 8.5e9, "chameleon-34b": 34e9, "mamba2-370m": 0.4e9,
+    }
+    for name, expect in approx.items():
+        got = configs.get(name).param_count()
+        assert 0.5 * expect < got < 1.8 * expect, (name, got, expect)

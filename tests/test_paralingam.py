@@ -1,0 +1,108 @@
+"""ParaLiNGAM == DirectLiNGAM exactness + threshold/messaging behaviour."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import direct_lingam, sem
+from repro.core.covariance import cov_matrix, normalize
+from repro.core.pairwise import dense_scores, pair_stat_matrix, residual_entropy_matrix, row_entropies
+from repro.core.paralingam import (
+    ParaLiNGAMConfig,
+    causal_order,
+    find_root_dense,
+    find_root_threshold,
+    fit,
+)
+
+
+def _data(p=8, n=3000, seed=0, density="sparse"):
+    return sem.generate(sem.SemSpec(p=p, n=n, density=density, seed=seed))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("density", ["sparse", "dense"])
+def test_dense_matches_serial_oracle(seed, density):
+    data = _data(p=7, n=2500, seed=seed, density=density)
+    serial = direct_lingam.causal_order(data["x"])
+    res = causal_order(data["x"], ParaLiNGAMConfig(method="dense", min_bucket=8))
+    assert res.order == serial
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_threshold_matches_serial_oracle(seed):
+    data = _data(p=8, n=2500, seed=seed)
+    serial = direct_lingam.causal_order(data["x"])
+    res = causal_order(
+        data["x"],
+        ParaLiNGAMConfig(method="threshold", chunk=4, min_bucket=8),
+    )
+    assert res.order == serial
+    # threshold must never do more work than the messaging-only baseline
+    assert res.comparisons <= res.comparisons_dense
+    assert res.comparisons_serial == 2 * res.comparisons_dense
+
+
+def test_threshold_saves_comparisons():
+    data = _data(p=16, n=2000, seed=5)
+    res = causal_order(
+        data["x"],
+        ParaLiNGAMConfig(method="threshold", chunk=4, min_bucket=16, gamma0=1e-6),
+    )
+    assert 0.0 < res.saving_vs_serial < 1.0
+    # messaging alone halves comparisons; threshold should add on top
+    assert res.saving_vs_serial > 0.5
+
+
+def test_recovers_true_causal_order():
+    data = _data(p=10, n=6000, seed=7)
+    res = causal_order(data["x"], ParaLiNGAMConfig(method="dense"))
+    assert sem.is_valid_causal_order(res.order, data["b_true"])
+
+
+def test_fit_recovers_strengths():
+    data = _data(p=8, n=8000, seed=11)
+    res, b = fit(data["x"])
+    assert sem.is_valid_causal_order(res.order, data["b_true"])
+    np.testing.assert_allclose(b, data["b_true"], atol=0.12)
+
+
+def test_stat_matrix_antisymmetric():
+    """I(i, j) = -I(j, i) — the messaging identity (paper Section 3.1)."""
+    data = _data(p=9, n=2000, seed=2)
+    xn = normalize(jnp.asarray(data["x"], jnp.float32))
+    c = cov_matrix(xn)
+    mask = jnp.ones((9,), bool)
+    hx = row_entropies(xn, mask)
+    hr = residual_entropy_matrix(xn, c, block_j=9)
+    stat = pair_stat_matrix(hx, hr)
+    np.testing.assert_allclose(
+        np.asarray(stat), -np.asarray(stat).T, atol=1e-5
+    )
+
+
+def test_threshold_same_root_as_dense_per_iteration():
+    data = _data(p=12, n=2000, seed=9)
+    x = normalize(jnp.asarray(data["x"], jnp.float32))
+    c = cov_matrix(x)
+    mask = jnp.ones((12,), bool)
+    root_d, _ = find_root_dense(x, c, mask, block_j=12)
+    root_t, s, comps, rounds = find_root_threshold(
+        x, c, mask, 1e-6, 2.0, chunk=4
+    )
+    assert int(root_d) == int(root_t)
+    assert int(comps) <= 12 * 11 // 2
+
+
+def test_bucketing_equivalence():
+    data = _data(p=10, n=1500, seed=4)
+    r1 = causal_order(data["x"], ParaLiNGAMConfig(method="dense", bucket=True, min_bucket=4))
+    r2 = causal_order(data["x"], ParaLiNGAMConfig(method="dense", bucket=False))
+    assert r1.order == r2.order
+
+
+def test_kernel_backed_dense_matches():
+    data = _data(p=8, n=1024, seed=6)
+    r1 = causal_order(data["x"], ParaLiNGAMConfig(method="dense", use_kernel=False))
+    r2 = causal_order(data["x"], ParaLiNGAMConfig(method="dense", use_kernel=True))
+    assert r1.order == r2.order

@@ -1,0 +1,52 @@
+"""MXU polynomial-moment scorer: approximation quality + hybrid exactness."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import sem
+from repro.core.covariance import cov_matrix, normalize
+from repro.core.pairwise import dense_scores
+from repro.core.paralingam import find_root_dense
+from repro.core.poly_scores import hybrid_find_root, poly_scores
+
+
+def _setup(p, n, seed):
+    data = sem.generate(sem.SemSpec(p=p, n=n, density="sparse", seed=seed))
+    xn = normalize(jnp.asarray(data["x"], jnp.float32))
+    return xn, cov_matrix(xn)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_poly_scores_track_exact(seed):
+    """The approximate scorer must preserve the *ranking* (it feeds the
+    hybrid candidate selection), not the absolute values."""
+    xn, c = _setup(24, 4000, seed)
+    mask = jnp.ones((24,), bool)
+    s_exact, _, _ = dense_scores(xn, c, mask, block_j=24)
+    s_approx, _ = poly_scores(xn, c, mask)
+    rank_e = np.argsort(np.argsort(np.asarray(s_exact)))
+    rank_a = np.argsort(np.argsort(np.asarray(s_approx)))
+    spearman = np.corrcoef(rank_e, rank_a)[0, 1]
+    assert spearman > 0.9, spearman
+    # and the true argmin must be inside any reasonable candidate set
+    k = 6
+    cand = np.argsort(np.asarray(s_approx))[:k]
+    assert int(np.argmin(np.asarray(s_exact))) in cand
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5])
+def test_hybrid_matches_exact_root(seed):
+    xn, c = _setup(32, 3000, seed)
+    mask = jnp.ones((32,), bool)
+    root_exact, _ = find_root_dense(xn, c, mask, block_j=32)
+    root_hybrid, _ = hybrid_find_root(xn, c, mask, top_k=8)
+    assert int(root_exact) == int(root_hybrid)
+
+
+def test_hybrid_with_mask():
+    xn, c = _setup(16, 2000, 7)
+    mask = jnp.ones((16,), bool).at[3].set(False).at[9].set(False)
+    root_exact, _ = find_root_dense(xn, c, mask, block_j=16)
+    root_hybrid, _ = hybrid_find_root(xn, c, mask, top_k=6)
+    assert int(root_exact) == int(root_hybrid)

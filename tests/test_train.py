@@ -1,0 +1,133 @@
+"""Trainer substrate: optimizer, checkpoint/restart, accumulation, watchdog."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import (
+    OptimizerConfig,
+    adamw_update,
+    init_opt_state,
+    schedule,
+)
+from repro.train.trainer import TrainerConfig, Watchdog, make_train_step, train
+
+
+def _quadratic_loss(params, batch):
+    return jnp.sum((params["w"] - batch["target"]) ** 2)
+
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.ones((4, 4)) * 5.0}
+    opt = init_opt_state(params)
+    cfg = OptimizerConfig(lr=0.2, warmup_steps=0, total_steps=300, weight_decay=0.0)
+    batch = {"target": jnp.zeros((4, 4))}
+    step = jax.jit(make_train_step(_quadratic_loss, cfg, cast_bf16=False))
+    for _ in range(300):
+        params, opt, metrics = step(params, opt, batch)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_schedule_warmup_and_decay():
+    cfg = OptimizerConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    assert float(schedule(cfg, jnp.asarray(0))) == 0.0
+    assert abs(float(schedule(cfg, jnp.asarray(10))) - 1e-3) < 1e-9
+    assert float(schedule(cfg, jnp.asarray(100))) < 1.1 * cfg.min_lr_frac * cfg.lr
+
+
+def test_grad_accumulation_equivalence():
+    """accum_steps=4 must give the same update as one big batch."""
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+
+    def loss(params, batch):
+        return jnp.mean((batch["x"] @ params["w"] - batch["y"]) ** 2)
+
+    cfg = OptimizerConfig(lr=1e-2, warmup_steps=0)
+    p1, o1, _ = make_train_step(loss, cfg, cast_bf16=False)(
+        {"w": w}, init_opt_state({"w": w}), {"x": x, "y": y}
+    )
+    p4, o4, _ = make_train_step(loss, cfg, cast_bf16=False, accum_steps=4)(
+        {"w": w}, init_opt_state({"w": w}), {"x": x, "y": y}
+    )
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p4["w"]), atol=1e-5)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "nested": {"b": jnp.ones((2,), jnp.int32)},
+    }
+    ckpt.save(str(tmp_path), 7, tree, block=True)
+    assert ckpt.latest_step(str(tmp_path)) == 7
+    restored = ckpt.restore(str(tmp_path), 7, tree)
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(tree["a"]))
+    np.testing.assert_array_equal(
+        np.asarray(restored["nested"]["b"]), np.asarray(tree["nested"]["b"])
+    )
+
+
+def test_checkpoint_keep_k(tmp_path):
+    tree = {"a": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, tree, keep=2, block=True)
+    assert ckpt.all_steps(str(tmp_path)) == [4, 5]
+
+
+def test_train_resume_from_checkpoint(tmp_path):
+    """Kill-and-restart: the second run must resume, not restart."""
+    params = {"w": jnp.ones((2, 2)) * 3.0}
+
+    def batch_fn(step):
+        return {"target": jnp.zeros((2, 2))}
+
+    tcfg = TrainerConfig(
+        total_steps=6, ckpt_dir=str(tmp_path), ckpt_every=2, log_every=100,
+        opt=OptimizerConfig(lr=0.05, warmup_steps=0, weight_decay=0.0),
+    )
+    p1, _, hist1 = train(params, _quadratic_loss, batch_fn, tcfg)
+    assert ckpt.latest_step(str(tmp_path)) == 6
+
+    # "restart" — should resume at step 6 and do nothing more
+    p2, _, hist2 = train(params, _quadratic_loss, batch_fn, tcfg)
+    assert hist2 == []
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p2["w"]))
+
+    # extend run: resumes from 6, trains to 10
+    tcfg2 = TrainerConfig(
+        total_steps=10, ckpt_dir=str(tmp_path), ckpt_every=2, log_every=100,
+        opt=tcfg.opt,
+    )
+    _, _, hist3 = train(params, _quadratic_loss, batch_fn, tcfg2)
+    assert [h["step"] for h in hist3] == [6, 7, 8, 9]
+
+
+def test_watchdog_flags_stragglers():
+    wd = Watchdog(factor=2.0)
+    for i in range(5):
+        wd.observe(i, 0.1)
+    assert not wd.stragglers
+    wd.observe(5, 1.0)
+    assert wd.stragglers and wd.stragglers[0][0] == 5
+
+
+def test_zero1_specs():
+    from jax.sharding import PartitionSpec as P
+    from repro.train.optimizer import zero1_spec_for
+
+    sizes = {"data": 16, "model": 16}
+    # model-sharded matrix gets data on its free divisible dim
+    s = zero1_spec_for((4096, 1024), P(None, "model"), ("data",), sizes)
+    assert s == P("data", "model")
+    # already data-sharded: unchanged
+    s2 = zero1_spec_for((4096, 1024), P("data", "model"), ("data",), sizes)
+    assert s2 == P("data", "model")
+    # nothing divisible: unchanged
+    s3 = zero1_spec_for((7,), P(None), ("data",), sizes)
+    assert s3 == P(None)
