@@ -11,3 +11,12 @@ configs, data, train, serve, dist, launch, utils.
 """
 
 __version__ = "1.0.0"
+
+# Installed-JAX -> target-API shims (jax.set_mesh, jax.shard_map,
+# jax.sharding.AxisType, make_mesh(axis_types=...)). Must run before any
+# subpackage (or test snippet) builds a mesh; importing anything under
+# ``repro`` goes through here first.
+from repro.dist import compat as _compat
+
+_compat.install()
+del _compat

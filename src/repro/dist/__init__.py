@@ -1,0 +1,11 @@
+"""Distributed layer: sharding rules, the ppermute ring find-root, and JAX
+API compatibility shims.
+
+Import order matters: ``repro/__init__`` — which always runs before this
+package — installs the compat shims (``repro.dist.compat.install``) so the
+newer-JAX surface (``jax.set_mesh``, ``jax.shard_map``,
+``jax.sharding.AxisType``, ``jax.make_mesh(axis_types=...)``) exists before
+any model/test code touches it.
+"""
+
+from repro.dist.sharding import NO_SHARDING, ShardingRules, make_rules

@@ -1,0 +1,174 @@
+"""Bridge the installed JAX (0.4.x) to the newer API this codebase targets.
+
+The models, launch drivers, and test suite are written against the
+post-0.6 sharding surface:
+
+  * ``jax.sharding.AxisType`` + ``jax.make_mesh(..., axis_types=...)``
+  * ``jax.set_mesh(mesh)`` as a context manager
+  * ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...)``
+  * ``jax.sharding.get_abstract_mesh()``
+
+On 0.4.x the equivalents are: no axis types (everything is "auto"), the
+``Mesh`` object's own context manager (which also enables bare-
+``PartitionSpec`` ``with_sharding_constraint`` inside jit), and
+``jax.experimental.shard_map.shard_map`` with ``check_rep``.
+
+``install()`` monkeypatches the missing attributes *onto jax itself* so
+subprocess-based tests (which build meshes from snippets that only import
+``repro``) run unmodified. Every patch is a no-op when the attribute already
+exists, so the package keeps working when the environment moves to a newer
+JAX.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+import threading
+
+import jax
+
+_LOCAL = threading.local()
+
+
+class AxisType(enum.Enum):
+    """Stand-in for ``jax.sharding.AxisType`` (sharding-in-types axis modes).
+
+    0.4.x has no explicit-sharding type system; all meshes behave as Auto.
+    The values only need to be distinct and hashable — callers pass them to
+    ``make_mesh(axis_types=...)`` where the shim drops them.
+    """
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _mesh_stack() -> list:
+    if not hasattr(_LOCAL, "stack"):
+        _LOCAL.stack = []
+    return _LOCAL.stack
+
+
+def current_mesh():
+    """The innermost mesh entered via ``jax.set_mesh`` (or None)."""
+    stack = _mesh_stack()
+    return stack[-1] if stack else None
+
+
+class _SetMesh:
+    """``jax.set_mesh`` shim supporting both real-API usages:
+
+    * plain call — ``jax.set_mesh(mesh)`` applies the mesh immediately and
+      leaves it active (the new API's global set);
+    * context manager — ``with jax.set_mesh(mesh):`` restores the previous
+      mesh on exit.
+
+    Either way the Mesh's resource-env context is entered (so bare
+    PartitionSpec sharding constraints resolve inside jit) and the mesh is
+    tracked for ``get_abstract_mesh``.
+    """
+
+    def __init__(self, mesh):
+        self.mesh = mesh
+        _mesh_stack().append(mesh)
+        mesh.__enter__()
+
+    def __enter__(self):
+        return self.mesh
+
+    def __exit__(self, *exc):
+        self.mesh.__exit__(*exc)
+        _mesh_stack().pop()
+        return False
+
+
+def _get_abstract_mesh():
+    """``jax.sharding.get_abstract_mesh`` shim.
+
+    Newer JAX returns an AbstractMesh; shard_map accepts a concrete Mesh just
+    as well, and that is all in-repo callers do with the result.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        raise RuntimeError(
+            "get_abstract_mesh(): no mesh is active — wrap the call in "
+            "`with jax.set_mesh(mesh):`"
+        )
+    return mesh
+
+
+def _wrap_make_mesh(orig):
+    @functools.wraps(orig)
+    def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+        # axis_types is the sharding-in-types annotation; 0.4.x meshes are
+        # implicitly Auto, so the argument is accepted and dropped.
+        del axis_types
+        return orig(axis_shapes, axis_names, devices=devices)
+
+    return make_mesh
+
+
+def _shard_map(f, mesh=None, in_specs=None, out_specs=None, *,
+               check_vma=None, check_rep=None, auto=frozenset()):
+    """``jax.shard_map`` shim over ``jax.experimental.shard_map.shard_map``.
+
+    ``check_vma`` (varying-manual-axes checking, the new name) maps onto
+    ``check_rep`` (replication checking, the old name). With ``mesh=None``
+    the active ``jax.set_mesh`` mesh is resolved when the wrapped function
+    is *called* — matching the real API, where the context mesh is picked up
+    at trace time, not at wrap time.
+    """
+    from jax.experimental.shard_map import shard_map as _sm
+
+    if check_rep is None:
+        check_rep = True if check_vma is None else bool(check_vma)
+    if mesh is not None:
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=check_rep, auto=auto)
+
+    @functools.wraps(f)
+    def deferred(*args, **kwargs):
+        active = current_mesh()
+        if active is None:
+            raise ValueError(
+                "shard_map: no mesh given and none active — pass mesh= or "
+                "call inside `with jax.set_mesh(mesh):`"
+            )
+        return _sm(f, mesh=active, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=check_rep, auto=auto)(*args, **kwargs)
+
+    return deferred
+
+
+def install() -> None:
+    """Idempotently install the shims onto ``jax`` / ``jax.sharding``."""
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = AxisType
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = _SetMesh
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+        jax.sharding.get_abstract_mesh = _get_abstract_mesh
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _shard_map
+    if not hasattr(jax, "make_mesh"):
+        # pre-0.4.35: build the equivalent from mesh_utils + Mesh
+        from jax.experimental import mesh_utils
+        from jax.sharding import Mesh
+
+        def _basic_make_mesh(axis_shapes, axis_names, *, devices=None):
+            devs = mesh_utils.create_device_mesh(tuple(axis_shapes), devices)
+            return Mesh(devs, tuple(axis_names))
+
+        jax.make_mesh = _basic_make_mesh
+    if not getattr(jax.make_mesh, "_repro_compat", False):
+        try:
+            import inspect
+
+            params = inspect.signature(jax.make_mesh).parameters
+        except (TypeError, ValueError):  # pragma: no cover - exotic builds
+            params = {}
+        if "axis_types" not in params:
+            wrapped = _wrap_make_mesh(jax.make_mesh)
+            wrapped._repro_compat = True
+            jax.make_mesh = wrapped

@@ -1,0 +1,243 @@
+"""ParaLiNGAM's worker decomposition as a ``shard_map`` ppermute ring.
+
+The paper assigns each of the p "workers" (variables) to a CUDA thread block;
+here each *device* owns a contiguous block of rows of the normalized data
+``xn: (p, n)`` and the corresponding rows of the correlation matrix
+``c: (p, p)``. Root-finding needs, for every live unordered pair (i, j), the
+antisymmetric statistic (paper Eq. 7, via pairwise.py)
+
+    I[i, j] = (Hx[j] - Hx[i]) + (HR[i, j] - HR[j, i])
+
+whose two residual entropies require *both* rows' samples. Instead of
+all-gathering the data, row blocks circulate around a ring: at step t each
+device computes the I block between its own rows and the visiting block, adds
+``min(0, I)^2`` into its own scores, and adds ``min(0, -I)^2`` into a score
+accumulator that travels *with* the visiting block — the paper's messaging
+mechanism (Section 3.1): one evaluation credits both endpoints.
+
+Schedule: R devices in a flat ring. Blocks shift one hop per step; after
+``R // 2`` processed steps every unordered block pair has met exactly once
+(for even R the antipodal step t = R/2 sees both orders in flight, so the
+lower-indexed device keeps it — the same dedup the paper's scheduler does
+with its atomicCAS flags, done here statically). The accumulator then rides
+the remaining hops home: total hops = R, so each block's credits arrive back
+at its owner, which adds them to its locally accumulated scores.
+
+Wire traffic per device is O(p/R * n) per step — the same as one block of
+compute input — and the p x p statistic matrix is never materialized
+globally. ``ring_find_root`` matches ``find_root_dense`` to f32 roundoff
+(identical per-entry math; only the summation order differs).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.pairwise import (
+    pair_stat_matrix,
+    residual_entropy_block,
+    row_entropies,
+)
+
+
+# ---------------------------------------------------------------------------
+# schedule (pure, unit-testable)
+# ---------------------------------------------------------------------------
+
+
+def ring_steps(r: int) -> int:
+    """Number of processed ring steps (excluding the intra-block step 0)."""
+    return r // 2
+
+
+def process_pair(r: int, t: int, dst, src):
+    """Whether device ``dst`` processes the block from ``src`` at step ``t``.
+
+    For even ``r`` the antipodal step ``t == r/2`` delivers each block pair
+    to both endpoints simultaneously; the lower-indexed device keeps it.
+    ``r`` and ``t`` are python ints; ``dst``/``src`` may be ints (schedule
+    tests) or traced device indices (the executed ring body) — the result is
+    a bool of the matching kind.
+    """
+    if t < 1 or t > ring_steps(r):
+        return False
+    if r % 2 == 0 and t == r // 2:
+        return dst < src
+    return True
+
+
+# ---------------------------------------------------------------------------
+# ring shift over one or two mesh axes
+# ---------------------------------------------------------------------------
+
+
+def _shift_by(x, s: int, axes: tuple, sizes: tuple):
+    """Shift ``x`` by ``s`` hops along the flat (row-major over ``axes``)
+    ring in one round of ppermutes: the device at flat index r receives the
+    value from r - s (mod R)."""
+    s %= math.prod(sizes)
+    if s == 0:
+        return x
+    if len(axes) == 1:
+        (a,), (n,) = axes, sizes
+        return jax.lax.ppermute(x, a, [(k, (k + s) % n) for k in range(n)])
+    # Two axes (outer, inner), row-major flat order r = o * n_i + i, with
+    # s = a * n_i + b: the sender is (o - a, i - b), minus one more outer hop
+    # for receivers whose inner index wraps (i < b).
+    (ao, ai), (no, ni) = axes, sizes
+    hop_o, hop_i = divmod(s, ni)
+    y = x if hop_i == 0 else jax.lax.ppermute(
+        x, ai, [(k, (k + hop_i) % ni) for k in range(ni)]
+    )
+    z1 = y if hop_o == 0 else jax.lax.ppermute(
+        y, ao, [(k, (k + hop_o) % no) for k in range(no)]
+    )
+    if hop_i == 0:
+        return z1
+    z2 = jax.lax.ppermute(y, ao, [(k, (k + hop_o + 1) % no) for k in range(no)])
+    i = jax.lax.axis_index(ai)
+    return jax.tree.map(lambda u, v: jnp.where(i < hop_i, v, u), z1, z2)
+
+
+def _flat_index(axes: tuple, sizes: tuple):
+    """This device's flat ring index (row-major over ``axes``)."""
+    r = jnp.zeros((), jnp.int32)
+    for a, n in zip(axes, sizes):
+        r = r * n + jax.lax.axis_index(a)
+    return r
+
+
+# ---------------------------------------------------------------------------
+# the ring body
+# ---------------------------------------------------------------------------
+
+
+def _block_stat(x_own, x_vis, c_block, hx_own, hx_vis):
+    """I block between own rows (rows of the result) and visiting rows.
+
+    ``c_block[i, j] = c[own_i, vis_j]``. Both residual entropies of each pair
+    are computed here — HR[i, j] and HR[j, i] — which is what lets one
+    evaluation credit both endpoints (messaging)."""
+    hr_fwd = residual_entropy_block(x_own, c_block, x_vis)  # H(r_own^(vis))
+    hr_rev = residual_entropy_block(x_vis, c_block.T, x_own)  # H(r_vis^(own))
+    return (hx_vis[None, :] - hx_own[:, None]) + (hr_fwd - hr_rev.T)
+
+
+def _ring_body(x_loc, c_loc, mask_loc, *, ring_axes: tuple, ring_sizes: tuple):
+    """Per-device ring schedule. x_loc: (m, n); c_loc: (m, p); mask: (m,).
+
+    Returns the (m,) score shard (inf on dead rows)."""
+    m = x_loc.shape[0]
+    big_r = math.prod(ring_sizes)
+    r_idx = _flat_index(ring_axes, ring_sizes)
+
+    hx_loc = row_entropies(x_loc, mask_loc)
+
+    def credit(i_stat, pm, keep):
+        fwd = jnp.where(pm, jnp.square(jnp.minimum(0.0, i_stat)), 0.0)
+        rev = jnp.where(pm, jnp.square(jnp.minimum(0.0, -i_stat)), 0.0)
+        k = keep.astype(fwd.dtype)
+        return k * jnp.sum(fwd, axis=1), k * jnp.sum(rev, axis=0)
+
+    # Step 0: intra-block pairs. One entropy pass gives the full HR block;
+    # the antisymmetric stat is hr - hr.T (as in the dense path), so the
+    # row-sum alone credits every ordered pair.
+    c_intra = jax.lax.dynamic_slice_in_dim(c_loc, r_idx * m, m, axis=1)
+    hr = residual_entropy_block(x_loc, c_intra, x_loc)
+    stat = pair_stat_matrix(hx_loc, hr)
+    pm = mask_loc[:, None] & mask_loc[None, :] & ~jnp.eye(m, dtype=bool)
+    score, _ = credit(stat, pm, jnp.asarray(True))
+
+    # Steps 1..R//2: the visiting block (data + entropies + mask + credit
+    # accumulator) arrives from one hop upstream each step.
+    pkt = {
+        "x": x_loc,
+        "hx": hx_loc,
+        "mask": mask_loc,
+        "acc": jnp.zeros((m,), jnp.float32),
+    }
+    for t in range(1, ring_steps(big_r) + 1):
+        pkt = _shift_by(pkt, 1, ring_axes, ring_sizes)
+        src = (r_idx - t) % big_r
+        keep = jnp.asarray(process_pair(big_r, t, r_idx, src))
+        c_vis = jax.lax.dynamic_slice_in_dim(c_loc, src * m, m, axis=1)
+        stat = _block_stat(x_loc, pkt["x"], c_vis, hx_loc, pkt["hx"])
+        pm = mask_loc[:, None] & pkt["mask"][None, :]
+        fwd, rev = credit(stat, pm, keep)
+        score = score + fwd
+        pkt["acc"] = pkt["acc"] + rev
+
+    # Ride the accumulator the rest of the way home in one multi-hop shift
+    # (total hops == R, so each block's credits land back at its owner).
+    acc = _shift_by(pkt["acc"], big_r - ring_steps(big_r), ring_axes, ring_sizes)
+    score = score + acc
+    return jnp.where(mask_loc, score, jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def ring_find_root(xn, c, mask, mesh, row_axes: tuple | None = None,
+                   unroll: bool = False):
+    """Distributed find-root. Returns ``(root_idx, scores)`` == dense.
+
+    ``row_axes`` names the mesh axes the p rows shard over (ring axes);
+    defaults to the DP axes present in ``mesh``. Axes not in ``row_axes``
+    (e.g. ``model``) run the ring replicated. Falls back to the dense
+    single-shard evaluation when the ring is degenerate (one shard, or p not
+    divisible by the shard count). ``unroll`` is accepted for signature
+    parity with the dense path: the ring schedule is always a statically
+    unrolled python loop (R is a mesh constant).
+    """
+    del unroll
+    sizes = dict(mesh.shape)
+    if row_axes is None:
+        row_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    row_axes = tuple(a for a in row_axes if sizes.get(a, 1) > 1)
+    big_r = 1
+    for a in row_axes:
+        big_r *= sizes[a]
+    p = xn.shape[0]
+
+    if big_r <= 1 or p % big_r != 0 or len(row_axes) > 2:
+        from repro.core.pairwise import dense_scores
+
+        s, _, _ = dense_scores(xn, c, mask, block_j=min(32, p))
+        return jnp.argmin(s), s
+
+    ring_sizes = tuple(sizes[a] for a in row_axes)
+    # jax.shard_map is the compat-installed surface on 0.4.x and the real
+    # API on newer JAX (where jax.experimental.shard_map no longer exists).
+    body = jax.shard_map(
+        lambda x, cm, mk: _ring_body(
+            x, cm, mk, ring_axes=row_axes, ring_sizes=ring_sizes
+        ),
+        mesh=mesh,
+        in_specs=(P(row_axes, None), P(row_axes, None), P(row_axes)),
+        out_specs=P(row_axes),
+        check_vma=False,
+    )
+    scores = body(xn, c, mask)
+    return jnp.argmin(scores), scores
+
+
+def ring_find_root_jit(mesh):
+    """jit-compiled ring find-root over *all* devices of ``mesh``.
+
+    The (possibly multi-dim) mesh is flattened to a single ``ring`` axis so
+    every device owns one row block — the paper's worker decomposition with
+    workers == devices.
+    """
+    flat = Mesh(mesh.devices.reshape(-1), ("ring",))
+
+    @jax.jit
+    def fn(xn, c, mask):
+        return ring_find_root(xn, c, mask, flat, row_axes=("ring",))
+
+    return fn

@@ -1,0 +1,142 @@
+"""Sharding rules: the single mapping from (config, mesh) to PartitionSpecs.
+
+The production mesh axes (launch/mesh.py) are ``("data", "model")`` per pod,
+with an optional leading ``"pod"`` axis at multi-pod scale:
+
+  * ``data`` (+ ``pod``)  — batch / DP axes. Activations shard their leading
+    batch dim here; with FSDP enabled (train cells) the fp32 training state
+    is additionally sharded over these axes.
+  * ``model``             — TP axis. Weights shard per the layer init specs
+    (layers.py / attention.py / moe.py); activations pick up the matching
+    constraints through ``ShardingRules.act``.
+
+``ShardingRules`` carries the axis assignment plus two beyond-paper toggles
+used by launch/specs.py: ``context_parallel`` (shard the *sequence* dim of
+the residual stream over ``model`` instead of the head dim) and
+``shard_heads`` (constrain attention head dims over ``model``).
+
+``NO_SHARDING`` is the single-device identity instance every model entry
+point defaults to — ``act`` is a no-op and all axis names are None, so the
+same model code runs unsharded in smoke tests.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _mesh_sizes(mesh) -> dict:
+    """axis name -> size for a Mesh/AbstractMesh (or a stub with .shape)."""
+    if mesh is None:
+        return {}
+    return dict(mesh.shape)
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Per-tensor-kind activation sharding for one (config, mesh) pair."""
+
+    mesh: Any = None
+    batch_axes: tuple = ()
+    model_axis: str | None = None
+    fsdp_axes: tuple = ()
+    context_parallel: bool = False
+    shard_heads: bool = True
+
+    # -- axis sizes ---------------------------------------------------------
+
+    @property
+    def model_size(self) -> int:
+        if self.model_axis is None:
+            return 1
+        return _mesh_sizes(self.mesh).get(self.model_axis, 1)
+
+    @property
+    def batch_shards(self) -> int:
+        sizes = _mesh_sizes(self.mesh)
+        n = 1
+        for a in self.batch_axes:
+            n *= sizes.get(a, 1)
+        return n
+
+    # -- activation specs ---------------------------------------------------
+
+    def spec(self, shape: tuple, kind: str) -> P:
+        """PartitionSpec for an activation of ``shape`` and ``kind``.
+
+        Kinds (see call sites in models/):
+          act       (B, S, D)      residual stream
+          ffn       (B, S, F)      gated-MLP hidden
+          logits    (B, S, V)      unembedded logits
+          heads     (B, S, H, dh)  post-RoPE q (and full-rank MLA q/k)
+          kv_heads  (B, S, KV, dh) post-RoPE k/v
+          mla_cache (B, S, r)      MLA latent cache rows
+        Axes that do not divide the corresponding dim are dropped (sharding
+        constraints are hints; an uneven hint is never worth a reshard).
+        """
+        b = tuple(self.batch_axes) or None
+        m = self.model_axis
+        seq = m if self.context_parallel else None
+        heads = m if (self.shard_heads and not self.context_parallel) else None
+        table = {
+            "act": (b, seq, None),
+            "ffn": (b, seq, m if not self.context_parallel else None),
+            "logits": (b, seq, m if not self.context_parallel else None),
+            "heads": (b, seq, heads, None),
+            "kv_heads": (b, seq, heads, None),
+            "mla_cache": (b, seq, None),
+        }
+        parts = table.get(kind)
+        if parts is None or len(parts) != len(shape):
+            # Unknown kind / rank mismatch: constrain the batch dim only.
+            parts = (b,) + (None,) * (len(shape) - 1)
+        sizes = _mesh_sizes(self.mesh)
+
+        def ok(dim: int, axes) -> bool:
+            if axes is None:
+                return False
+            names = axes if isinstance(axes, tuple) else (axes,)
+            total = 1
+            for a in names:
+                total *= sizes.get(a, 1)
+            return total > 1 and dim % total == 0
+
+        return P(*[a if ok(d, a) else None for d, a in zip(shape, parts)])
+
+    def act(self, x, kind: str):
+        """Apply the activation sharding constraint for ``kind`` (identity
+        when unsharded or when no axis survives the divisibility check)."""
+        if self.mesh is None:
+            return x
+        spec = self.spec(x.shape, kind)
+        if all(a is None for a in spec):
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+
+NO_SHARDING = ShardingRules()
+
+
+def make_rules(cfg, mesh, batch_axes: tuple | None = None) -> ShardingRules:
+    """Build the rules for ``cfg`` on ``mesh`` (axes ``pod``/``data``/``model``).
+
+    * batch axes default to every present DP axis with size > 1; pass
+      ``batch_axes=()`` to replicate the batch (e.g. global_batch=1 cells).
+    * ``model`` becomes the TP axis when present with size > 1 — except for
+      MoE configs whose expert count does not divide it (expert parallelism
+      requires e % shards == 0), which fall back to replicated compute.
+    """
+    sizes = _mesh_sizes(mesh)
+    if batch_axes is None:
+        batch_axes = tuple(a for a in ("pod", "data") if sizes.get(a, 1) > 1)
+    model_axis = "model" if sizes.get("model", 1) > 1 else None
+    n_experts = getattr(cfg, "n_experts", 0) or 0
+    if model_axis is not None and n_experts and n_experts % sizes["model"] != 0:
+        model_axis = None
+    return ShardingRules(
+        mesh=mesh, batch_axes=tuple(batch_axes), model_axis=model_axis
+    )

@@ -30,6 +30,14 @@ from repro.launch.specs import make_cell
 from repro.utils.hlo import parse_collectives, summarize_collectives
 
 
+def _cost_dict(compiled) -> dict:
+    # jaxlib < 0.5 returns a one-element list of per-device dicts.
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def _mem_dict(mem) -> dict:
     return {
         k: getattr(mem, k)
@@ -59,7 +67,7 @@ def compile_cell(cfg, shape, mesh, verbose: bool = True,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     colls = parse_collectives(compiled.as_text())
     rec = {
         "cell": cell.name,
@@ -181,7 +189,7 @@ def lingam_cells(mesh) -> list[dict]:
                 with jax.set_mesh(mesh):
                     lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
                     compiled = lowered.compile()
-                cost = compiled.cost_analysis()
+                cost = _cost_dict(compiled)
                 colls = parse_collectives(compiled.as_text())
                 rec = {
                     "cell": f"{name}/{fn_name}",

@@ -1,6 +1,36 @@
+import importlib.util
 import os
 import sys
+
+import pytest
 
 # Tests see the real device count (1 CPU). The dry-run-scale tests that need
 # many devices spawn subprocesses with their own XLA_FLAGS.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Optional dev dependency (requirements-dev.txt): property tests need
+# hypothesis; without it, skip collecting those modules instead of erroring
+# the whole run (conftest-level importorskip).
+_HYPOTHESIS_MODULES = ("test_covariance.py",)
+collect_ignore = (
+    [] if importlib.util.find_spec("hypothesis") else list(_HYPOTHESIS_MODULES)
+)
+
+# Subprocess-driven multi-device suites: each test spawns a fresh python with
+# --xla_force_host_platform_device_count and recompiles from scratch — by far
+# the slowest part of the suite. Marked ``slow`` so CI can run a fast
+# ``-m "not slow"`` lane; the full lane still runs everything.
+_SLOW_MODULES = {"test_distributed.py", "test_elastic.py"}
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: subprocess-based multi-device tests (excluded from the fast CI lane)",
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        if os.path.basename(str(item.fspath)) in _SLOW_MODULES:
+            item.add_marker(pytest.mark.slow)

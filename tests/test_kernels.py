@@ -88,8 +88,10 @@ def test_ssd_decode_kernel_matches_ref(b, h, p_dim, n):
     np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), rtol=1e-5, atol=1e-5)
 
 
-def test_ssd_decode_kernel_matches_model_decode():
-    """The kernel's math == the model's mamba2_decode state update."""
+@pytest.mark.parametrize("block_h", [8, 2])  # default and non-default tiling
+def test_ssd_decode_kernel_matches_model_decode(block_h):
+    """The kernel's math == the model's mamba2_decode state update, for the
+    default head-block and a non-default one (grid (B, H/BH) changes)."""
     from repro.kernels.ssd_decode import ssd_decode
     from repro import configs
     from repro.models import ssm as ssm_mod
@@ -119,6 +121,6 @@ def test_ssd_decode_kernel_matches_model_decode():
     c_t = conv_out[..., di + n :]
     a = -jnp.exp(params["a_log"])
     y_k, s_k = ssd_decode(state0[0], xin, dt[:, 0], b_t, c_t, a,
-                          params["d_skip"], block_h=8, interpret=True)
+                          params["d_skip"], block_h=block_h, interpret=True)
     np.testing.assert_allclose(np.asarray(s_k), np.asarray(state_ref_new),
                                rtol=1e-5, atol=1e-5)
