@@ -23,16 +23,16 @@ from benchmarks.common import row, time_fn
 from repro.core import sem
 from repro.core.covariance import VAR_EPS, cov_matrix, normalize
 from repro.core.entropy import entropy, entropy_from_moments, log_cosh, u_exp_moment
-from repro.core.pairwise import dense_scores, residual_entropy_matrix, row_entropies, pair_stat_matrix, scores_from_stats
+from repro.core.pairwise import dense_scores, fused_scores, residual_entropy_matrix, row_entropies, pair_stat_matrix, scores_from_stats
 from repro.core.paralingam import find_root_threshold
 
 P, N = 128, 2048
 
 
-def _setup():
-    data = sem.generate(sem.SemSpec(p=P, n=N, density="sparse", seed=0))
+def _setup(p, n):
+    data = sem.generate(sem.SemSpec(p=p, n=n, density="sparse", seed=0))
     xn = normalize(jnp.asarray(data["x"], jnp.float32))
-    return xn, cov_matrix(xn), jnp.ones((P,), bool)
+    return xn, cov_matrix(xn), jnp.ones((p,), bool)
 
 
 @jax.jit
@@ -73,7 +73,7 @@ def _block_worker(xn, c, mask):
         hr_r = entropy(u_r)
         return (hx[j] - hx) + (hr_f - hr_r)
 
-    cols = [one_col(j) for j in range(P)]
+    cols = [one_col(j) for j in range(xn.shape[0])]
     stat = jnp.stack(cols, axis=1)
     return jnp.argmin(scores_from_stats(stat, mask))
 
@@ -84,13 +84,18 @@ def _paralingam(xn, c, mask):
     return root
 
 
-def run():
-    xn, c, mask = _setup()
+def run(smoke: bool = False):
+    p, n = (64, 512) if smoke else (P, N)
+    xn, c, mask = _setup(p, n)
 
     @jax.jit
     def ours_dense(xn, c, mask):
         s, _, _ = dense_scores(xn, c, mask, block_j=32)
         return jnp.argmin(s)
+
+    @jax.jit
+    def ours_fused(xn, c, mask):
+        return jnp.argmin(fused_scores(xn, c, mask, block=32))
 
     roots = {}
     t_ours = time_fn(ours_dense, xn, c, mask)
@@ -100,9 +105,12 @@ def run():
         ("thread_worker", _thread_worker),
         ("block_compare", _block_compare),
         ("paralingam_threshold", _paralingam),
+        ("fused_triangular", ours_fused),
     ):
         us = time_fn(fn, xn, c, mask)
         roots[name] = int(fn(xn, c, mask))
-        row(f"fig3_{name}_p{P}", us, f"vs_dense={us / t_ours:.2f}x")
-    row(f"fig3_dense_messaging_p{P}", t_ours,
-        f"all_roots_match={len(set(roots.values())) == 1}")
+        row(f"fig3_{name}_p{p}", us, f"vs_dense={us / t_ours:.2f}x",
+            p=p, n=n, variant=name)
+    row(f"fig3_dense_messaging_p{p}", t_ours,
+        f"all_roots_match={len(set(roots.values())) == 1}", p=p, n=n,
+        variant="dense_messaging")

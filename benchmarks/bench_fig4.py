@@ -15,10 +15,11 @@ from repro.core import direct_lingam, sem
 from repro.core.paralingam import ParaLiNGAMConfig, causal_order
 
 
-def run():
+def run(smoke: bool = False):
+    cells = ((32, 256), (64, 256)) if smoke else ((100, 1024), (200, 1024), (100, 4096))
     serial_ref = None  # (p, n, seconds)
     for density in ("sparse", "dense"):
-        for p, n in ((100, 1024), (200, 1024), (100, 4096)):
+        for p, n in cells:
             x = sem.generate(sem.SemSpec(p=p, n=n, density=density, seed=3))["x"]
             t0 = time.time()
             res = causal_order(x, ParaLiNGAMConfig(method="dense"))
@@ -34,4 +35,5 @@ def run():
                 p0, n0, t0s = serial_ref
                 est = t0s * (p / p0) ** 3 * (n / n0)
                 derived = f"serial_est_s={est:.1f};speedup_est={est/t_para:.1f}x"
-            row(f"fig4_{density}_p{p}_n{n}", t_para * 1e6, derived)
+            row(f"fig4_{density}_p{p}_n{n}", t_para * 1e6, derived,
+                p=p, n=n, density=density)

@@ -1,38 +1,117 @@
 """Kernel micro-benchmarks.
 
-The Pallas pairwise-score kernel targets TPU; on this CPU container it runs
-in interpret mode (correctness only — timings meaningless), so what we
-measure here is (a) the XLA-compiled jnp oracle it must beat, at several
-j-block shapes (the same blocking trade-off the kernel's BlockSpec makes),
-and (b) the analytic VMEM/arithmetic-intensity numbers per block shape that
-drive the TPU roofline in EXPERIMENTS.md."""
+The Pallas kernels target TPU; on this CPU container they run in interpret
+mode (correctness only — timings meaningless), so what we measure here is
+
+  (a) the XLA-compiled square oracle (full HR matrix + separate score ops)
+      at several j-block shapes,
+  (b) the XLA-compiled *fused triangular* score path (both directions per
+      block pair, no p x p HR round-trip) — the jnp oracle of
+      ``repro.kernels.fused_score`` — head-to-head against (a),
+  (c) the end-to-end device-resident ``causal_order_scan`` driver against
+      the host-driven bucketed dense driver, and
+  (d) the analytic VMEM/arithmetic-intensity/tile-count numbers per block
+      shape that drive the TPU roofline in EXPERIMENTS.md.
+"""
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, time_fn
+from benchmarks.common import row, time_fn, time_fns_interleaved
 from repro.core.covariance import cov_matrix, normalize
-from repro.core.pairwise import residual_entropy_matrix
+from repro.core.pairwise import dense_scores, fused_scores, residual_entropy_matrix
+from repro.core.paralingam import ParaLiNGAMConfig, causal_order, causal_order_scan
+from repro.kernels.fused_score import square_tile_count, tri_tile_count
 
-# per-sample flop estimate of the fused residual-entropy inner loop
+# per-sample flop estimate of the residual-entropy inner loop (one direction)
 FLOPS_PER_ELEM = 14  # sub, mul x3, abs, exp x2, log1p, adds
 
 
-def run():
+def _score_flops(p, n):
+    """Total elementwise flops of one full find-root scoring pass: p^2
+    ordered-pair residual-entropy streams (square and fused both evaluate
+    every ordered pair exactly once — fused just loads half the blocks)."""
+    return p * p * n * FLOPS_PER_ELEM
+
+
+def run(smoke: bool = False):
     rng = np.random.default_rng(0)
-    p, n = 256, 2048
+    p, n = (64, 512) if smoke else (256, 2048)
+    iters = 2 if smoke else 3
     xn = normalize(jnp.asarray(rng.standard_normal((p, n)), jnp.float32))
     c = cov_matrix(xn)
+    mask = jnp.ones((p,), bool)
 
+    # (a) square oracle: HR matrix at several j-blocks
     for bj in (16, 32, 64, 128):
-        us = time_fn(lambda xn, c: residual_entropy_matrix(xn, c, block_j=bj), xn, c)
-        flops = p * p * n * FLOPS_PER_ELEM
-        gflops = flops / (us * 1e-6) / 1e9
-        row(f"kern_oracle_p{p}_n{n}_bj{bj}", us, f"cpu_gflops={gflops:.1f}")
+        us = time_fn(
+            lambda xn, c: residual_entropy_matrix(xn, c, block_j=bj),
+            xn, c, iters=iters,
+        )
+        gflops = _score_flops(p, n) / (us * 1e-6) / 1e9
+        row(f"kern_oracle_p{p}_n{n}_bj{bj}", us, f"cpu_gflops={gflops:.1f}",
+            p=p, n=n, block_j=bj, path="square_hr")
 
-    # Pallas BlockSpec accounting (TPU-side, analytic):
+    # (a') + (b) head-to-head: the full square score path (HR + separate
+    # stat/credit XLA ops) vs the fused triangular path, sampled round-robin
+    # so drift hits both sides equally — the ratio is the result.
+    @jax.jit
+    def square_scores(xn, c, mask):
+        s, _, _ = dense_scores(xn, c, mask, block_j=32)
+        return s
+
+    contenders = {"square": square_scores}
+    for b in (16, 32, 64):
+        if b > p:
+            continue
+        contenders[f"fused_b{b}"] = jax.jit(
+            lambda xn, c, mask, b=b: fused_scores(xn, c, mask, block=b)
+        )
+    us_by = time_fns_interleaved(
+        contenders, xn, c, mask, iters=max(iters, 5 if not smoke else 2)
+    )
+    us_sq = us_by.pop("square")
+    row(f"score_square_p{p}_n{n}", us_sq,
+        f"cpu_gflops={_score_flops(p, n) / (us_sq * 1e-6) / 1e9:.1f}",
+        p=p, n=n, block_j=32, path="square_hr+xla_scores")
+    for key, us in us_by.items():
+        b = int(key.split("_b")[1])
+        row(f"score_fused_p{p}_n{n}_b{b}", us,
+            f"cpu_gflops={_score_flops(p, n) / (us * 1e-6) / 1e9:.1f};"
+            f"vs_square={us_sq / us:.2f}x",
+            p=p, n=n, block=b, path="fused_tri")
+    b_best, us_f = min(
+        ((int(k.split("_b")[1]), v) for k, v in us_by.items()),
+        key=lambda kv: kv[1],
+    )
+    row(f"score_fused_vs_square_p{p}_n{n}", us_f,
+        f"speedup={us_sq / us_f:.2f}x;square_us={us_sq:.0f};block={b_best}",
+        p=p, n=n, block=b_best)
+
+    # (c) end-to-end: device-resident scan driver vs host-driven dense driver
+    pe, ne = (32, 256) if smoke else (128, 256)
+    xe = jnp.asarray(rng.standard_normal((pe, ne)), jnp.float32)
+
+    def host_driver(x):
+        return causal_order(x, ParaLiNGAMConfig(method="dense")).order
+
+    def scan_driver(x):
+        return causal_order_scan(x, ParaLiNGAMConfig()).order
+
+    us_e2e = time_fns_interleaved(
+        {"host": host_driver, "scan": scan_driver}, xe, iters=iters, warmup=1
+    )
+    us_host, us_scan = us_e2e["host"], us_e2e["scan"]
+    row(f"e2e_host_dense_p{pe}_n{ne}", us_host, "dispatches_per_fit=%d" % (5 * pe),
+        p=pe, n=ne, path="host_bucketed")
+    row(f"e2e_scan_p{pe}_n{ne}", us_scan,
+        f"vs_host={us_host / us_scan:.2f}x;dispatches_per_fit=1",
+        p=pe, n=ne, path="device_scan")
+
+    # (d) Pallas BlockSpec accounting (TPU-side, analytic):
     for bi, bj, bn in ((8, 8, 512), (8, 16, 512), (16, 16, 256), (32, 8, 256)):
         vmem = (bi * bn + bj * bn + 3 * bi * bj + bi * bj * bn) * 4
         # bytes loaded per tile / flops per tile -> arithmetic intensity
@@ -42,4 +121,23 @@ def run():
             f"kern_blockspec_bi{bi}_bj{bj}_bn{bn}",
             0.0,
             f"vmem_kib={vmem / 1024:.0f};intensity_flops_per_byte={flops_tile / bytes_tile:.1f}",
+            block_i=bi, block_j=bj, block_n=bn, path="square_hr",
+        )
+
+    # fused triangular kernel accounting: same loads feed BOTH directions, so
+    # flops per tile double while bytes stay put (2x arithmetic intensity),
+    # tiles halve, and the HBM output is p floats instead of p^2.
+    for b, bn in ((8, 512), (16, 512), (32, 256)):
+        tri = tri_tile_count(p, b)
+        sq = square_tile_count(p, b)
+        bytes_tile = (2 * b * bn + b * b) * 4
+        flops_tile = 2 * b * b * bn * FLOPS_PER_ELEM
+        vmem = (2 * b * bn + 5 * b * b + (p // b) * b) * 4
+        row(
+            f"fused_blockspec_b{b}_bn{bn}", 0.0,
+            f"tri_tiles={tri};square_tiles={sq};tile_ratio={tri / max(sq, 1):.2f};"
+            f"vmem_kib={vmem / 1024:.0f};"
+            f"intensity_flops_per_byte={flops_tile / bytes_tile:.1f};"
+            f"hbm_out_bytes={p * 4};square_hbm_out_bytes={p * p * 4}",
+            p=p, block=b, block_n=bn, path="fused_tri",
         )

@@ -25,9 +25,10 @@ def _gen(p, n, seed=0):
     return sem.generate(sem.SemSpec(p=p, n=n, density="sparse", seed=seed))["x"]
 
 
-def run():
-    # measured cell: E.coli core size (p=85, n=10000)
-    data = sem.generate(sem.SemSpec(p=85, n=10_000, density="sparse", seed=0))
+def run(smoke: bool = False):
+    # measured cell: E.coli core size (p=85, n=10000); smoke shrinks both.
+    p_core, n_core = (24, 1000) if smoke else (85, 10_000)
+    data = sem.generate(sem.SemSpec(p=p_core, n=n_core, density="sparse", seed=0))
     x = data["x"]
     t0 = time.time()
     res = causal_order(x, ParaLiNGAMConfig(method="threshold", chunk=32))
@@ -40,16 +41,17 @@ def run():
     agree = np.mean([a == b for a, b in zip(serial_order, res.order)])
     both_valid = sem.is_valid_causal_order(res.order, data["b_true"]) == \
         sem.is_valid_causal_order(serial_order, data["b_true"])
-    row("table2_ecoli_core_p85_para", t_para * 1e6,
+    row(f"table2_ecoli_core_p{p_core}_para", t_para * 1e6,
         f"serial_s={t_serial:.1f};speedup={t_serial / t_para:.1f}x;"
         f"order_agreement={agree:.2f};validity_match={both_valid};"
-        f"paper_serial_s=485;paper_speedup=638x_on_V100")
+        f"paper_serial_s=485;paper_speedup=638x_on_V100",
+        p=p_core, n=n_core)
 
     # reduced iJR904 slice (p=770 full is ~3.3 days serial in the paper):
     # measure at p=512, n=2000 and extrapolate serial with the paper's own
     # cubic scaling (validated by the measured cells above).
-    p_big = 512
-    x770 = _gen(p_big, 2000, seed=1)
+    p_big = 64 if smoke else 512
+    x770 = _gen(p_big, 500 if smoke else 2000, seed=1)
     t0 = time.time()
     res770 = causal_order(x770, ParaLiNGAMConfig(method="dense"))
     t_para770 = time.time() - t0
@@ -62,4 +64,4 @@ def run():
     t_serial_est = t_iter_serial * (p_big / sub) ** 2 * p_big / 3
     row(f"table2_ijr904_slice_p{p_big}_para", t_para770 * 1e6,
         f"serial_est_s={t_serial_est:.0f};speedup_est={t_serial_est / t_para770:.0f}x;"
-        f"paper_speedup=3152x_on_V100")
+        f"paper_speedup=3152x_on_V100", p=p_big)

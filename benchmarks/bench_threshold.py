@@ -12,11 +12,13 @@ from repro.core import sem
 from repro.core.paralingam import ParaLiNGAMConfig, causal_order
 
 
-def run():
+def run(smoke: bool = False):
+    cells = ((32, 512),) if smoke else ((64, 2048), (128, 1024))
+    growths = (2.0,) if smoke else (2.0, 4.0)
     for density in ("sparse", "dense"):
-        for p, n in ((64, 2048), (128, 1024)):
+        for p, n in cells:
             x = sem.generate(sem.SemSpec(p=p, n=n, density=density, seed=9))["x"]
-            for growth in (2.0, 4.0):
+            for growth in growths:
                 res = causal_order(
                     x,
                     ParaLiNGAMConfig(
@@ -31,4 +33,5 @@ def run():
                     f"saved_vs_serial={100 * res.saving_vs_serial:.1f}%;"
                     f"saved_vs_messaging={100 * res.saving_vs_messaging:.1f}%;"
                     f"paper_claim=93.1%",
+                    p=p, n=n, density=density, gamma_growth=growth,
                 )

@@ -1,4 +1,10 @@
-"""Shared benchmark helpers."""
+"""Shared benchmark helpers.
+
+``row`` both prints the CSV line (legacy stdout contract) and appends a
+machine-readable record to an in-process registry; ``benchmarks.run`` drains
+the registry into ``BENCH_<suite>.json`` after each suite so the perf
+trajectory is tracked across PRs (see EXPERIMENTS.md).
+"""
 
 from __future__ import annotations
 
@@ -6,6 +12,9 @@ import time
 
 import jax
 import numpy as np
+
+# Records accumulated by row() since the last drain_records() call.
+_RECORDS: list[dict] = []
 
 
 def time_fn(fn, *args, iters: int = 3, warmup: int = 1):
@@ -22,5 +31,55 @@ def time_fn(fn, *args, iters: int = 3, warmup: int = 1):
     return float(np.median(times)) * 1e6
 
 
-def row(name: str, us: float, derived: str = ""):
+def time_fns_interleaved(fns: dict, *args, iters: int = 5, warmup: int = 1):
+    """Median wall time per call (µs) for several functions, sampled
+    round-robin so allocator/thread-pool drift hits every variant equally —
+    use for head-to-head comparisons where the ratio is the result."""
+    for fn in fns.values():
+        for _ in range(warmup):
+            jax.block_until_ready(fn(*args))
+    times: dict = {k: [] for k in fns}
+    for _ in range(iters):
+        for k, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            times[k].append(time.perf_counter() - t0)
+    return {k: float(np.median(v)) * 1e6 for k, v in times.items()}
+
+
+def _parse_metrics(derived: str) -> dict:
+    """'k=v;k=v' derived strings -> dict (floats where they parse)."""
+    out: dict = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = float(v)
+        except ValueError:
+            out[k] = v
+    return out
+
+
+def row(name: str, us: float, derived: str = "", **config):
+    """Emit one benchmark row: CSV to stdout + JSON record to the registry.
+
+    ``config`` keyword args record the benchmark's shape/parameters
+    (p, n, block, ...) alongside the measurement.
+    """
     print(f"{name},{us:.1f},{derived}")
+    _RECORDS.append(
+        {
+            "name": name,
+            "us": round(float(us), 3),
+            "metrics": _parse_metrics(derived),
+            "config": config,
+        }
+    )
+
+
+def drain_records() -> list[dict]:
+    """Return and clear the records accumulated since the last drain."""
+    out = list(_RECORDS)
+    _RECORDS.clear()
+    return out

@@ -155,17 +155,26 @@ def lingam_roofline() -> str:
     return "\n".join(lines)
 
 
-def bench_tables() -> str:
-    if not os.path.exists("bench_output.txt"):
-        return "(run `python -m benchmarks.run | tee bench_output.txt` first)"
+def bench_tables(bench_dir: str = ".") -> str:
     rows = []
-    for line in open("bench_output.txt"):
-        line = line.strip()
-        if not line or line.startswith("name,") or line.startswith("#"):
-            continue
-        parts = line.split(",", 2)
-        if len(parts) == 3:
-            rows.append(parts)
+    # Preferred source: the machine-readable per-suite JSON from benchmarks.run
+    # (pass the same directory as run.py's --out).
+    for path in sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json"))):
+        data = json.load(open(path))
+        for rec in data.get("rows", []):
+            derived = ";".join(f"{k}={v}" for k, v in rec["metrics"].items())
+            rows.append((rec["name"], str(rec["us"]), derived))
+    if not rows:
+        # Legacy fallback: the raw CSV capture.
+        if not os.path.exists("bench_output.txt"):
+            return "(run `python -m benchmarks.run` first)"
+        for line in open("bench_output.txt"):
+            line = line.strip()
+            if not line or line.startswith("name,") or line.startswith("#"):
+                continue
+            parts = line.split(",", 2)
+            if len(parts) == 3:
+                rows.append(parts)
     out = ["| benchmark | us/call | derived |", "|---|---|---|"]
     for name, us, derived in rows:
         out.append(f"| {name} | {float(us):.0f} | {derived.replace(';', '; ')} |")
@@ -173,18 +182,34 @@ def bench_tables() -> str:
 
 
 def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--bench-dir", default=".",
+        help="directory holding BENCH_*.json (benchmarks.run --out)",
+    )
+    args = ap.parse_args()
     with open("EXPERIMENTS.md") as f:
         text = f.read()
     rt, notes = roofline_table()
     rt = rt + "\n\n### LiNGAM (paper workload) cells\n\n" + lingam_roofline()
-    for marker, content in (
-        ("<!-- DRYRUN_TABLE -->", dryrun_table()),
-        ("<!-- ROOFLINE_TABLE -->", rt),
-        ("<!-- ROOFLINE_NOTES -->", "### Per-cell notes\n\n" + notes),
-        ("<!-- PAPER_BENCH_TABLES -->", bench_tables()),
+    for name, content in (
+        ("DRYRUN_TABLE", dryrun_table()),
+        ("ROOFLINE_TABLE", rt),
+        ("ROOFLINE_NOTES", "### Per-cell notes\n\n" + notes),
+        ("PAPER_BENCH_TABLES", bench_tables(args.bench_dir)),
     ):
-        if marker in text:
-            text = text.replace(marker, content)
+        begin, end = f"<!-- BEGIN {name} -->", f"<!-- END {name} -->"
+        span = f"{begin}\n{content}\n{end}"
+        if begin in text and end in text:
+            # idempotent refill of an existing span
+            head, rest = text.split(begin, 1)
+            _, tail = rest.split(end, 1)
+            text = head + span + tail
+        elif f"<!-- {name} -->" in text:
+            # legacy one-shot marker: upgrade it to a refillable span
+            text = text.replace(f"<!-- {name} -->", span)
     with open("EXPERIMENTS.md", "w") as f:
         f.write(text)
     print("EXPERIMENTS.md updated")

@@ -6,6 +6,7 @@ from repro.core.paralingam import (
     ParaLiNGAMConfig,
     ParaLiNGAMResult,
     causal_order,
+    causal_order_scan,
     find_root_dense,
     find_root_threshold,
     fit,

@@ -38,6 +38,123 @@ def residual_entropy_block(xn, c_cols, xj):
     return entropy_from_moments(m1, m2)
 
 
+def residual_entropy_block_pair(xi, c_blk, xj):
+    """Both-direction residual entropies for one (bi, bj) block pair.
+
+    ``xi: (bi, n)``, ``xj: (bj, n)``, ``c_blk: (bi, bj)``. Returns
+    ``(hr_fwd, hr_rev)`` with ``hr_fwd[a, b] = H(r_{x_a}^{(x_b)})`` and
+    ``hr_rev[a, b] = H(r_{x_b}^{(x_a)})`` — one load of each block feeds both
+    directions, the key reuse the fused triangular kernel is built around."""
+    inv = jax.lax.rsqrt(jnp.maximum(1.0 - jnp.square(c_blk), VAR_EPS))[..., None]
+    u_f = (xi[:, None, :] - c_blk[..., None] * xj[None, :, :]) * inv
+    u_r = (xj[None, :, :] - c_blk[..., None] * xi[:, None, :]) * inv
+
+    def _ent(u):
+        m1 = jnp.mean(log_cosh(u), axis=-1)
+        m2 = jnp.mean(u_exp_moment(u), axis=-1)
+        return entropy_from_moments(m1, m2)
+
+    return _ent(u_f), _ent(u_r)
+
+
+def diag_block_scores(xb, c_diag, hxb, mb):
+    """Messaging-folded score contributions of the *diagonal* block tiles.
+
+    ``xb: (nt, b, n)`` row blocks, ``c_diag: (nt, b, b)`` the matching
+    diagonal correlation blocks, ``hxb: (nt, b)`` row entropies, ``mb:
+    (nt, b)`` live mask. One HR block per tile covers both orderings of every
+    in-block pair (the antisymmetric stat is ``hr - hr.T``), so only the
+    row-sum credit applies — the column credit is the other ordering's row.
+    Returns (nt, b) score contributions."""
+
+    def one(x, cd, hx, m):
+        hr = residual_entropy_block(x, cd, x)
+        stat = pair_stat_matrix(hx, hr)
+        pm = m[:, None] & m[None, :] & ~jnp.eye(x.shape[0], dtype=bool)
+        return jnp.sum(jnp.where(pm, jnp.square(jnp.minimum(0.0, stat)), 0.0), axis=1)
+
+    return jax.vmap(one)(xb, c_diag, hxb, mb)
+
+
+def tri_block_maps(nt: int):
+    """Static (numpy) tile maps of the strictly-lower triangular block grid:
+    every unordered off-diagonal block pair (i < j) exactly once."""
+    import numpy as np
+
+    pairs = [(i, j) for i in range(nt) for j in range(i + 1, nt)]
+    imap = np.asarray([ij[0] for ij in pairs], np.int32)
+    jmap = np.asarray([ij[1] for ij in pairs], np.int32)
+    return imap, jmap
+
+
+def fused_layout(xn, c, mask, block: int):
+    """Shared prologue of the fused triangular sweep (jnp oracle and Pallas
+    wrapper): pad p to the tile size, reshape into (nt, b) tiles and score
+    the diagonal tiles. Returns ``(xpad, cp, c4, hxb, mb, s_diag)`` with
+    ``xpad: (nt*b, n)``, ``cp: (nt*b, nt*b)`` the padded correlations,
+    ``c4: (nt, nt, b, b)`` their tile view, ``hxb``/``mb``/``s_diag`` all
+    (nt, b)."""
+    p, n = xn.shape
+    b = min(block, max(p, 1))
+    p_pad = p + (-p) % b
+    nt = p_pad // b
+    xpad = jnp.pad(xn.astype(jnp.float32), ((0, p_pad - p), (0, 0)))
+    mb = jnp.pad(mask, (0, p_pad - p)).reshape(nt, b)
+    cp = jnp.pad(c.astype(jnp.float32), ((0, p_pad - p), (0, p_pad - p)))
+    c4 = cp.reshape(nt, b, nt, b).transpose(0, 2, 1, 3)  # (nt, nt, b, b)
+    hx = row_entropies(xn, mask)
+    hxb = jnp.pad(hx.astype(jnp.float32), (0, p_pad - p)).reshape(nt, b)
+
+    diag_idx = jnp.arange(nt)
+    s_diag = diag_block_scores(
+        xpad.reshape(nt, b, n), c4[diag_idx, diag_idx], hxb, mb
+    )
+    return xpad, cp, c4, hxb, mb, s_diag
+
+
+@partial(jax.jit, static_argnames=("block", "unroll"))
+def fused_scores(xn, c, mask, block: int = 32, unroll: bool = False):
+    """Score vector S with no (p, p) HR round-trip — the jnp oracle of the
+    fused triangular kernel (``repro.kernels.fused_score``).
+
+    Triangular block sweep: each unordered (bi, bj) block pair is visited
+    once; both residual-entropy directions are computed from the same loads,
+    the antisymmetric stat and the messaging credit ``min(0, ±I)^2`` are
+    applied immediately, and only per-block partial score vectors survive the
+    sweep — the p x p intermediate is never formed. ``unroll=True`` replaces
+    the lax.map with a python loop for dry-run cost extraction."""
+    p, n = xn.shape
+    xpad, _, c4, hxb, mb, s2 = fused_layout(xn, c, mask, block)
+    nt, b = mb.shape
+    p_pad = nt * b
+    xb = xpad.reshape(nt, b, n)
+
+    imap_np, jmap_np = tri_block_maps(nt)
+    if len(imap_np):
+        imap = jnp.asarray(imap_np)
+        jmap = jnp.asarray(jmap_np)
+
+        def pair_body(t):
+            i, j = imap[t], jmap[t]
+            hr_f, hr_r = residual_entropy_block_pair(xb[i], c4[i, j], xb[j])
+            stat = (hxb[j][None, :] - hxb[i][:, None]) + (hr_f - hr_r)
+            pm = mb[i][:, None] & mb[j][None, :]
+            fwd = jnp.where(pm, jnp.square(jnp.minimum(0.0, stat)), 0.0)
+            rev = jnp.where(pm, jnp.square(jnp.minimum(0.0, -stat)), 0.0)
+            return jnp.sum(fwd, axis=1), jnp.sum(rev, axis=0)
+
+        if unroll:
+            parts = [pair_body(jnp.int32(t)) for t in range(len(imap_np))]
+            f = jnp.stack([pq[0] for pq in parts])
+            r = jnp.stack([pq[1] for pq in parts])
+        else:
+            f, r = jax.lax.map(pair_body, jnp.arange(len(imap_np)))
+        s2 = s2.at[imap].add(f).at[jmap].add(r)
+
+    s = s2.reshape(p_pad)[:p]
+    return jnp.where(mask, s, jnp.inf)
+
+
 @partial(jax.jit, static_argnames=("block_j", "unroll"))
 def residual_entropy_matrix(xn, c, block_j: int = 32, unroll: bool = False):
     """Full HR: (p, p), computed in j-blocks to bound the (p, bj, n) buffer.

@@ -16,7 +16,12 @@ find-root strategies (see DESIGN.md Section 2 for the mechanism mapping):
                     the iteration terminates when every below-threshold worker
                     has finished (paper Algorithm 6's condition). Comparison
                     counts are tracked to validate the paper's ~93% savings.
-  * messaging is inherent to both: pair (i, j) is evaluated once and both
+  * ``scan``      — the dense evaluation with the *outer* loop also folded
+                    on-device: all p find-root -> update iterations run in a
+                    single ``lax.fori_loop`` dispatch over fixed-size masked
+                    buffers (``causal_order_scan``), eliminating the p host
+                    round-trips and bucket re-gathers of the host driver.
+  * messaging is inherent to all: pair (i, j) is evaluated once and both
     S[i] += min(0, I)^2 and S[j] += min(0, -I)^2 are applied (Section 3.1).
 
 Across outer iterations, the remaining set U shrinks; rows are compacted into
@@ -49,6 +54,7 @@ from repro.core.covariance import (
 from repro.core.entropy import entropy_from_moments, log_cosh, u_exp_moment
 from repro.core.pairwise import (
     dense_scores,
+    fused_scores,
     pair_stat_matrix,
     row_entropies,
     scores_from_stats,
@@ -57,10 +63,11 @@ from repro.core.pairwise import (
 
 @dataclass(frozen=True)
 class ParaLiNGAMConfig:
-    method: str = "dense"  # "dense" | "threshold"
+    method: str = "dense"  # "dense" | "threshold" | "scan"
     # dense path
     block_j: int = 32  # j-block for the HR matrix (bounds the (p,bj,n) buffer)
-    use_kernel: bool = False  # route HR through the Pallas kernel (interpret on CPU)
+    use_kernel: bool = False  # route scoring through the Pallas kernels (interpret on CPU)
+    fused: bool = False  # fused triangular score path (no p x p HR round-trip)
     # threshold path (paper Sections 3.2-3.3)
     chunk: int = 16  # comparison targets processed per worker per round
     gamma0: float = 1e-5  # initial threshold (paper: "a small value")
@@ -105,9 +112,24 @@ def _hr_fn(use_kernel: bool) -> Callable:
     return residual_entropy_matrix
 
 
-@partial(jax.jit, static_argnames=("block_j", "use_kernel"))
-def find_root_dense(xn, c, mask, block_j: int = 32, use_kernel: bool = False):
-    """One-shot masked dense evaluation. Returns (root_idx, scores)."""
+@partial(jax.jit, static_argnames=("block_j", "use_kernel", "fused"))
+def find_root_dense(xn, c, mask, block_j: int = 32, use_kernel: bool = False,
+                    fused: bool = False):
+    """One-shot masked dense evaluation. Returns (root_idx, scores).
+
+    ``fused=True`` routes scoring through the fused triangular path (each
+    unordered block pair evaluated once, messaging credit applied in the same
+    pass, no p x p HR intermediate): the Pallas kernel when ``use_kernel``,
+    the blocked jnp formulation otherwise. Identical scores to the square
+    path up to f32 summation order."""
+    if fused:
+        if use_kernel:
+            from repro.kernels import ops as kops
+
+            s = kops.score_vector(xn, c, mask)
+        else:
+            s = fused_scores(xn, c, mask, block=min(block_j, xn.shape[0]))
+        return jnp.argmin(s), s
     hx = row_entropies(xn, mask)
     hr = _hr_fn(use_kernel)(xn, c, block_j)
     stat = pair_stat_matrix(hx, hr)
@@ -158,8 +180,13 @@ def find_root_threshold(
     no worker is below threshold (Algorithm 6 lines 15-17).
     """
     m, _ = xn.shape
+    # Round the chunk down to a divisor of m (m is static at trace time) so
+    # non-power-of-two row counts (bucket=False with awkward p) still reshape
+    # into whole chunks; worst case chunk=1 == the paper's one-at-a-time worker.
+    chunk = max(1, min(chunk, m))
+    while m % chunk:
+        chunk -= 1
     nc = m // chunk
-    assert m % chunk == 0, "bucket size must be a multiple of chunk"
     idx = jnp.arange(m)
     pair_valid = mask[:, None] & mask[None, :] & ~jnp.eye(m, dtype=bool)
     hx = row_entropies(xn, mask)
@@ -263,9 +290,120 @@ def _next_pow2(v: int) -> int:
     return out
 
 
+def _scan_stages(p: int, min_bucket: int) -> list[tuple[int, int]]:
+    """Static stage plan: (buffer size m, iteration count) pairs mirroring
+    the host driver's power-of-two bucket schedule for r = p .. 2."""
+    import itertools
+
+    cap = _next_pow2(p)
+    ms = [min(cap, max(min_bucket, _next_pow2(r))) for r in range(p, 1, -1)]
+    return [(m, len(list(g))) for m, g in itertools.groupby(ms)]
+
+
+def _scan_order_impl(xn, c, block_j: int = 32, use_kernel: bool = False,
+                     fused: bool = False, min_bucket: int = 32):
+    """Device-resident outer loop: all p find-root -> update iterations in
+    ONE dispatch, with no host round-trips.
+
+    The loop is staged on the same power-of-two schedule as the host driver's
+    buckets, but entirely on-device: each stage is a ``lax.fori_loop`` over
+    fixed-size mask-based buffers, and the <= log2(p) stage transitions
+    compact live rows with a device-side ``jnp.nonzero(size=m)`` gather (the
+    host driver instead syncs ``int(root)`` and re-gathers from numpy every
+    one of the p iterations). Work profile and per-iteration float ops match
+    the bucketed host driver exactly — padded rows are masked out of every
+    reduction — so the returned order is identical."""
+    p = xn.shape[0]
+    order = jnp.zeros((p,), jnp.int32)
+    if p == 1:
+        return order
+
+    idx_g = jnp.arange(p, dtype=jnp.int32)  # local row -> global variable id
+    xb, cb = xn, c
+    mloc = jnp.ones((p,), bool)
+    m_cur = p
+    pos = 0
+    for m, cnt in _scan_stages(p, min_bucket):
+        if m != m_cur:
+            live = p - pos  # static: one root retired per iteration
+            sel = jnp.nonzero(mloc, size=m, fill_value=0)[0].astype(jnp.int32)
+            idx_g = idx_g[sel]
+            xb = xb[sel]
+            cb = cb[sel][:, sel]
+            mloc = jnp.arange(m) < live
+            m_cur = m
+
+        def body(k, st, idx_g=idx_g, pos=pos, m=m):
+            xb, cb, ml, order = st
+            root_l, _ = find_root_dense(
+                xb, cb, ml, block_j=min(block_j, m), use_kernel=use_kernel,
+                fused=fused,
+            )
+            order = order.at[pos + k].set(idx_g[root_l])
+            xb2 = update_data(xb, cb, root_l, ml)
+            cb2 = update_cov(cb, root_l, ml)
+            ml2 = ml & (jnp.arange(m) != root_l)
+            return xb2, cb2, ml2, order
+
+        xb, cb, mloc, order = jax.lax.fori_loop(0, cnt, body, (xb, cb, mloc, order))
+        pos += cnt
+
+    # One live row remains; no find-root needed (matches the host driver).
+    order = order.at[p - 1].set(idx_g[jnp.argmax(mloc)])
+    return order
+
+
+_scan_order_jit = None
+
+
+def _scan_order(xn, c, **kw):
+    """jit of ``_scan_order_impl``, built lazily so the donation decision
+    reads the backend at first *call* (a module-level ``default_backend()``
+    would force JAX platform init at import time and freeze the choice).
+    xn/c are consumed by the first stage's updates — donate where the
+    backend supports it (donation on CPU trips a spurious warning)."""
+    global _scan_order_jit
+    if _scan_order_jit is None:
+        _scan_order_jit = jax.jit(
+            _scan_order_impl,
+            static_argnames=("block_j", "use_kernel", "fused", "min_bucket"),
+            donate_argnums=(0, 1) if jax.default_backend() != "cpu" else (),
+        )
+    return _scan_order_jit(xn, c, **kw)
+
+
+def causal_order_scan(x, config: ParaLiNGAMConfig | None = None) -> ParaLiNGAMResult:
+    """Full causal order in ONE device dispatch (vs the host driver's p
+    find-root dispatches with an ``int(root)`` sync + bucket re-gather each).
+
+    Same bucketed work profile as the host driver, zero host round-trips:
+    the win is every iteration's dispatch + sync latency — exactly the
+    overhead the paper burns down by keeping all workers resident on the
+    device across the whole recovery."""
+    cfg = config or ParaLiNGAMConfig()
+    x = jnp.asarray(x, cfg.dtype)
+    p = x.shape[0]
+    xn = normalize(x)
+    c = cov_matrix(xn)
+    order = _scan_order(
+        xn, c, block_j=min(cfg.block_j, p), use_kernel=cfg.use_kernel,
+        fused=cfg.fused, min_bucket=cfg.min_bucket,
+    )
+    comps_dense = sum(r * (r - 1) // 2 for r in range(2, p + 1))
+    return ParaLiNGAMResult(
+        order=[int(v) for v in np.asarray(order)],
+        comparisons=comps_dense,
+        comparisons_dense=comps_dense,
+        comparisons_serial=2 * comps_dense,
+        rounds=0,
+    )
+
+
 def causal_order(x, config: ParaLiNGAMConfig | None = None) -> ParaLiNGAMResult:
     """ParaLiNGAM step 1: full causal order over ``x: (p, n)`` raw samples."""
     cfg = config or ParaLiNGAMConfig()
+    if cfg.method == "scan":
+        return causal_order_scan(x, cfg)
     x = jnp.asarray(x, cfg.dtype)
     p = x.shape[0]
 
@@ -308,7 +446,7 @@ def causal_order(x, config: ParaLiNGAMConfig | None = None) -> ParaLiNGAMResult:
         if cfg.method == "dense":
             root_local, _ = find_root_dense(
                 xb, cb, mb, block_j=min(cfg.block_j, xb.shape[0]),
-                use_kernel=cfg.use_kernel,
+                use_kernel=cfg.use_kernel, fused=cfg.fused,
             )
             iter_comps = r * (r - 1) // 2
             iter_rounds = 0

@@ -152,16 +152,22 @@ def _ring_body(x_loc, c_loc, mask_loc, *, ring_axes: tuple, ring_sizes: tuple):
     pm = mask_loc[:, None] & mask_loc[None, :] & ~jnp.eye(m, dtype=bool)
     score, _ = credit(stat, pm, jnp.asarray(True))
 
-    # Steps 1..R//2: the visiting block (data + entropies + mask + credit
-    # accumulator) arrives from one hop upstream each step.
-    pkt = {
-        "x": x_loc,
-        "hx": hx_loc,
-        "mask": mask_loc,
-        "acc": jnp.zeros((m,), jnp.float32),
-    }
-    for t in range(1, ring_steps(big_r) + 1):
-        pkt = _shift_by(pkt, 1, ring_axes, ring_sizes)
+    # Steps 1..R//2: the visiting block (data + entropies + mask) arrives from
+    # one hop upstream each step. Double-buffered: the block packet is
+    # immutable, so the hop for step t+1 is issued *before* step t's compute —
+    # its ppermute has no data dependence on the running block compute, which
+    # lets the scheduler overlap transfer with the entropy evaluation. The
+    # credit accumulator (the part compute mutates) travels as its own tiny
+    # (m,) packet shifted after each step's credits are known; its wire cost
+    # is 1/n of the block's, so serializing it hides nothing.
+    n_steps = ring_steps(big_r)
+    pkt0 = {"x": x_loc, "hx": hx_loc, "mask": mask_loc}
+    acc = jnp.zeros((m,), jnp.float32)
+    pkt = _shift_by(pkt0, 1, ring_axes, ring_sizes)
+    for t in range(1, n_steps + 1):
+        nxt = (
+            _shift_by(pkt, 1, ring_axes, ring_sizes) if t < n_steps else None
+        )
         src = (r_idx - t) % big_r
         keep = jnp.asarray(process_pair(big_r, t, r_idx, src))
         c_vis = jax.lax.dynamic_slice_in_dim(c_loc, src * m, m, axis=1)
@@ -169,11 +175,14 @@ def _ring_body(x_loc, c_loc, mask_loc, *, ring_axes: tuple, ring_sizes: tuple):
         pm = mask_loc[:, None] & pkt["mask"][None, :]
         fwd, rev = credit(stat, pm, keep)
         score = score + fwd
-        pkt["acc"] = pkt["acc"] + rev
+        # acc rides with the block: shift last step's credits along, add this
+        # step's. After step t it holds all credits for block (r_idx - t).
+        acc = _shift_by(acc, 1, ring_axes, ring_sizes) + rev if t > 1 else rev
+        pkt = nxt
 
     # Ride the accumulator the rest of the way home in one multi-hop shift
     # (total hops == R, so each block's credits land back at its owner).
-    acc = _shift_by(pkt["acc"], big_r - ring_steps(big_r), ring_axes, ring_sizes)
+    acc = _shift_by(acc, big_r - n_steps, ring_axes, ring_sizes)
     score = score + acc
     return jnp.where(mask_loc, score, jnp.inf)
 

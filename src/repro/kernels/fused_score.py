@@ -1,0 +1,166 @@
+"""Pallas TPU kernel: fused triangular score pipeline.
+
+The square kernel (``pairwise_score.py``) computes HR[i, j] and HR[j, i] in
+*separate* grid tiles — every (x_i, x_j) block pair is loaded from HBM twice —
+and materializes the (p, p) HR intermediate in HBM before the antisymmetric
+stat and the messaging credit are formed by separate XLA ops. This kernel
+fuses the whole score pipeline:
+
+  * **Triangular grid.** Tile t covers one unordered off-diagonal block pair
+    (i < j) from static maps delivered by scalar prefetch; each (BI, BJ)
+    block pair is loaded exactly once. Tile count is nt(nt-1)/2 vs the square
+    kernel's nt^2 (``tri_tile_count`` / ``square_tile_count`` below; the
+    diagonal tiles are a vectorized jnp epilogue — O(p B n) work, a 1/nt
+    fraction).
+  * **Both directions per pass.** The same xi/xj/c loads feed the forward
+    and reverse residual-entropy moments (4 VMEM accumulators), halving HBM
+    read traffic relative to the square grid.
+  * **In-kernel scoring.** On the last sample block the entropy formula, the
+    antisymmetric stat I and the messaging credit min(0, ±I)^2 are applied in
+    VMEM, and both endpoints' partial scores are accumulated into a single
+    resident (nt, B) output — the kernel's HBM output shrinks from p^2 HR
+    entries to the p score entries.
+
+TPU considerations are as for the square kernel (BN multiple of 128, B
+multiple of 8, transcendental-bound -> VPU); the score output lives in one
+VMEM-resident block for the whole grid, so tile order needs no revisiting
+heuristics. Zero-padding of p and n is exact for the same reason as the
+square kernel (padded samples contribute 0 to both moment sums; padded rows
+carry mask 0).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.covariance import VAR_EPS
+from repro.core.entropy import entropy_from_moments, log_cosh, u_exp_moment
+from repro.core.pairwise import fused_layout, tri_block_maps
+
+
+def tri_tile_count(p: int, block: int) -> int:
+    """Pair tiles the triangular grid visits (excluding the diagonal)."""
+    nt = -(-p // block)
+    return nt * (nt - 1) // 2
+
+
+def square_tile_count(p: int, block: int) -> int:
+    """Pair tiles the square HR grid visits for the same block size."""
+    nt = -(-p // block)
+    return nt * nt
+
+
+def _fused_tri_kernel(n_true: int, nk: int, imap_ref, jmap_ref,
+                      xi_ref, xj_ref, c_ref, hxi_ref, hxj_ref, mi_ref, mj_ref,
+                      s_ref, elc_f, exe_f, elc_r, exe_r):
+    t = pl.program_id(0)
+    k = pl.program_id(1)
+
+    @pl.when(jnp.logical_and(t == 0, k == 0))
+    def _init_scores():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    @pl.when(k == 0)
+    def _init_moments():
+        elc_f[...] = jnp.zeros_like(elc_f)
+        exe_f[...] = jnp.zeros_like(exe_f)
+        elc_r[...] = jnp.zeros_like(elc_r)
+        exe_r[...] = jnp.zeros_like(exe_r)
+
+    xi = xi_ref[...]  # (BI, BN)
+    xj = xj_ref[...]  # (BJ, BN)
+    cij = c_ref[...]  # (BI, BJ)
+    inv = jax.lax.rsqrt(jnp.maximum(1.0 - cij * cij, VAR_EPS))[:, :, None]
+    # Shared loads, both directions: u_f regresses x_i on x_j, u_r the
+    # reverse — this is the half of the square kernel's HBM traffic.
+    u_f = (xi[:, None, :] - cij[:, :, None] * xj[None, :, :]) * inv
+    u_r = (xj[None, :, :] - cij[:, :, None] * xi[:, None, :]) * inv
+    elc_f[...] += jnp.sum(log_cosh(u_f), axis=-1)
+    exe_f[...] += jnp.sum(u_exp_moment(u_f), axis=-1)
+    elc_r[...] += jnp.sum(log_cosh(u_r), axis=-1)
+    exe_r[...] += jnp.sum(u_exp_moment(u_r), axis=-1)
+
+    @pl.when(k == nk - 1)
+    def _finalize():
+        hr_f = entropy_from_moments(elc_f[...] / n_true, exe_f[...] / n_true)
+        hr_r = entropy_from_moments(elc_r[...] / n_true, exe_r[...] / n_true)
+        hxi = hxi_ref[...]  # (1, BI)
+        hxj = hxj_ref[...]  # (1, BJ)
+        stat = (hxj - hxi.T) + (hr_f - hr_r)  # I[a, b], antisymmetric pairing
+        # Select, not multiply: masked (dead/padded) rows may carry
+        # non-finite garbage and 0 * NaN would leak it into live scores.
+        pm = (mi_ref[...].T * mj_ref[...]) > 0.5  # (BI, BJ)
+        fwd = jnp.where(pm, jnp.square(jnp.minimum(0.0, stat)), 0.0)
+        rev = jnp.where(pm, jnp.square(jnp.minimum(0.0, -stat)), 0.0)
+        iv = imap_ref[t]
+        jv = jmap_ref[t]
+        # Messaging: one evaluation credits both endpoints of the block pair.
+        s_ref[pl.ds(iv, 1), :] += jnp.sum(fwd, axis=1)[None, :]
+        s_ref[pl.ds(jv, 1), :] += jnp.sum(rev, axis=0)[None, :]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block", "block_n", "interpret")
+)
+def fused_score_vector(
+    xn,
+    c,
+    mask,
+    *,
+    block: int = 8,
+    block_n: int = 512,
+    interpret: bool = False,
+):
+    """Messaging-folded score vector S via the fused triangular kernel.
+
+    ``xn: (p, n)`` normalized rows, ``c: (p, p)`` correlations, ``mask: (p,)``
+    live rows. Returns (p,) float32 scores (+inf on dead rows) — identical
+    math to ``dense_scores(...)[0]`` with no HR materialization."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    p, n = xn.shape
+    # Shared prologue with the jnp oracle: p-padding, (nt, b) tiling, row
+    # entropies and the diagonal-tile epilogue (in-block pairs — tiny
+    # relative to the off-diagonal sweep the kernel does).
+    xpad, cp, _, hx2, mb, s2 = fused_layout(xn, c, mask, block)
+    nt, b = mb.shape
+    p_pad = nt * b
+    n_pad = n + (-n) % block_n
+    nk = n_pad // block_n
+    xp = jnp.pad(xpad, ((0, 0), (0, n_pad - n)))
+    m2 = mb.astype(jnp.float32)
+
+    imap_np, jmap_np = tri_block_maps(nt)
+    if len(imap_np):
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(len(imap_np), nk),
+            in_specs=[
+                pl.BlockSpec((b, block_n), lambda t, k, im, jm: (im[t], k)),
+                pl.BlockSpec((b, block_n), lambda t, k, im, jm: (jm[t], k)),
+                pl.BlockSpec((b, b), lambda t, k, im, jm: (im[t], jm[t])),
+                pl.BlockSpec((1, b), lambda t, k, im, jm: (im[t], 0)),
+                pl.BlockSpec((1, b), lambda t, k, im, jm: (jm[t], 0)),
+                pl.BlockSpec((1, b), lambda t, k, im, jm: (im[t], 0)),
+                pl.BlockSpec((1, b), lambda t, k, im, jm: (jm[t], 0)),
+            ],
+            out_specs=pl.BlockSpec((nt, b), lambda t, k, im, jm: (0, 0)),
+            scratch_shapes=[pltpu.VMEM((b, b), jnp.float32)] * 4,
+        )
+        s_tri = pl.pallas_call(
+            functools.partial(_fused_tri_kernel, n, nk),
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((nt, b), jnp.float32),
+            interpret=interpret,
+        )(
+            jnp.asarray(imap_np), jnp.asarray(jmap_np),
+            xp, xp, cp, hx2, hx2, m2, m2,
+        )
+        s2 = s2 + s_tri
+
+    s = s2.reshape(p_pad)[:p]
+    return jnp.where(mask, s, jnp.inf)

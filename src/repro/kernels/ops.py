@@ -12,6 +12,7 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import covupdate as _covupdate
+from repro.kernels import fused_score as _fused
 from repro.kernels import pairwise_score as _pairwise
 
 
@@ -25,6 +26,16 @@ def residual_entropy_matrix(xn, c, *, block_i: int = 8, block_j: int = 8,
     return _pairwise.pairwise_score(
         xn, c,
         block_i=block_i, block_j=block_j, block_n=block_n,
+        interpret=not _on_tpu(),
+    )
+
+
+def score_vector(xn, c, mask, *, block: int = 8, block_n: int = 512):
+    """Messaging-folded (p,) score vector via the fused triangular kernel —
+    each unordered block pair loaded once, stat + credit applied in-kernel,
+    no (p, p) HR round-trip. jnp oracle: ``repro.core.pairwise.fused_scores``."""
+    return _fused.fused_score_vector(
+        xn, c, mask, block=block, block_n=block_n,
         interpret=not _on_tpu(),
     )
 

@@ -44,3 +44,7 @@ def update_data_cov_ref(x, c, b, x_root):
 # repro.models.ssm.mamba2_decode's inner update); re-exported here so every
 # kernel's reference is reachable from ref.py per the package convention.
 from repro.kernels.ssd_decode import ssd_decode_ref  # noqa: E402,F401
+
+# Fused triangular score-kernel oracle: the blocked jnp formulation shares
+# the triangular sweep structure but none of the Pallas tiling machinery.
+from repro.core.pairwise import fused_scores as fused_scores_ref  # noqa: E402,F401

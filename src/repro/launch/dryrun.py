@@ -142,9 +142,10 @@ def cost_mode_cell(cfg, shape, mesh, groups: tuple[int, int] = (1, 2)) -> dict:
 
 def lingam_cells(mesh) -> list[dict]:
     """Dry-run the paper's own workload: dense find-root (baseline pjit),
+    the fused triangular find-root (halved pair-block traffic, no p x p HR),
     the ppermute-ring find-root (optimized), and the iteration update.
     Unrolled variants so cost_analysis reflects the whole computation."""
-    from repro.core.pairwise import dense_scores
+    from repro.core.pairwise import dense_scores, fused_scores
     from repro.core.paralingam import _update_iteration
     from repro.dist.ring import ring_find_root
     from jax.sharding import NamedSharding, PartitionSpec as P
@@ -165,6 +166,17 @@ def lingam_cells(mesh) -> list[dict]:
                 "find_root",
                 lambda xn, c, mask: dense_scores(
                     xn, c, mask, block_j=min(128, p), unroll=True
+                ),
+                (xn, c, mask),
+                (x_sh, c_sh, m_sh),
+            ),
+            (
+                # Unrolled only at sizes where the quadratic pair-tile count
+                # keeps the HLO tractable; beyond that lax.map cost terms are
+                # per-tile (amortized) rather than whole-sweep.
+                "find_root_fused",
+                lambda xn, c, mask: fused_scores(
+                    xn, c, mask, block=min(128, p), unroll=p <= 1024
                 ),
                 (xn, c, mask),
                 (x_sh, c_sh, m_sh),

@@ -1,0 +1,200 @@
+"""Fused triangular score pipeline: kernel/oracle parity, tile-count
+property, and end-to-end order exactness of the fused + scan paths."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import direct_lingam, sem
+from repro.core.covariance import cov_matrix, normalize
+from repro.core.pairwise import dense_scores, fused_scores
+from repro.core.paralingam import (
+    ParaLiNGAMConfig,
+    causal_order,
+    causal_order_scan,
+    find_root_dense,
+)
+from repro.kernels.fused_score import (
+    fused_score_vector,
+    square_tile_count,
+    tri_tile_count,
+)
+
+
+def _setup(p, n, seed=0):
+    rng = np.random.default_rng(seed)
+    xn = normalize(jnp.asarray(rng.standard_normal((p, n)), jnp.float32))
+    c = cov_matrix(xn)
+    return xn, c, jnp.ones((p,), bool)
+
+
+# ---------------------------------------------------------------------------
+# score-vector parity (interpret-mode kernel and jnp oracle vs dense_scores)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "p,n", [(8, 512), (16, 1024), (20, 777), (33, 1500), (64, 2048), (7, 130)]
+)
+def test_fused_kernel_matches_dense(p, n):
+    """Interpret-mode kernel vs the square oracle, odd p / non-multiple n."""
+    xn, c, mask = _setup(p, n, seed=p * 1000 + n)
+    s_ref, _, _ = dense_scores(xn, c, mask, block_j=min(32, p))
+    s_k = fused_score_vector(xn, c, mask, block=8, block_n=512, interpret=True)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("block,block_n", [(8, 128), (8, 256), (16, 512)])
+def test_fused_kernel_block_shapes(block, block_n):
+    xn, c, mask = _setup(24, 640, seed=3)
+    s_ref, _, _ = dense_scores(xn, c, mask, block_j=24)
+    s_k = fused_score_vector(xn, c, mask, block=block, block_n=block_n,
+                             interpret=True)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("p,n,block", [(8, 512, 8), (33, 700, 16), (64, 1024, 32)])
+def test_fused_oracle_matches_dense(p, n, block):
+    xn, c, mask = _setup(p, n, seed=p + block)
+    s_ref, _, _ = dense_scores(xn, c, mask, block_j=min(32, p))
+    s_o = fused_scores(xn, c, mask, block=block)
+    np.testing.assert_allclose(np.asarray(s_o), np.asarray(s_ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fused_dead_row_nonfinite_data():
+    """Masked rows may carry non-finite garbage (retired rows in the scan
+    driver's resident buffers); it must not leak into live scores — the
+    kernel selects with where(), never multiplies by the mask."""
+    p, n = 16, 800
+    xn, c, _ = _setup(p, n, seed=11)
+    xn = np.array(xn, copy=True)
+    c = np.array(c, copy=True)
+    xn[3, :] = np.nan
+    c[3, :] = np.nan
+    c[:, 3] = np.nan
+    mask_np = np.ones((p,), bool)
+    mask_np[3] = False
+    xn, c, mask = jnp.asarray(xn), jnp.asarray(c), jnp.asarray(mask_np)
+    s_ref, _, _ = dense_scores(xn, c, mask, block_j=16)
+    s_k = fused_score_vector(xn, c, mask, block=8, interpret=True)
+    s_o = fused_scores(xn, c, mask, block=8)
+    np.testing.assert_allclose(np.asarray(s_k)[mask_np],
+                               np.asarray(s_ref)[mask_np], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s_o)[mask_np],
+                               np.asarray(s_ref)[mask_np], rtol=1e-5, atol=1e-6)
+
+
+def test_fused_respects_mask():
+    """Dead rows get +inf and contribute nothing to live scores."""
+    p, n = 16, 800
+    xn, c, _ = _setup(p, n, seed=11)
+    mask = jnp.asarray(np.arange(p) % 3 != 0)
+    s_ref, _, _ = dense_scores(xn, c, mask, block_j=16)
+    s_k = fused_score_vector(xn, c, mask, block=8, interpret=True)
+    s_o = fused_scores(xn, c, mask, block=8)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_ref),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s_o), np.asarray(s_ref),
+                               rtol=1e-5, atol=1e-6)
+    root_d, _ = find_root_dense(xn, c, mask, block_j=16)
+    root_f, _ = find_root_dense(xn, c, mask, block_j=16, fused=True)
+    assert int(root_d) == int(root_f)
+
+
+# ---------------------------------------------------------------------------
+# triangular-grid tile-count property
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("block", [8, 16, 32])
+def test_tri_tile_count_at_most_half_square(block):
+    """The fused grid visits <= half the square grid's pair tiles, for every
+    problem size (the diagonal lives in the vectorized epilogue)."""
+    for p in range(1, 520, 7):
+        tri = tri_tile_count(p, block)
+        sq = square_tile_count(p, block)
+        assert tri <= sq // 2, (p, block, tri, sq)
+        # and it still covers every unordered off-diagonal block pair
+        nt = -(-p // block)
+        assert tri == nt * (nt - 1) // 2
+
+
+def test_tri_maps_cover_each_pair_once():
+    from repro.core.pairwise import tri_block_maps
+
+    for nt in (1, 2, 3, 5, 8):
+        imap, jmap = tri_block_maps(nt)
+        pairs = set(zip(imap.tolist(), jmap.tolist()))
+        assert len(pairs) == len(imap) == nt * (nt - 1) // 2
+        assert all(i < j for i, j in pairs)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end order exactness (fused and scan vs the serial numpy oracle)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 2])
+def test_fused_order_matches_serial_oracle(seed):
+    data = sem.generate(sem.SemSpec(p=8, n=2500, density="sparse", seed=seed))
+    serial = direct_lingam.causal_order(data["x"])
+    res = causal_order(
+        data["x"], ParaLiNGAMConfig(method="dense", fused=True, min_bucket=8)
+    )
+    assert res.order == serial
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_scan_order_matches_serial_oracle(seed):
+    data = sem.generate(sem.SemSpec(p=8, n=2500, density="sparse", seed=seed))
+    serial = direct_lingam.causal_order(data["x"])
+    res = causal_order_scan(data["x"], ParaLiNGAMConfig(min_bucket=8))
+    assert res.order == serial
+    res_f = causal_order_scan(
+        data["x"], ParaLiNGAMConfig(fused=True, min_bucket=8)
+    )
+    assert res_f.order == serial
+
+
+@pytest.mark.parametrize("p", [16, 64])
+def test_fused_and_scan_match_dense_driver(p):
+    """Worker-scale parity: fused scoring and the one-dispatch scan driver
+    return the host dense driver's exact order (which the p=8 suites pin to
+    the serial numpy oracle)."""
+    data = sem.generate(sem.SemSpec(p=p, n=1500, density="sparse", seed=13))
+    r_dense = causal_order(data["x"], ParaLiNGAMConfig(method="dense"))
+    r_fused = causal_order(data["x"], ParaLiNGAMConfig(method="dense", fused=True))
+    r_scan = causal_order(data["x"], ParaLiNGAMConfig(method="scan"))
+    assert r_fused.order == r_dense.order
+    assert r_scan.order == r_dense.order
+
+
+def test_scan_kernel_backed_matches():
+    data = sem.generate(sem.SemSpec(p=8, n=1024, density="sparse", seed=6))
+    r_dense = causal_order(data["x"], ParaLiNGAMConfig(method="dense"))
+    r_scan_k = causal_order_scan(
+        data["x"], ParaLiNGAMConfig(fused=True, use_kernel=True, min_bucket=8)
+    )
+    assert r_scan_k.order == r_dense.order
+
+
+# ---------------------------------------------------------------------------
+# threshold chunk rounding (satellite regression)
+# ---------------------------------------------------------------------------
+
+
+def test_threshold_chunk_not_divisor_of_p():
+    """bucket=False with p not a multiple of chunk used to assert; the chunk
+    now rounds down to a divisor and the order is unchanged."""
+    data = sem.generate(sem.SemSpec(p=10, n=1500, density="sparse", seed=4))
+    r_thr = causal_order(
+        data["x"],
+        ParaLiNGAMConfig(method="threshold", bucket=False, chunk=16),
+    )
+    r_dense = causal_order(
+        data["x"], ParaLiNGAMConfig(method="dense", bucket=False)
+    )
+    assert r_thr.order == r_dense.order
