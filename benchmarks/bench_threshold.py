@@ -3,7 +3,20 @@
 Counts actual pair evaluations of the threshold scheduler across the whole
 causal-order recovery vs the serial baseline (sum_r r(r-1)) and the
 messaging-only baseline (sum_r r(r-1)/2), across graph densities and gamma
-growth factors (the paper's constant c, Section 4.3)."""
+growth factors (the paper's constant c, Section 4.3).
+
+Two lanes per cell:
+
+  * ``threshold_*`` — the host-driven threshold driver (one dispatch per
+    iteration; ``us`` column holds the *round* count, the savings live in
+    the derived metrics);
+  * ``scanthr_*``   — the device-resident thresholded scan
+    (``method="scan"`` + ``threshold=True``): the whole recovery in ONE
+    dispatch with the threshold state machine inside, comparison/round
+    counters measured on device. ``us`` is measured wall time, so this lane
+    captures the comparison-savings x one-dispatch *product*, not just the
+    count.
+"""
 
 from __future__ import annotations
 
@@ -34,4 +47,25 @@ def run(smoke: bool = False):
                     f"saved_vs_messaging={100 * res.saving_vs_messaging:.1f}%;"
                     f"paper_claim=93.1%",
                     p=p, n=n, density=density, gamma_growth=growth,
+                )
+
+                cfg_scan = ParaLiNGAMConfig(
+                    method="scan", threshold=True, chunk=16, gamma0=1e-6,
+                    gamma_growth=growth,
+                )
+                res_s = causal_order(x, cfg_scan)  # warm compile + counters
+                us = time_fn(
+                    lambda x: causal_order(x, cfg_scan).order,
+                    x, iters=1 if smoke else 2, warmup=0,
+                )
+                row(
+                    f"scanthr_{density}_p{p}_n{n}_c{growth:g}",
+                    us,
+                    f"comparisons={res_s.comparisons};"
+                    f"saved_vs_serial={100 * res_s.saving_vs_serial:.1f}%;"
+                    f"saved_vs_messaging={100 * res_s.saving_vs_messaging:.1f}%;"
+                    f"rounds={res_s.rounds};converged={res_s.converged};"
+                    f"match_host={res_s.order == res.order};dispatches_per_fit=1",
+                    p=p, n=n, density=density, gamma_growth=growth,
+                    path="device_scan_threshold",
                 )

@@ -1,0 +1,152 @@
+"""Cross-PR benchmark trend gate.
+
+Compares freshly produced ``BENCH_<suite>.json`` files (usually the CI smoke
+run's artifacts) against committed baselines and fails on a >``--factor``
+(default 2x) regression of the *guarded ratio metrics*:
+
+  * ``score_fused_vs_square`` — fused-triangular vs square score speedup
+    (``metrics.speedup``), the PR-2 kernel win;
+  * ``e2e_scan`` — device-resident scan vs host dense driver speedup
+    (``metrics.vs_host``), the one-dispatch win.
+
+Ratios are compared rather than raw microseconds so the gate survives
+machine differences between the baseline recorder and the CI runner. Shape
+still matters, though — the one-dispatch margin grows with p — so the gate
+has two tiers:
+
+  * **matched rows** (same row name, e.g. smoke artifacts vs the committed
+    smoke baselines in ``bench-baselines/``): the real >2x gate, applied
+    per row;
+  * **cross-shape fallback** (no common row name, e.g. smoke artifacts vs
+    the full-size baselines at the repo root): best-vs-best by name prefix,
+    printed with a LOOSE marker — it catches catastrophic regressions only,
+    because a smoke-shape ratio can legitimately sit far above a full-shape
+    one.
+
+The gate is tolerant by construction: a guarded metric missing on either
+side (new suite, renamed row, not-yet-committed baseline) is reported as
+SKIP, never FAIL, so adding suites can't break CI.
+
+    PYTHONPATH=src python -m benchmarks.trend                      # sanity: committed vs committed
+    PYTHONPATH=src python -m benchmarks.trend --fresh bench-json --baseline bench-baselines   # CI
+    PYTHONPATH=src python -m benchmarks.trend --inject-regression 3  # prove the gate trips (exits 1)
+
+Refresh the committed smoke baselines after a PR that intentionally shifts
+a guarded lane:  python -m benchmarks.run --smoke --out bench-baselines
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+# name prefix -> ratio metric guarded for that row family (higher is better)
+GUARDED = {
+    "score_fused_vs_square": "speedup",
+    "e2e_scan": "vs_host",
+}
+
+
+def _as_float(v) -> float | None:
+    """Metric values arrive as floats or as strings like '1.07x' / '93.1%'."""
+    if isinstance(v, (int, float)):
+        return float(v)
+    if isinstance(v, str):
+        try:
+            return float(v.rstrip("x%"))
+        except ValueError:
+            return None
+    return None
+
+
+def load_rows(directory: str) -> dict[str, dict]:
+    """name -> row over every BENCH_*.json in ``directory`` (missing dir or
+    no files -> empty dict; the gate treats that as all-SKIP)."""
+    rows: dict[str, dict] = {}
+    for path in sorted(glob.glob(os.path.join(directory, "BENCH_*.json"))):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"trend: skipping unreadable {path}: {e}", file=sys.stderr)
+            continue
+        for r in doc.get("rows", ()):
+            rows[r["name"]] = r
+    return rows
+
+
+def _family(rows: dict[str, dict], prefix: str, key: str) -> dict[str, float]:
+    """name -> guarded-ratio value for the rows of one family (rows whose
+    name starts with ``prefix`` and carry a parseable ``key`` metric)."""
+    out: dict[str, float] = {}
+    for name, r in rows.items():
+        if not name.startswith(prefix):
+            continue
+        v = _as_float(r.get("metrics", {}).get(key))
+        if v is not None:
+            out[name] = v
+    return out
+
+
+def check(baseline_dir: str, fresh_dir: str, factor: float,
+          inject_regression: float = 1.0) -> int:
+    """Print a verdict per guarded comparison; return the number of FAILs."""
+    baseline = load_rows(baseline_dir)
+    fresh = load_rows(fresh_dir)
+    failures = 0
+    for prefix, key in GUARDED.items():
+        base_f = _family(baseline, prefix, key)
+        fresh_f = _family(fresh, prefix, key)
+        if not base_f or not fresh_f:
+            side = "baseline" if not base_f else "fresh"
+            print(f"SKIP  {prefix}.{key}: no {side} row (tolerated)")
+            continue
+        common = sorted(base_f.keys() & fresh_f.keys())
+        if common:
+            # matched shapes: the real per-row gate
+            comparisons = [(n, base_f[n], fresh_f[n], "") for n in common]
+        else:
+            # cross-shape fallback: best-vs-best, loose by nature
+            bn = max(base_f, key=base_f.get)
+            fn = max(fresh_f, key=fresh_f.get)
+            comparisons = [(f"{fn} vs {bn}", base_f[bn], fresh_f[fn],
+                            " [LOOSE cross-shape fallback]")]
+        for label, base_v, fresh_v, note in comparisons:
+            fresh_v /= inject_regression
+            floor = base_v / factor
+            fail = fresh_v < floor
+            print(
+                f"{'FAIL' if fail else 'ok  '}  {prefix}.{key} ({label}): "
+                f"fresh={fresh_v:.3f} vs baseline={base_v:.3f}; "
+                f"floor={floor:.3f} [>{factor:g}x regression fails]{note}"
+            )
+            failures += fail
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default=".",
+                    help="directory holding the committed BENCH_*.json "
+                         "baselines (bench-baselines/ for smoke shapes)")
+    ap.add_argument("--fresh", default=".",
+                    help="directory holding the freshly produced BENCH_*.json")
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="fail when a guarded ratio drops below baseline/FACTOR")
+    ap.add_argument("--inject-regression", type=float, default=1.0,
+                    help="divide fresh metrics by this factor (gate self-test)")
+    args = ap.parse_args()
+    failures = check(args.baseline, args.fresh, args.factor,
+                     args.inject_regression)
+    if failures:
+        print(f"trend: {failures} guarded comparison(s) regressed >"
+              f"{args.factor:g}x", file=sys.stderr)
+        sys.exit(1)
+    print("trend: no guarded regressions")
+
+
+if __name__ == "__main__":
+    main()

@@ -33,6 +33,15 @@ def residual_entropy_block(xn, c_cols, xj):
     denom = jnp.sqrt(jnp.maximum(1.0 - jnp.square(c_cols), VAR_EPS))
     # u: (p, bj, n) — the big intermediate the Pallas kernel avoids spilling.
     u = (xn[:, None, :] - c_cols[:, :, None] * xj[None, :, :]) / denom[:, :, None]
+    return stream_entropy(u)
+
+
+def stream_entropy(u):
+    """Hyvarinen entropy of each length-n residual stream (reduce axis -1).
+
+    The single moment reduction every pairwise path shares: the square HR
+    blocks, the fused triangular block pairs, and the threshold scheduler's
+    gathered chunks all feed their standardized residuals through here."""
     m1 = jnp.mean(log_cosh(u), axis=-1)
     m2 = jnp.mean(u_exp_moment(u), axis=-1)
     return entropy_from_moments(m1, m2)
@@ -48,13 +57,24 @@ def residual_entropy_block_pair(xi, c_blk, xj):
     inv = jax.lax.rsqrt(jnp.maximum(1.0 - jnp.square(c_blk), VAR_EPS))[..., None]
     u_f = (xi[:, None, :] - c_blk[..., None] * xj[None, :, :]) * inv
     u_r = (xj[None, :, :] - c_blk[..., None] * xi[:, None, :]) * inv
+    return stream_entropy(u_f), stream_entropy(u_r)
 
-    def _ent(u):
-        m1 = jnp.mean(log_cosh(u), axis=-1)
-        m2 = jnp.mean(u_exp_moment(u), axis=-1)
-        return entropy_from_moments(m1, m2)
 
-    return _ent(u_f), _ent(u_r)
+def pair_moments(xn, c_vals, xj):
+    """Both-direction residual entropies for *gathered* comparison chunks.
+
+    The threshold scheduler's per-round evaluation: worker rows ``xn: (m, n)``
+    against their gathered chunk targets ``xj: (m, B, n)`` with correlations
+    ``c_vals: (m, B)``. Returns ``(hr_fwd, hr_rev)``, each ``(m, B)``, with
+    ``hr_fwd[w, b] = H(r_{x_w}^{(x_jb)})`` — like
+    :func:`residual_entropy_block_pair` both directions come from one load of
+    each stream (the messaging reuse), but the target axis is a gather, not a
+    tile, so the layout stays XLA-native (see ``repro.kernels.ops``)."""
+    inv = jax.lax.rsqrt(jnp.maximum(1.0 - jnp.square(c_vals), VAR_EPS))[..., None]
+    xi = xn[:, None, :]
+    u_f = (xi - c_vals[..., None] * xj) * inv
+    u_r = (xj - c_vals[..., None] * xi) * inv
+    return stream_entropy(u_f), stream_entropy(u_r)
 
 
 def diag_block_scores(xb, c_diag, hxb, mb):

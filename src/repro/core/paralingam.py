@@ -16,11 +16,16 @@ find-root strategies (see DESIGN.md Section 2 for the mechanism mapping):
                     the iteration terminates when every below-threshold worker
                     has finished (paper Algorithm 6's condition). Comparison
                     counts are tracked to validate the paper's ~93% savings.
-  * ``scan``      — the dense evaluation with the *outer* loop also folded
-                    on-device: all p find-root -> update iterations run in a
-                    single ``lax.fori_loop`` dispatch over fixed-size masked
-                    buffers (``causal_order_scan``), eliminating the p host
-                    round-trips and bucket re-gathers of the host driver.
+  * ``scan``      — the *outer* loop also folded on-device: all p find-root
+                    -> update iterations run in a single dispatch over
+                    fixed-size masked buffers (``causal_order_scan``),
+                    eliminating the p host round-trips and bucket re-gathers
+                    of the host driver. With ``config.threshold`` the inner
+                    evaluation is the threshold state machine rather than the
+                    dense one, so one dispatch delivers *both* the paper's
+                    comparison savings and the dispatch amortization —
+                    per-iteration comparison/round counters come back as
+                    device arrays, not host-side bookkeeping.
   * messaging is inherent to all: pair (i, j) is evaluated once and both
     S[i] += min(0, I)^2 and S[j] += min(0, -I)^2 are applied (Section 3.1).
 
@@ -36,6 +41,7 @@ as the dense path by the paper's Section 3.2 correctness argument.
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Callable
@@ -45,16 +51,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.covariance import (
-    VAR_EPS,
     cov_matrix,
     normalize,
     update_cov,
     update_data,
 )
-from repro.core.entropy import entropy_from_moments, log_cosh, u_exp_moment
 from repro.core.pairwise import (
     dense_scores,
     fused_scores,
+    pair_moments,
     pair_stat_matrix,
     row_entropies,
     scores_from_stats,
@@ -69,6 +74,10 @@ class ParaLiNGAMConfig:
     use_kernel: bool = False  # route scoring through the Pallas kernels (interpret on CPU)
     fused: bool = False  # fused triangular score path (no p x p HR round-trip)
     # threshold path (paper Sections 3.2-3.3)
+    threshold: bool = False  # method="scan": run the threshold state machine
+    #   inside the device-resident outer loop (one dispatch, thresholded
+    #   find-root per iteration). Ignored by method="dense"/"threshold",
+    #   which select the evaluation via ``method`` directly.
     chunk: int = 16  # comparison targets processed per worker per round
     gamma0: float = 1e-5  # initial threshold (paper: "a small value")
     gamma_growth: float = 2.0  # the constant c of Algorithm 6 line 16
@@ -87,6 +96,7 @@ class ParaLiNGAMResult:
     comparisons_serial: int  # sum_r r(r-1)  — DirectLiNGAM baseline
     rounds: int  # threshold-loop rounds (0 for dense)
     per_iteration: list[dict] = field(default_factory=list)
+    converged: bool = True  # False iff any threshold loop hit max_rounds
 
     @property
     def saving_vs_serial(self) -> float:
@@ -142,44 +152,31 @@ def find_root_dense(xn, c, mask, block_j: int = 32, use_kernel: bool = False,
 # ---------------------------------------------------------------------------
 
 
-def _pair_moments(xn, c_vals, xj):
-    """Forward/backward residual entropies for gathered pairs.
-
-    xn: (m, n) rows; xj: (m, B, n) gathered targets; c_vals: (m, B).
-    Returns (hr_fwd, hr_rev): H(r_i^(j)), H(r_j^(i)) each (m, B).
-    """
-    denom = jnp.sqrt(jnp.maximum(1.0 - jnp.square(c_vals), VAR_EPS))[..., None]
-    xi = xn[:, None, :]
-    u_fwd = (xi - c_vals[..., None] * xj) / denom
-    u_rev = (xj - c_vals[..., None] * xi) / denom
-
-    def _ent(u):
-        m1 = jnp.mean(log_cosh(u), axis=-1)
-        m2 = jnp.mean(u_exp_moment(u), axis=-1)
-        return entropy_from_moments(m1, m2)
-
-    return _ent(u_fwd), _ent(u_rev)
-
-
-@partial(jax.jit, static_argnames=("chunk", "max_rounds"))
-def find_root_threshold(
+def _find_root_threshold_impl(
     xn,
     c,
     mask,
-    gamma0: float,
-    gamma_growth: float,
+    gamma0,
+    gamma_growth,
     chunk: int = 16,
     max_rounds: int = 100_000,
 ):
-    """Threshold-mechanism find-root. Returns (root, scores, comparisons, rounds).
+    """Threshold-mechanism find-root state machine (shared by the jitted
+    standalone ``find_root_threshold`` and the device-resident scan driver).
+    Returns (root, scores, comparisons, rounds, converged).
 
     One while-loop round either (a) lets every *active* worker process its
     next pending chunk of comparison targets — crediting both pair endpoints
     (messaging) and dedup-ing simultaneous mutual comparisons exactly as the
     paper's scheduler line 22 / atomicCAS flags do — or (b) grows gamma when
-    no worker is below threshold (Algorithm 6 lines 15-17).
+    no worker is below threshold (Algorithm 6 lines 15-17). ``converged`` is
+    False iff the loop was cut off by ``max_rounds`` before Algorithm 6's
+    termination condition held (scores may then be incomplete).
     """
     m, _ = xn.shape
+    # The gathered-chunk evaluation is the shared ``pairwise.pair_moments``
+    # on every backend (no Pallas formulation exists for a gather layout;
+    # ``kernels.ops.pair_moments`` is the seam to add one later).
     # Round the chunk down to a divisor of m (m is static at trace time) so
     # non-power-of-two row counts (bucket=False with awkward p) still reshape
     # into whole chunks; worst case chunk=1 == the paper's one-at-a-time worker.
@@ -224,7 +221,7 @@ def find_root_threshold(
             cols = ci[:, None] * chunk + jnp.arange(chunk)[None, :]  # (m, B)
             xj = xn[cols.reshape(-1)].reshape(m, chunk, -1)
             c_vals = jnp.take_along_axis(c, cols, axis=1)
-            hr_fwd, hr_rev = _pair_moments(xn, c_vals, xj)
+            hr_fwd, hr_rev = pair_moments(xn, c_vals, xj)
             hx_j = hx[cols]
             stat = (hx_j - hx[:, None]) + (hr_fwd - hr_rev)  # I(i, j): (m, B)
 
@@ -266,7 +263,30 @@ def find_root_threshold(
 
     final = jax.lax.while_loop(cond, round_body, state0)
     root = jnp.argmin(jnp.where(mask, final["s"], jnp.inf))
-    return root, final["s"], final["comparisons"], final["rounds"]
+    # cond exits either because terminal held (converged) or because rounds
+    # hit max_rounds with terminal still False (truncated).
+    return root, final["s"], final["comparisons"], final["rounds"], final["terminal"]
+
+
+@partial(jax.jit, static_argnames=("chunk", "max_rounds"))
+def find_root_threshold(
+    xn,
+    c,
+    mask,
+    gamma0: float,
+    gamma_growth: float,
+    chunk: int = 16,
+    max_rounds: int = 100_000,
+):
+    """Jitted threshold-mechanism find-root.
+    Returns (root, scores, comparisons, rounds, converged) — see
+    ``_find_root_threshold_impl`` for the round semantics; ``converged`` is
+    False when ``max_rounds`` truncated the loop (Algorithm 6's termination
+    condition never held, so the winning score may be partial)."""
+    return _find_root_threshold_impl(
+        xn, c, mask, gamma0, gamma_growth,
+        chunk=chunk, max_rounds=max_rounds,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -300,8 +320,10 @@ def _scan_stages(p: int, min_bucket: int) -> list[tuple[int, int]]:
     return [(m, len(list(g))) for m, g in itertools.groupby(ms)]
 
 
-def _scan_order_impl(xn, c, block_j: int = 32, use_kernel: bool = False,
-                     fused: bool = False, min_bucket: int = 32):
+def _scan_order_impl(xn, c, gamma0, gamma_growth, block_j: int = 32,
+                     use_kernel: bool = False, fused: bool = False,
+                     min_bucket: int = 32, threshold: bool = False,
+                     chunk: int = 16, max_rounds: int = 100_000):
     """Device-resident outer loop: all p find-root -> update iterations in
     ONE dispatch, with no host round-trips.
 
@@ -312,11 +334,29 @@ def _scan_order_impl(xn, c, block_j: int = 32, use_kernel: bool = False,
     host driver instead syncs ``int(root)`` and re-gathers from numpy every
     one of the p iterations). Work profile and per-iteration float ops match
     the bucketed host driver exactly — padded rows are masked out of every
-    reduction — so the returned order is identical."""
+    reduction — so the returned order is identical.
+
+    ``threshold=True`` replaces the dense evaluation with the threshold
+    state machine (``_find_root_threshold_impl``'s ``lax.while_loop`` over
+    rounds: gamma growth, chunked pending-comparison processing, messaging
+    credits to both endpoints, mutual-comparison dedup) *inside* each
+    ``fori_loop`` iteration — its (m, m) done matrix and (m,) score buffer
+    live and die within the iteration, while the carried (m, n)/(m, m)
+    data buffers survive the stage compactions. One dispatch then delivers
+    both the paper's ~93% comparison savings and the dispatch amortization.
+
+    Returns ``(order, comps_it, rounds_it, conv_it)``: the causal order plus
+    per-iteration device-measured comparison counts, threshold-round counts
+    and convergence flags (for the dense evaluation these are the analytic
+    r(r-1)/2, 0 and True — same contract, no host bookkeeping)."""
     p = xn.shape[0]
+    cdtype = jnp.int64 if jax.config.read("jax_enable_x64") else jnp.int32
     order = jnp.zeros((p,), jnp.int32)
+    comps_it = jnp.zeros((p,), cdtype)
+    rounds_it = jnp.zeros((p,), jnp.int32)
+    conv_it = jnp.ones((p,), bool)
     if p == 1:
-        return order
+        return order, comps_it, rounds_it, conv_it
 
     idx_g = jnp.arange(p, dtype=jnp.int32)  # local row -> global variable id
     xb, cb = xn, c
@@ -334,29 +374,46 @@ def _scan_order_impl(xn, c, block_j: int = 32, use_kernel: bool = False,
             m_cur = m
 
         def body(k, st, idx_g=idx_g, pos=pos, m=m):
-            xb, cb, ml, order = st
-            root_l, _ = find_root_dense(
-                xb, cb, ml, block_j=min(block_j, m), use_kernel=use_kernel,
-                fused=fused,
-            )
-            order = order.at[pos + k].set(idx_g[root_l])
+            xb, cb, ml, order, comps_it, rounds_it, conv_it = st
+            if threshold:
+                root_l, _, comps, rounds, conv = _find_root_threshold_impl(
+                    xb, cb, ml, gamma0, gamma_growth,
+                    chunk=min(chunk, m), max_rounds=max_rounds,
+                )
+            else:
+                root_l, _ = find_root_dense(
+                    xb, cb, ml, block_j=min(block_j, m),
+                    use_kernel=use_kernel, fused=fused,
+                )
+                r = p - pos - k  # live rows this iteration (one retires/iter)
+                comps = (r * (r - 1) // 2).astype(cdtype)
+                rounds = jnp.asarray(0, jnp.int32)
+                conv = jnp.asarray(True)
+            it = pos + k
+            order = order.at[it].set(idx_g[root_l])
+            comps_it = comps_it.at[it].set(comps)
+            rounds_it = rounds_it.at[it].set(rounds.astype(jnp.int32))
+            conv_it = conv_it.at[it].set(conv)
             xb2 = update_data(xb, cb, root_l, ml)
             cb2 = update_cov(cb, root_l, ml)
             ml2 = ml & (jnp.arange(m) != root_l)
-            return xb2, cb2, ml2, order
+            return xb2, cb2, ml2, order, comps_it, rounds_it, conv_it
 
-        xb, cb, mloc, order = jax.lax.fori_loop(0, cnt, body, (xb, cb, mloc, order))
+        st = (xb, cb, mloc, order, comps_it, rounds_it, conv_it)
+        xb, cb, mloc, order, comps_it, rounds_it, conv_it = jax.lax.fori_loop(
+            0, cnt, body, st
+        )
         pos += cnt
 
     # One live row remains; no find-root needed (matches the host driver).
     order = order.at[p - 1].set(idx_g[jnp.argmax(mloc)])
-    return order
+    return order, comps_it, rounds_it, conv_it
 
 
 _scan_order_jit = None
 
 
-def _scan_order(xn, c, **kw):
+def _scan_order(xn, c, gamma0, gamma_growth, **kw):
     """jit of ``_scan_order_impl``, built lazily so the donation decision
     reads the backend at first *call* (a module-level ``default_backend()``
     would force JAX platform init at import time and freeze the choice).
@@ -366,10 +423,13 @@ def _scan_order(xn, c, **kw):
     if _scan_order_jit is None:
         _scan_order_jit = jax.jit(
             _scan_order_impl,
-            static_argnames=("block_j", "use_kernel", "fused", "min_bucket"),
+            static_argnames=(
+                "block_j", "use_kernel", "fused", "min_bucket",
+                "threshold", "chunk", "max_rounds",
+            ),
             donate_argnums=(0, 1) if jax.default_backend() != "cpu" else (),
         )
-    return _scan_order_jit(xn, c, **kw)
+    return _scan_order_jit(xn, c, gamma0, gamma_growth, **kw)
 
 
 def causal_order_scan(x, config: ParaLiNGAMConfig | None = None) -> ParaLiNGAMResult:
@@ -379,23 +439,51 @@ def causal_order_scan(x, config: ParaLiNGAMConfig | None = None) -> ParaLiNGAMRe
     Same bucketed work profile as the host driver, zero host round-trips:
     the win is every iteration's dispatch + sync latency — exactly the
     overhead the paper burns down by keeping all workers resident on the
-    device across the whole recovery."""
+    device across the whole recovery. With ``cfg.threshold`` the resident
+    loop runs the threshold state machine per iteration, and the reported
+    ``comparisons``/``rounds``/``per_iteration`` come from device-side
+    counters measured inside the dispatch."""
     cfg = config or ParaLiNGAMConfig()
     x = jnp.asarray(x, cfg.dtype)
     p = x.shape[0]
     xn = normalize(x)
     c = cov_matrix(xn)
-    order = _scan_order(
-        xn, c, block_j=min(cfg.block_j, p), use_kernel=cfg.use_kernel,
+    order, comps_it, rounds_it, conv_it = _scan_order(
+        xn, c,
+        jnp.asarray(cfg.gamma0, cfg.dtype), jnp.asarray(cfg.gamma_growth, cfg.dtype),
+        block_j=min(cfg.block_j, p), use_kernel=cfg.use_kernel,
         fused=cfg.fused, min_bucket=cfg.min_bucket,
+        threshold=cfg.threshold, chunk=cfg.chunk, max_rounds=cfg.max_rounds,
     )
+    comps_np = np.asarray(comps_it)
+    rounds_np = np.asarray(rounds_it)
+    conv_np = np.asarray(conv_it)
+    per_iter = [
+        {
+            "r": r,
+            "comparisons": int(comps_np[i]),
+            "rounds": int(rounds_np[i]),
+            "converged": bool(conv_np[i]),
+        }
+        for i, r in enumerate(range(p, 1, -1))
+    ]
+    converged = bool(conv_np.all())
+    if not converged:
+        warnings.warn(
+            f"find_root_threshold hit max_rounds={cfg.max_rounds} in "
+            f"{int(p - 1 - conv_np[: p - 1].sum())} of {p - 1} scan iterations; "
+            "scores may be incomplete (raise max_rounds or gamma_growth)",
+            stacklevel=2,
+        )
     comps_dense = sum(r * (r - 1) // 2 for r in range(2, p + 1))
     return ParaLiNGAMResult(
         order=[int(v) for v in np.asarray(order)],
-        comparisons=comps_dense,
+        comparisons=int(comps_np.sum()),
         comparisons_dense=comps_dense,
         comparisons_serial=2 * comps_dense,
-        rounds=0,
+        rounds=int(rounds_np.sum()),
+        per_iteration=per_iter,
+        converged=converged,
     )
 
 
@@ -416,6 +504,7 @@ def causal_order(x, config: ParaLiNGAMConfig | None = None) -> ParaLiNGAMResult:
     total_rounds = 0
     comps_dense = 0
     comps_serial = 0
+    converged_all = True
     per_iter: list[dict] = []
     mask_np = np.ones((p,), bool)
 
@@ -450,14 +539,23 @@ def causal_order(x, config: ParaLiNGAMConfig | None = None) -> ParaLiNGAMResult:
             )
             iter_comps = r * (r - 1) // 2
             iter_rounds = 0
+            iter_conv = True
         elif cfg.method == "threshold":
             chunk = min(cfg.chunk, xb.shape[0])
-            root_local, _, comps, rounds = find_root_threshold(
+            root_local, _, comps, rounds, conv = find_root_threshold(
                 xb, cb, mb, cfg.gamma0, cfg.gamma_growth,
                 chunk=chunk, max_rounds=cfg.max_rounds,
             )
             iter_comps = int(comps)
             iter_rounds = int(rounds)
+            iter_conv = bool(conv)
+            if not iter_conv:
+                warnings.warn(
+                    f"find_root_threshold hit max_rounds={cfg.max_rounds} at "
+                    f"iteration {len(order)} (r={r}); scores may be incomplete "
+                    "(raise max_rounds or gamma_growth)",
+                    stacklevel=2,
+                )
         else:
             raise ValueError(f"unknown method {cfg.method!r}")
 
@@ -465,7 +563,11 @@ def causal_order(x, config: ParaLiNGAMConfig | None = None) -> ParaLiNGAMResult:
         order.append(root)
         total_comps += iter_comps
         total_rounds += iter_rounds
-        per_iter.append({"r": r, "comparisons": iter_comps, "rounds": iter_rounds})
+        converged_all &= iter_conv
+        per_iter.append(
+            {"r": r, "comparisons": iter_comps, "rounds": iter_rounds,
+             "converged": iter_conv}
+        )
 
         xn, c, mask = _update_iteration(xn, c, jnp.asarray(root), mask)
         mask_np[root] = False
@@ -477,6 +579,7 @@ def causal_order(x, config: ParaLiNGAMConfig | None = None) -> ParaLiNGAMResult:
         comparisons_serial=comps_serial,
         rounds=total_rounds,
         per_iteration=per_iter,
+        converged=converged_all,
     )
 
 

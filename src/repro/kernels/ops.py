@@ -40,6 +40,24 @@ def score_vector(xn, c, mask, *, block: int = 8, block_n: int = 512):
     )
 
 
+def pair_moments(xn, c_vals, xj):
+    """Both-direction residual entropies for the threshold scheduler's
+    gathered comparison chunks (``(m, B)`` each; see
+    ``repro.core.pairwise.pair_moments``).
+
+    The chunk layout is a *gather* over pending targets, not a dense tile, so
+    there is no Pallas formulation: random-access rows defeat the BlockSpec
+    tiling the square/fused kernels rely on. All backends therefore share the
+    XLA-native implementation, and the threshold scheduler calls it directly
+    (``repro.core.paralingam._find_root_threshold_impl``). This wrapper is
+    the kernel-layer name reserved for a future TPU dynamic-gather kernel —
+    it is NOT yet on the scheduler's call path; wiring it in (e.g. behind
+    ``use_kernel`` like ``score_vector``) is part of adding that kernel."""
+    from repro.core.pairwise import pair_moments as _pair_moments
+
+    return _pair_moments(xn, c_vals, xj)
+
+
 def update_data(x, x_root, b, *, block_i: int = 8, block_n: int = 512):
     """Fused Algorithm 7 rank-1 data refresh via the covupdate kernel."""
     return _covupdate.update_data(

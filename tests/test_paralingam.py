@@ -87,11 +87,12 @@ def test_threshold_same_root_as_dense_per_iteration():
     c = cov_matrix(x)
     mask = jnp.ones((12,), bool)
     root_d, _ = find_root_dense(x, c, mask, block_j=12)
-    root_t, s, comps, rounds = find_root_threshold(
+    root_t, s, comps, rounds, converged = find_root_threshold(
         x, c, mask, 1e-6, 2.0, chunk=4
     )
     assert int(root_d) == int(root_t)
     assert int(comps) <= 12 * 11 // 2
+    assert bool(converged)
 
 
 @pytest.mark.parametrize("seed", [13, 29])
@@ -107,6 +108,33 @@ def test_threshold_order_and_savings_p64(seed):
     # > 0.5 == strictly better than the messaging-only baseline (which saves
     # exactly half of serial: comparisons_serial == 2 * comparisons_dense)
     assert r_thr.saving_vs_serial > 0.5
+
+
+def test_threshold_truncation_surfaced():
+    """max_rounds cutting off Algorithm 6 must not pass silently: the
+    converged flag comes back False and causal_order warns + records it."""
+    data = _data(p=8, n=1000, seed=1)
+    x = normalize(jnp.asarray(data["x"], jnp.float32))
+    c = cov_matrix(x)
+    mask = jnp.ones((8,), bool)
+    *_, conv = find_root_threshold(x, c, mask, 1e-6, 2.0, chunk=2, max_rounds=1)
+    assert not bool(conv)
+
+    with pytest.warns(UserWarning, match="max_rounds"):
+        res = causal_order(
+            data["x"],
+            ParaLiNGAMConfig(method="threshold", chunk=2, max_rounds=1,
+                             min_bucket=8),
+        )
+    assert not res.converged
+    assert not res.per_iteration[0]["converged"]
+
+    # ample rounds -> converged, recorded per iteration
+    res_ok = causal_order(
+        data["x"], ParaLiNGAMConfig(method="threshold", chunk=2, min_bucket=8)
+    )
+    assert res_ok.converged
+    assert all(it["converged"] for it in res_ok.per_iteration)
 
 
 def test_bucketing_equivalence():

@@ -1,0 +1,107 @@
+"""Thresholded device-resident scan: parity with the host threshold driver
+and the serial DirectLiNGAM oracle, plus device-counter sanity.
+
+``method="scan"`` + ``threshold=True`` runs the threshold state machine
+inside the single-dispatch outer loop; by the paper's Section 3.2 argument
+(any worker scoring below gamma has a *complete* score, any unfinished
+worker's partial score already exceeds gamma and only grows) the returned
+root per iteration — hence the whole order — is identical to the dense
+evaluation no matter how the pending chunks are laid out, even though the
+host and scan drivers pad/chunk their buffers differently.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import direct_lingam, sem
+from repro.core.paralingam import ParaLiNGAMConfig, causal_order
+
+
+def _x(p, n, seed=0, density="sparse"):
+    return sem.generate(sem.SemSpec(p=p, n=n, density=density, seed=seed))["x"]
+
+
+# p=17 (odd, prime) exercises the chunk rounding and the mid-run bucket
+# compactions (min_bucket=8 -> stages m=32,16,8); p=64 is worker scale.
+@pytest.mark.parametrize(
+    "p,n,min_bucket", [(8, 2500, 8), (17, 1800, 8), (64, 1000, 32)]
+)
+def test_scan_threshold_parity(p, n, min_bucket):
+    x = _x(p, n, seed=p)
+    serial = direct_lingam.causal_order(x)
+    r_host = causal_order(
+        x,
+        ParaLiNGAMConfig(method="threshold", chunk=16, gamma0=1e-6,
+                         min_bucket=min_bucket),
+    )
+    r_scan = causal_order(
+        x,
+        ParaLiNGAMConfig(method="scan", threshold=True, chunk=16, gamma0=1e-6,
+                         min_bucket=min_bucket),
+    )
+    assert r_scan.order == r_host.order
+    assert r_scan.order == serial
+    assert r_scan.converged
+
+
+def test_scan_threshold_counters_p64():
+    """Device-measured counters: strictly below the dense count, above the
+    paper's messaging-only halving, with real round counts threaded out."""
+    x = _x(64, 1200, seed=13)
+    res = causal_order(
+        x, ParaLiNGAMConfig(method="scan", threshold=True, chunk=16,
+                            gamma0=1e-6)
+    )
+    assert res.comparisons < res.comparisons_dense
+    assert res.saving_vs_serial > 0.5
+    assert res.rounds > 0
+    # per-iteration records come off the device arrays: p-1 find-root
+    # iterations, each with a real comparison count below its dense r(r-1)/2
+    assert len(res.per_iteration) == 63
+    assert all(
+        0 < it["comparisons"] <= it["r"] * (it["r"] - 1) // 2
+        for it in res.per_iteration
+    )
+    assert sum(it["comparisons"] for it in res.per_iteration) == res.comparisons
+    assert sum(it["rounds"] for it in res.per_iteration) == res.rounds
+    assert all(it["converged"] for it in res.per_iteration)
+
+
+def test_scan_dense_counters_match_analytic():
+    """The dense scan now reports device-derived counters too — they must
+    equal the analytic messaging-only counts it used to hardcode."""
+    x = _x(12, 1000, seed=3)
+    res = causal_order(x, ParaLiNGAMConfig(method="scan", min_bucket=8))
+    assert res.comparisons == res.comparisons_dense
+    assert res.rounds == 0
+    assert [it["comparisons"] for it in res.per_iteration] == [
+        r * (r - 1) // 2 for r in range(12, 1, -1)
+    ]
+
+
+def test_scan_threshold_truncation_warns():
+    with pytest.warns(UserWarning, match="max_rounds"):
+        res = causal_order(
+            _x(8, 800, seed=5),
+            ParaLiNGAMConfig(method="scan", threshold=True, chunk=2,
+                             max_rounds=1, min_bucket=8),
+        )
+    assert not res.converged
+
+
+def test_scan_threshold_fused_config_independent():
+    """threshold=True replaces the dense evaluation entirely, so the
+    dense-path toggles (fused, use_kernel) must not perturb the thresholded
+    scan — same order, same device-counted comparisons."""
+    x = _x(10, 1200, seed=7)
+    base = causal_order(
+        x, ParaLiNGAMConfig(method="scan", threshold=True, min_bucket=8)
+    )
+    via_kernel = causal_order(
+        x,
+        ParaLiNGAMConfig(method="scan", threshold=True, min_bucket=8,
+                         use_kernel=True, fused=True),
+    )
+    assert base.order == via_kernel.order
+    assert base.comparisons == via_kernel.comparisons
