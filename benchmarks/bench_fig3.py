@@ -12,6 +12,16 @@ TPU/JAX analogues of the paper's baselines (DESIGN.md Section 8):
   paralingam    — messaging-folded dense + threshold scheduling (ours).
 
 All four produce identical roots; we report one full find-root call.
+
+The ``ring_*`` lanes measure the FULL causal-order recovery through the
+ring-parallel driver (``dist/ring_order.causal_order_ring``) at every shard
+count the backend offers (1/2/4/8, one row each), head-to-head against the
+single-shard device-resident scan. On the 1-device CI runner only ``ring_r1``
+appears; run with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for
+the full sweep (forced host "devices" share one CPU, so ``vs_scan`` there
+measures ring overhead, not speedup — the scaling argument is HBM/wire, see
+EXPERIMENTS.md). The guarded trend metric is ``match`` (order parity with
+the scan path), which must stay 1.
 """
 
 from __future__ import annotations
@@ -114,3 +124,42 @@ def run(smoke: bool = False):
     row(f"fig3_dense_messaging_p{p}", t_ours,
         f"all_roots_match={len(set(roots.values())) == 1}", p=p, n=n,
         variant="dense_messaging")
+
+    _ring_lanes(smoke)
+
+
+def _ring_lanes(smoke: bool):
+    """Full causal order through the ring driver, one row per shard count."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.core.paralingam import ParaLiNGAMConfig, causal_order_scan
+    from repro.dist.ring_order import causal_order_ring
+
+    p, n = (32, 512) if smoke else (64, 2048)
+    x = sem.generate(sem.SemSpec(p=p, n=n, density="sparse", seed=0))["x"]
+    cfg_scan = ParaLiNGAMConfig(method="scan", min_bucket=8)
+    res_scan = causal_order_scan(x, cfg_scan)
+    t_scan = time_fn(
+        lambda x: causal_order_scan(x, cfg_scan).order, x,
+        iters=2 if smoke else 3,
+    )
+
+    devs = jax.devices()
+    cfg_ring = ParaLiNGAMConfig(ring=True, min_bucket=8)
+    for r in (1, 2, 4, 8):
+        if r > len(devs):
+            continue
+        mesh = Mesh(np.array(devs[:r]).reshape(r, 1), ("ring", "model"))
+        res = causal_order_ring(x, cfg_ring, mesh=mesh)
+        us = time_fn(
+            lambda x: causal_order_ring(x, cfg_ring, mesh=mesh).order, x,
+            iters=2 if smoke else 3,
+        )
+        row(
+            f"ring_r{r}_p{p}", us,
+            f"vs_scan={t_scan / us:.2f}x;"
+            f"match={int(res.order == res_scan.order)};"
+            f"shards={r};dispatches_per_fit=1",
+            p=p, n=n, shards=r, path="ring_order",
+        )

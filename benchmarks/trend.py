@@ -7,7 +7,17 @@ run's artifacts) against committed baselines and fails on a >``--factor``
   * ``score_fused_vs_square`` — fused-triangular vs square score speedup
     (``metrics.speedup``), the PR-2 kernel win;
   * ``e2e_scan`` — device-resident scan vs host dense driver speedup
-    (``metrics.vs_host``), the one-dispatch win.
+    (``metrics.vs_host``), the one-dispatch win;
+  * ``scanthr_`` — thresholded device-resident scan comparison savings vs
+    the serial baseline (``metrics.saved_vs_serial``, %), the PR-3
+    savings-inside-one-dispatch win;
+  * ``fig4_scanthr_`` — thresholded scan e2e speedup over the host dense
+    driver (``metrics.vs_dense_host``);
+  * ``ring_`` — ring-driven full causal order parity with the scan path
+    (``metrics.match``, 1.0 when orders are identical): a correctness
+    trend — any mismatch drops it to 0 and trips the gate. Wall-clock for
+    these lanes is forced-host-device overhead on CPU runners, so speed is
+    deliberately not guarded.
 
 Ratios are compared rather than raw microseconds so the gate survives
 machine differences between the baseline recorder and the CI runner. Shape
@@ -47,6 +57,9 @@ import sys
 GUARDED = {
     "score_fused_vs_square": "speedup",
     "e2e_scan": "vs_host",
+    "scanthr_": "saved_vs_serial",
+    "fig4_scanthr_": "vs_dense_host",
+    "ring_": "match",
 }
 
 

@@ -1,5 +1,6 @@
-"""Distributed ParaLiNGAM: the row-block ring find-root on an 8-device host
-mesh (the same shard_map code path the 512-chip dry-run exercises).
+"""Distributed ParaLiNGAM: the row-block ring find-root AND the ring-driven
+full causal order on an 8-device host mesh (the same shard_map code paths
+the 512-chip dry-run exercises).
 
     PYTHONPATH=src python examples/distributed_ring.py
 """
@@ -41,3 +42,17 @@ with jax.set_mesh(mesh):
 print(f"single-device root={int(root_1)}  ring root={int(root_8)}  "
       f"scores match: {bool(jnp.allclose(s_1, s_8, rtol=2e-4))}")
 print(f"ring find-root: {dt * 1e3:.1f} ms / iteration on 8 host devices")
+
+# --- full causal order through the ring: all p iterations device-resident
+# on a ("ring", "model") mesh — 4 row-block shards x 2 sample shards with
+# psum'd entropy moments. Each device holds p/4 rows x n/2 samples.
+from repro.core.paralingam import ParaLiNGAMConfig, causal_order_scan
+from repro.dist.ring_order import causal_order_ring
+from jax.sharding import Mesh
+
+ring_mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("ring", "model"))
+cfg = ParaLiNGAMConfig(ring=True, min_bucket=8)
+res_scan = causal_order_scan(data["x"], ParaLiNGAMConfig(min_bucket=8))
+res_ring = causal_order_ring(data["x"], cfg, mesh=ring_mesh)
+print(f"ring order == single-shard scan order: {res_ring.order == res_scan.order}")
+print(f"first 8 of causal order: {res_ring.order[:8]}")

@@ -48,6 +48,17 @@ def residual_std(cov_ij):
     return jnp.sqrt(jnp.maximum(1.0 - jnp.square(cov_ij), VAR_EPS))
 
 
+def rank1_gates(b_raw, live):
+    """The gated (b, s) pair both Eq. (10)/(11) rank-1 updates are built on:
+    clipped regression coefficient and floored residual scale, with dead
+    entries passing through unchanged (b = 0, s = 1). Shared by
+    ``update_data``/``update_cov`` and the sharded re-implementation in
+    ``dist/ring_order.py`` so the clip/floor semantics can never diverge."""
+    b = jnp.where(live, jnp.clip(b_raw, -1.0, 1.0), 0.0)
+    s = jnp.sqrt(jnp.maximum(1.0 - jnp.square(b), COLLINEAR_FLOOR))
+    return b, s
+
+
 def update_data(x, cov, root, mask):
     """UpdateData (Algorithm 7): regress the root out of every remaining row
     and renormalize via Eq. (10). Fully vectorized rank-1 update.
@@ -64,10 +75,8 @@ def update_data(x, cov, root, mask):
     """
     p, n = x.shape
     idx = jnp.arange(p)
-    b = cov[:, root]
     live = mask & (idx != root)
-    b = jnp.where(live, jnp.clip(b, -1.0, 1.0), 0.0)
-    s = jnp.sqrt(jnp.maximum(1.0 - jnp.square(b), COLLINEAR_FLOOR))
+    b, s = rank1_gates(cov[:, root], live)
     x_root = x[root][None, :]
     out = (x - b[:, None] * x_root) / s[:, None]
     # drift correction (exact renormalization of live rows)
@@ -83,8 +92,7 @@ def update_cov(cov, root, mask):
     p = cov.shape[0]
     idx = jnp.arange(p)
     live = mask & (idx != root)
-    b = jnp.where(live, jnp.clip(cov[:, root], -1.0, 1.0), 0.0)
-    s = jnp.sqrt(jnp.maximum(1.0 - jnp.square(b), COLLINEAR_FLOOR))
+    b, s = rank1_gates(cov[:, root], live)
     new = (cov - jnp.outer(b, b)) / jnp.outer(s, s)
     # Correlations cannot exceed 1; clipping prevents drift compounding.
     new = jnp.clip(new, -1.0, 1.0)

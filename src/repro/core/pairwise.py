@@ -24,26 +24,52 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.covariance import VAR_EPS
-from repro.core.entropy import entropy, entropy_from_moments, log_cosh, u_exp_moment
+from repro.core.entropy import entropy_from_moments, log_cosh, u_exp_moment
 
 
-def residual_entropy_block(xn, c_cols, xj):
+def residual_entropy_block(xn, c_cols, xj, psum_axis: str | None = None):
     """HR block for all rows of ``xn: (p, n)`` against ``xj: (bj, n)`` with
-    correlations ``c_cols: (p, bj)``. Returns (p, bj)."""
+    correlations ``c_cols: (p, bj)``. Returns (p, bj).
+
+    ``psum_axis`` names a mesh axis the samples axis is sharded over (see
+    :func:`stream_entropy`): the block math runs on the local n-shard and the
+    moments are pmean'd before the entropy epilogue."""
     denom = jnp.sqrt(jnp.maximum(1.0 - jnp.square(c_cols), VAR_EPS))
     # u: (p, bj, n) — the big intermediate the Pallas kernel avoids spilling.
     u = (xn[:, None, :] - c_cols[:, :, None] * xj[None, :, :]) / denom[:, :, None]
-    return stream_entropy(u)
+    return stream_entropy(u, psum_axis=psum_axis)
 
 
-def stream_entropy(u):
+def stream_moments(u):
+    """The two Hyvarinen moments of each length-n residual stream: per-stream
+    means of ``log cosh u`` and ``u exp(-u^2/2)`` (reduce axis -1). Split out
+    from :func:`stream_entropy` because the moments — unlike the entropy — are
+    linear in the sample axis, which is what makes them *shardable*: equal
+    sample shards can each reduce locally and ``pmean`` the results. A TPU
+    kernel taking over this reduction must likewise expose (m1, m2), not H,
+    so the cross-device combine stays a moment sum (``kernels/ops.py``)."""
+    m1 = jnp.mean(log_cosh(u), axis=-1)
+    m2 = jnp.mean(u_exp_moment(u), axis=-1)
+    return m1, m2
+
+
+def stream_entropy(u, psum_axis: str | None = None):
     """Hyvarinen entropy of each length-n residual stream (reduce axis -1).
 
     The single moment reduction every pairwise path shares: the square HR
-    blocks, the fused triangular block pairs, and the threshold scheduler's
-    gathered chunks all feed their standardized residuals through here."""
-    m1 = jnp.mean(log_cosh(u), axis=-1)
-    m2 = jnp.mean(u_exp_moment(u), axis=-1)
+    blocks, the fused triangular block pairs, the threshold scheduler's
+    gathered chunks, and the ring bodies all feed their standardized residuals
+    through here.
+
+    With ``psum_axis`` set (inside ``shard_map``), ``u``'s trailing axis holds
+    only this device's equal-size shard of the n samples: the local moments
+    are ``pmean``'d over that mesh axis before the (nonlinear) entropy
+    epilogue, which reproduces the full-sample moments exactly up to f32
+    summation order — the ring's sample-sharding seam (dist/ring_order.py)."""
+    m1, m2 = stream_moments(u)
+    if psum_axis is not None:
+        m1 = jax.lax.pmean(m1, psum_axis)
+        m2 = jax.lax.pmean(m2, psum_axis)
     return entropy_from_moments(m1, m2)
 
 
@@ -212,9 +238,10 @@ def scores_from_stats(stat, mask):
     return jnp.where(mask, s, jnp.inf)
 
 
-def row_entropies(xn, mask):
-    """H_hat of each (already normalized) row."""
-    h = entropy(xn, axis=-1)
+def row_entropies(xn, mask, psum_axis: str | None = None):
+    """H_hat of each (already normalized) row. ``psum_axis`` as in
+    :func:`stream_entropy` (rows hold local sample shards)."""
+    h = stream_entropy(xn, psum_axis=psum_axis)
     return jnp.where(mask, h, 0.0)
 
 

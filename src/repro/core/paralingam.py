@@ -69,6 +69,12 @@ from repro.core.pairwise import (
 @dataclass(frozen=True)
 class ParaLiNGAMConfig:
     method: str = "dense"  # "dense" | "threshold" | "scan"
+    ring: bool = False  # drive the FULL outer loop through the multi-device
+    #   messaging ring (dist/ring_order.causal_order_ring): row blocks shard
+    #   over the mesh's ring axis, the samples axis shards over ``model``
+    #   (entropy moments psum), and all p iterations stay device-resident.
+    #   Uses the active ``jax.set_mesh`` mesh (else all devices, flat ring);
+    #   takes precedence over ``method``. Incompatible with ``threshold``.
     # dense path
     block_j: int = 32  # j-block for the HR matrix (bounds the (p,bj,n) buffer)
     use_kernel: bool = False  # route scoring through the Pallas kernels (interpret on CPU)
@@ -490,6 +496,10 @@ def causal_order_scan(x, config: ParaLiNGAMConfig | None = None) -> ParaLiNGAMRe
 def causal_order(x, config: ParaLiNGAMConfig | None = None) -> ParaLiNGAMResult:
     """ParaLiNGAM step 1: full causal order over ``x: (p, n)`` raw samples."""
     cfg = config or ParaLiNGAMConfig()
+    if cfg.ring:
+        from repro.dist.ring_order import causal_order_ring
+
+        return causal_order_ring(x, cfg)
     if cfg.method == "scan":
         return causal_order_scan(x, cfg)
     x = jnp.asarray(x, cfg.dtype)

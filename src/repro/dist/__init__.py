@@ -1,5 +1,5 @@
-"""Distributed layer: sharding rules, the ppermute ring find-root, and JAX
-API compatibility shims.
+"""Distributed layer: sharding rules, the ppermute ring (find-root and the
+full ring-driven causal order), and JAX API compatibility shims.
 
 Import order matters: ``repro/__init__`` — which always runs before this
 package — installs the compat shims (``repro.dist.compat.install``) so the

@@ -116,26 +116,34 @@ def _flat_index(axes: tuple, sizes: tuple):
 # ---------------------------------------------------------------------------
 
 
-def _block_stat(x_own, x_vis, c_block, hx_own, hx_vis):
+def _block_stat(x_own, x_vis, c_block, hx_own, hx_vis,
+                sample_axis: str | None = None):
     """I block between own rows (rows of the result) and visiting rows.
 
     ``c_block[i, j] = c[own_i, vis_j]``. Both residual entropies of each pair
     are computed here — HR[i, j] and HR[j, i] — which is what lets one
-    evaluation credit both endpoints (messaging)."""
-    hr_fwd = residual_entropy_block(x_own, c_block, x_vis)  # H(r_own^(vis))
-    hr_rev = residual_entropy_block(x_vis, c_block.T, x_own)  # H(r_vis^(own))
+    evaluation credit both endpoints (messaging). With ``sample_axis`` the
+    rows carry only this device's n-shard and the entropy moments pmean over
+    that axis (pairwise.stream_entropy)."""
+    hr_fwd = residual_entropy_block(x_own, c_block, x_vis, sample_axis)
+    hr_rev = residual_entropy_block(x_vis, c_block.T, x_own, sample_axis)
     return (hx_vis[None, :] - hx_own[:, None]) + (hr_fwd - hr_rev.T)
 
 
-def _ring_body(x_loc, c_loc, mask_loc, *, ring_axes: tuple, ring_sizes: tuple):
-    """Per-device ring schedule. x_loc: (m, n); c_loc: (m, p); mask: (m,).
+def _ring_body(x_loc, c_loc, mask_loc, *, ring_axes: tuple, ring_sizes: tuple,
+               sample_axis: str | None = None):
+    """Per-device ring schedule. x_loc: (m, n_loc); c_loc: (m, p); mask: (m,).
 
-    Returns the (m,) score shard (inf on dead rows)."""
+    Returns the (m,) score shard (inf on dead rows). ``sample_axis`` names
+    the mesh axis the samples dimension is sharded over (None = replicated):
+    every entropy moment reduction then runs on n/|sample_axis| local samples
+    and is pmean'd — the packets that circulate shrink by the same factor, so
+    both HBM *and* ring wire traffic drop with the sample shard count."""
     m = x_loc.shape[0]
     big_r = math.prod(ring_sizes)
     r_idx = _flat_index(ring_axes, ring_sizes)
 
-    hx_loc = row_entropies(x_loc, mask_loc)
+    hx_loc = row_entropies(x_loc, mask_loc, psum_axis=sample_axis)
 
     def credit(i_stat, pm, keep):
         fwd = jnp.where(pm, jnp.square(jnp.minimum(0.0, i_stat)), 0.0)
@@ -147,7 +155,7 @@ def _ring_body(x_loc, c_loc, mask_loc, *, ring_axes: tuple, ring_sizes: tuple):
     # the antisymmetric stat is hr - hr.T (as in the dense path), so the
     # row-sum alone credits every ordered pair.
     c_intra = jax.lax.dynamic_slice_in_dim(c_loc, r_idx * m, m, axis=1)
-    hr = residual_entropy_block(x_loc, c_intra, x_loc)
+    hr = residual_entropy_block(x_loc, c_intra, x_loc, sample_axis)
     stat = pair_stat_matrix(hx_loc, hr)
     pm = mask_loc[:, None] & mask_loc[None, :] & ~jnp.eye(m, dtype=bool)
     score, _ = credit(stat, pm, jnp.asarray(True))
@@ -171,7 +179,8 @@ def _ring_body(x_loc, c_loc, mask_loc, *, ring_axes: tuple, ring_sizes: tuple):
         src = (r_idx - t) % big_r
         keep = jnp.asarray(process_pair(big_r, t, r_idx, src))
         c_vis = jax.lax.dynamic_slice_in_dim(c_loc, src * m, m, axis=1)
-        stat = _block_stat(x_loc, pkt["x"], c_vis, hx_loc, pkt["hx"])
+        stat = _block_stat(x_loc, pkt["x"], c_vis, hx_loc, pkt["hx"],
+                           sample_axis)
         pm = mask_loc[:, None] & pkt["mask"][None, :]
         fwd, rev = credit(stat, pm, keep)
         score = score + fwd
@@ -193,16 +202,21 @@ def _ring_body(x_loc, c_loc, mask_loc, *, ring_axes: tuple, ring_sizes: tuple):
 
 
 def ring_find_root(xn, c, mask, mesh, row_axes: tuple | None = None,
-                   unroll: bool = False):
+                   unroll: bool = False, sample_axis: str | None = None):
     """Distributed find-root. Returns ``(root_idx, scores)`` == dense.
 
     ``row_axes`` names the mesh axes the p rows shard over (ring axes);
-    defaults to the DP axes present in ``mesh``. Axes not in ``row_axes``
-    (e.g. ``model``) run the ring replicated. Falls back to the dense
-    single-shard evaluation when the ring is degenerate (one shard, or p not
-    divisible by the shard count). ``unroll`` is accepted for signature
-    parity with the dense path: the ring schedule is always a statically
-    unrolled python loop (R is a mesh constant).
+    defaults to the DP axes present in ``mesh``. ``sample_axis`` optionally
+    names a further mesh axis (typically ``"model"``) to shard the samples
+    axis n over: entropy moments are then computed on n/|sample_axis| local
+    samples and pmean'd (pairwise.stream_entropy), cutting the dominant
+    (m, n) buffer and the circulating packets by the same factor. Axes in
+    neither set run the ring replicated. Falls back to the dense single-shard
+    evaluation when the ring is degenerate (one shard, or p not divisible by
+    the shard count); ``sample_axis`` is dropped when n doesn't divide.
+    ``unroll`` is accepted for signature parity with the dense path: the ring
+    schedule is always a statically unrolled python loop (R is a mesh
+    constant).
     """
     del unroll
     sizes = dict(mesh.shape)
@@ -212,7 +226,7 @@ def ring_find_root(xn, c, mask, mesh, row_axes: tuple | None = None,
     big_r = 1
     for a in row_axes:
         big_r *= sizes[a]
-    p = xn.shape[0]
+    p, n = xn.shape
 
     if big_r <= 1 or p % big_r != 0 or len(row_axes) > 2:
         from repro.core.pairwise import dense_scores
@@ -220,15 +234,24 @@ def ring_find_root(xn, c, mask, mesh, row_axes: tuple | None = None,
         s, _, _ = dense_scores(xn, c, mask, block_j=min(32, p))
         return jnp.argmin(s), s
 
+    if sample_axis is not None and (
+        sample_axis in row_axes
+        or sizes.get(sample_axis, 1) <= 1
+        or n % sizes[sample_axis] != 0
+    ):
+        sample_axis = None
+    x_spec = P(row_axes, sample_axis)
+
     ring_sizes = tuple(sizes[a] for a in row_axes)
     # jax.shard_map is the compat-installed surface on 0.4.x and the real
     # API on newer JAX (where jax.experimental.shard_map no longer exists).
     body = jax.shard_map(
         lambda x, cm, mk: _ring_body(
-            x, cm, mk, ring_axes=row_axes, ring_sizes=ring_sizes
+            x, cm, mk, ring_axes=row_axes, ring_sizes=ring_sizes,
+            sample_axis=sample_axis,
         ),
         mesh=mesh,
-        in_specs=(P(row_axes, None), P(row_axes, None), P(row_axes)),
+        in_specs=(x_spec, P(row_axes, None), P(row_axes)),
         out_specs=P(row_axes),
         check_vma=False,
     )

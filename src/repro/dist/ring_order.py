@@ -1,0 +1,301 @@
+"""Ring-parallel *full* causal order: the paper's Section 3.1 worker ring
+promoted from a find-root helper (dist/ring.py) to the driver of all p
+DirectLiNGAM iterations.
+
+``causal_order_ring`` keeps the per-device row blocks, correlation rows and
+credit accumulators device-resident across the whole recovery on a 2-axis
+``("ring", "model")`` mesh:
+
+  * **ring axis** — the p rows (and the matching correlation rows) shard into
+    contiguous blocks, exactly as in ``ring_find_root``. Each outer iteration
+    runs the messaging ring schedule (blocks circulate, one evaluation
+    credits both endpoints, antipodal dedup via ``process_pair``), picks the
+    global root from the all-gathered (m,)-score vector, then applies the
+    Eq. (10)/(11) rank-1 data + covariance updates *in place on each shard* —
+    only the root's data row (n/|model| floats) and correlation row (m
+    floats) cross the wire, never the blocks themselves. The ordered row is
+    re-masked, not re-sharded.
+  * **model axis** — the samples axis n shards over ``model`` inside the ring
+    body: every entropy moment reduction (``pairwise.stream_entropy``) runs
+    on n/|model| local samples and the two Hyvarinen moments are pmean'd
+    before the nonlinear entropy epilogue. This cuts the dominant (m, n) data
+    buffer per device — and the circulating block packets — by the model
+    shard count.
+
+The outer loop reuses the host/scan drivers' power-of-two bucket schedule
+(``ring_order_stages``): block sizes stay static within a stage, so the ring
+schedule compiles once per stage (<= log2 p specializations), and the <=
+log2 p stage transitions compact live rows with a device-side
+``jnp.nonzero(size=m)`` gather — the only points where rows move between
+shards. Everything runs in ONE jit dispatch, like ``causal_order_scan``.
+
+Exactness: identical causal orders to ``causal_order`` (host driver),
+``causal_order_scan`` and the serial numpy oracle; scores match the dense
+evaluation to f32 summation order (asserted across 1/2/4/8-shard rings in
+tests/test_ring_order.py, which the CI ``multidevice`` lane runs on 8 forced
+host devices).
+"""
+
+from __future__ import annotations
+
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.covariance import VAR_EPS, cov_matrix, normalize, rank1_gates
+from repro.core.paralingam import _next_pow2, _scan_stages
+from repro.dist.ring import _ring_body
+
+
+# ---------------------------------------------------------------------------
+# schedule (pure, unit-testable)
+# ---------------------------------------------------------------------------
+
+
+def ring_order_stages(p: int, min_bucket: int, r: int) -> list[tuple[int, int]]:
+    """Static stage plan ``[(buffer size m, iteration count), ...]``.
+
+    The scan driver's power-of-two bucket schedule (``_scan_stages``) with
+    the bucket floor raised to the (power-of-two) ring size ``r``: each
+    stage's m is pow-2, >= r (so the m/r-row blocks stay non-empty and
+    equal, hence divisible), and >= the live-row count of every iteration it
+    covers. Total iterations sum to p - 1 (the last live row needs no
+    find-root). With r=1 this IS the scan schedule."""
+    if r & (r - 1):
+        raise ValueError(f"ring size must be a power of two, got {r}")
+    if r > _next_pow2(p):
+        # Ring wider than the padded problem: one stage, one row block of
+        # size r/r = 1 per device, the excess rows dead from the start.
+        return [(r, p - 1)] if p > 1 else []
+    return _scan_stages(p, _next_pow2(max(min_bucket, r)))
+
+
+# ---------------------------------------------------------------------------
+# the staged ring driver (one jit dispatch)
+# ---------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=None)
+def _make_ring_order_fn(mesh: Mesh, sample_axis: str | None, p: int, n: int,
+                        min_bucket: int):
+    """Build the jitted staged ring driver for one (mesh, problem) shape.
+
+    Cached on the canonical mesh + static shape so repeated fits reuse the
+    compiled executable (jax Mesh hashes by device ids + axis names)."""
+    big_r = mesh.shape["ring"]
+    stages = ring_order_stages(p, min_bucket, big_r)
+
+    def make_stage(m: int, cnt: int, pos: int):
+        m_l = m // big_r
+
+        def iteration(k, st, ig_all):
+            x_loc, c_loc, mk, ig, order = st
+            # --- find root: messaging ring over the live blocks ---
+            scores = _ring_body(
+                x_loc, c_loc, mk, ring_axes=("ring",), ring_sizes=(big_r,),
+                sample_axis=sample_axis,
+            )
+            s_all = jax.lax.all_gather(scores, "ring", tiled=True)  # (m,)
+            mk_all = jax.lax.all_gather(mk, "ring", tiled=True)
+            root = jnp.argmin(s_all).astype(jnp.int32)  # stage-buffer index
+            order = order.at[pos + k].set(ig_all[root])
+
+            # --- broadcast the root's rows: the only per-iteration wire
+            # traffic besides the (m,) score/mask gathers. x_root is the
+            # *local sample shard* of the root row ((n/|model|,)), c_root its
+            # full correlation row ((m,)).
+            my = jax.lax.axis_index("ring")
+            owns = (my == root // m_l)
+            r_l = root % m_l
+            x_root = jax.lax.psum(
+                jnp.where(
+                    owns, jax.lax.dynamic_index_in_dim(x_loc, r_l, 0, False),
+                    0.0,
+                ),
+                "ring",
+            )
+            c_root = jax.lax.psum(
+                jnp.where(
+                    owns, jax.lax.dynamic_index_in_dim(c_loc, r_l, 0, False),
+                    0.0,
+                ),
+                "ring",
+            )
+
+            # --- UpdateData (Alg. 7, Eq. 10) on own rows, in place.
+            # Matches covariance.update_data: dead + root rows pass through
+            # (b = 0, s = 1, scale = 1).
+            row_ids = my * m_l + jnp.arange(m_l, dtype=jnp.int32)
+            live = mk & (row_ids != root)
+            b_raw = jax.lax.dynamic_index_in_dim(c_loc, root, 1, False)  # (m_l,)
+            b, s_row = rank1_gates(b_raw, live)
+            out = (x_loc - b[:, None] * x_root[None, :]) / s_row[:, None]
+            sq = jnp.sum(jnp.square(out), axis=1)
+            if sample_axis is not None:
+                sq = jax.lax.psum(sq, sample_axis)
+            var = sq / max(n - 1, 1)
+            scale = jnp.where(live, jax.lax.rsqrt(jnp.maximum(var, VAR_EPS)), 1.0)
+            x2 = out * scale[:, None]
+
+            # --- UpdateCovMat (Alg. 8, Eq. 11) on own rows x all columns.
+            # b over columns comes from the broadcast root row (c is exactly
+            # symmetric), gated by the *global* live mask so dead columns
+            # pass through — same contract as covariance.update_cov.
+            col_ids = jnp.arange(m, dtype=jnp.int32)
+            col_live = mk_all & (col_ids != root)
+            b_col, s_col = rank1_gates(c_root, col_live)
+            c2 = jnp.clip(
+                (c_loc - b[:, None] * b_col[None, :])
+                / (s_row[:, None] * s_col[None, :]),
+                -1.0, 1.0,
+            )
+            c2 = jnp.where(row_ids[:, None] == col_ids[None, :], 1.0, c2)
+
+            # --- retire the root: re-mask, don't re-shard.
+            mk2 = mk & (row_ids != root)
+            return x2, c2, mk2, ig, order
+
+        def body(x_loc, c_loc, mk_loc, ig_loc, order):
+            # The row-id -> variable-id map only changes at compactions, so
+            # its gather runs once per stage, not once per iteration.
+            ig_all = jax.lax.all_gather(ig_loc, "ring", tiled=True)
+            return jax.lax.fori_loop(
+                0, cnt, lambda k, st: iteration(k, st, ig_all),
+                (x_loc, c_loc, mk_loc, ig_loc, order),
+            )
+
+        return jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(
+                P("ring", sample_axis), P("ring", None), P("ring"),
+                P("ring"), P(),
+            ),
+            out_specs=(
+                P("ring", sample_axis), P("ring", None), P("ring"),
+                P("ring"), P(),
+            ),
+            check_vma=False,
+        )
+
+    stage_fns = []
+    pos = 0
+    for m, cnt in stages:
+        stage_fns.append((m, cnt, make_stage(m, cnt, pos)))
+        pos += cnt
+
+    @jax.jit
+    def run(xn, c):
+        order = jnp.zeros((p,), jnp.int32)
+        idx_g = jnp.arange(p, dtype=jnp.int32)
+        xb, cb = xn, c
+        mloc = jnp.ones((p,), bool)
+        m_cur = p
+        pos = 0
+        for m, cnt, stage in stage_fns:
+            if m != m_cur:
+                # Compaction (or initial pad-to-pow2): the only point rows
+                # move between shards — <= log2 p times per recovery, vs the
+                # host driver's re-gather every iteration.
+                live = p - pos  # static: one root retires per iteration
+                sel = jnp.nonzero(mloc, size=m, fill_value=0)[0].astype(jnp.int32)
+                idx_g = idx_g[sel]
+                xb = xb[sel]
+                cb = cb[sel][:, sel]
+                mloc = jnp.arange(m) < live
+                m_cur = m
+            xb, cb, mloc, idx_g, order = stage(xb, cb, mloc, idx_g, order)
+            pos += cnt
+        # One live row remains; no find-root needed (matches the host driver).
+        order = order.at[p - 1].set(idx_g[jnp.argmax(mloc)])
+        return order
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# public entry point
+# ---------------------------------------------------------------------------
+
+
+def _canonical_mesh(mesh, n: int):
+    """Flatten any mesh to the 2-axis ``("ring", "model")`` form.
+
+    The model size is taken from the given mesh's ``model`` axis (1 when
+    absent); every other axis folds into the ring. Returns
+    ``(canon_mesh, ring_size, sample_axis)`` with ``sample_axis`` None when
+    the samples axis cannot shard (no model axis, or n not divisible)."""
+    if mesh is None:
+        from repro.dist import compat
+
+        mesh = compat.current_mesh()
+    if mesh is None:
+        devs = np.array(jax.devices())
+        msize = 1
+    else:
+        devs = np.asarray(mesh.devices).reshape(-1)
+        msize = int(dict(mesh.shape).get("model", 1))
+    total = devs.size
+    big_r = total // msize
+    canon = Mesh(devs.reshape(big_r, msize), ("ring", "model"))
+    sample_axis = "model" if (msize > 1 and n % msize == 0) else None
+    return canon, big_r, sample_axis
+
+
+def causal_order_ring(x, config=None, mesh=None):
+    """Full causal order with the ring as the outer-loop driver.
+
+    ``mesh`` defaults to the active ``jax.set_mesh`` mesh, else a flat ring
+    over all devices; any shape is canonicalized by :func:`_canonical_mesh`
+    (``model`` axis -> sample sharding, everything else -> ring). Degenerate
+    configurations (non-power-of-two ring) fall back to
+    ``causal_order_scan`` — same order, single shard.
+
+    Returns the same ``ParaLiNGAMResult`` contract as the dense scan driver:
+    analytic per-iteration comparison counts (the ring evaluates every live
+    pair once, messaging-credited to both endpoints), zero threshold rounds.
+    """
+    from repro.core.paralingam import (
+        ParaLiNGAMConfig,
+        ParaLiNGAMResult,
+        causal_order_scan,
+    )
+
+    cfg = config or ParaLiNGAMConfig()
+    if cfg.threshold or cfg.method == "threshold":
+        raise ValueError(
+            "causal_order_ring runs the dense messaging evaluation; "
+            "threshold-in-ring is not implemented (use method='scan' with "
+            "threshold=True, or ring=False)"
+        )
+    x = jnp.asarray(x, cfg.dtype)
+    p, n = x.shape
+    canon, big_r, sample_axis = _canonical_mesh(mesh, n)
+    if big_r & (big_r - 1):
+        return causal_order_scan(x, cfg)
+
+    xn = normalize(x)
+    c = cov_matrix(xn)
+    run = _make_ring_order_fn(
+        canon, sample_axis, p, n, _next_pow2(max(cfg.min_bucket, 1))
+    )
+    order = run(xn, c)
+
+    comps_dense = sum(r * (r - 1) // 2 for r in range(2, p + 1))
+    per_iter = [
+        {"r": r, "comparisons": r * (r - 1) // 2, "rounds": 0,
+         "converged": True}
+        for r in range(p, 1, -1)
+    ]
+    return ParaLiNGAMResult(
+        order=[int(v) for v in np.asarray(order)],
+        comparisons=comps_dense,
+        comparisons_dense=comps_dense,
+        comparisons_serial=2 * comps_dense,
+        rounds=0,
+        per_iteration=per_iter,
+        converged=True,
+    )

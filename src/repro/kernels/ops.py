@@ -5,6 +5,16 @@ correctness validation; on TPU they compile natively. The dry-run lowering
 path uses the pure-jnp oracles (``repro.core.pairwise``) so the compiled HLO
 reflects the XLA-native formulation on the 512-device mesh — kernel
 micro-performance is reasoned about separately in EXPERIMENTS.md.
+
+Sample-sharded moments seam: the ring paths (``dist/ring.py`` /
+``dist/ring_order.py``) shard the samples axis over ``model`` and pmean the
+two Hyvarinen moments across shards *before* the nonlinear entropy epilogue
+(``pairwise.stream_moments`` / ``stream_entropy(psum_axis=...)``). A TPU
+kernel replacing those reductions must therefore return the (m1, m2) moment
+pair — not the finished entropy — so the cross-device combine stays a plain
+moment mean; the entropy epilogue then runs replicated on the combined
+moments. None of the kernels below is wired into the sharded ring bodies
+yet for exactly this reason: they emit H, not moments.
 """
 
 from __future__ import annotations

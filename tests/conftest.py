@@ -28,9 +28,31 @@ def pytest_configure(config):
         "markers",
         "slow: subprocess-based multi-device tests (excluded from the fast CI lane)",
     )
+    config.addinivalue_line(
+        "markers",
+        "requires_multidevice(n): in-process test needing >= n JAX devices; "
+        "auto-skipped when the backend has fewer (the CI `multidevice` lane "
+        "forces 8 host devices via XLA_FLAGS so these run on every PR)",
+    )
 
 
 def pytest_collection_modifyitems(config, items):
+    device_count = None  # resolved lazily: only init JAX if a test needs it
     for item in items:
         if os.path.basename(str(item.fspath)) in _SLOW_MODULES:
             item.add_marker(pytest.mark.slow)
+        marker = item.get_closest_marker("requires_multidevice")
+        if marker is not None:
+            need = marker.args[0] if marker.args else 2
+            if device_count is None:
+                import jax
+
+                device_count = jax.device_count()
+            if device_count < need:
+                item.add_marker(
+                    pytest.mark.skip(
+                        reason=f"needs {need} devices, have {device_count} "
+                        "(run with XLA_FLAGS=--xla_force_host_platform_"
+                        "device_count=8)"
+                    )
+                )

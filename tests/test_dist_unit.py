@@ -14,6 +14,7 @@ from repro import configs
 from repro.core.covariance import cov_matrix, normalize
 from repro.core.paralingam import find_root_dense
 from repro.dist.ring import process_pair, ring_find_root, ring_steps
+from repro.dist.ring_order import ring_order_stages
 from repro.dist.sharding import NO_SHARDING, ShardingRules, make_rules
 
 
@@ -149,6 +150,76 @@ def test_ring_schedule_step_counts():
     # meet once (coverage test above), and the R - R//2 return hops complete
     # a full circle so each accumulator lands back at its owner.
     assert [ring_steps(r) for r in range(1, 9)] == [0, 1, 1, 2, 2, 3, 3, 4]
+
+
+# ---------------------------------------------------------------------------
+# ring-order stage schedule (pure): the compaction sequence
+# ---------------------------------------------------------------------------
+
+
+def _pair_eval_counts(m: int, r: int) -> dict:
+    """How often each unordered row pair of an m-row stage buffer is
+    evaluated in ONE ring-order iteration: intra-block pairs via the step-0
+    self block, inter-block pairs via the ``process_pair`` schedule."""
+    m_l = m // r
+    counts: dict = {}
+
+    def bump(a, b):
+        key = (min(a, b), max(a, b))
+        counts[key] = counts.get(key, 0) + 1
+
+    for d in range(r):
+        rows = range(d * m_l, (d + 1) * m_l)
+        for a in rows:
+            for b in rows:
+                if a < b:
+                    bump(a, b)
+    for t in range(1, ring_steps(r) + 1):
+        for dst in range(r):
+            src = (dst - t) % r
+            if process_pair(r, t, dst, src):
+                for a in range(dst * m_l, (dst + 1) * m_l):
+                    for b in range(src * m_l, (src + 1) * m_l):
+                        bump(a, b)
+    return counts
+
+
+@pytest.mark.parametrize("r", [1, 2, 4, 8])
+@pytest.mark.parametrize("p,min_bucket", [(8, 8), (17, 8), (33, 16), (64, 8), (100, 32)])
+def test_ring_order_schedule_pairs_once_across_compactions(p, min_bucket, r):
+    """The antipodal-dedup invariant extended to the full compaction
+    sequence: in EVERY iteration of EVERY stage, each unordered row pair of
+    the stage buffer (live pairs are a subset) is evaluated exactly once —
+    no pair is dropped or double-credited as buckets shrink."""
+    stages = ring_order_stages(p, min_bucket, r)
+    assert sum(cnt for _, cnt in stages) == p - 1
+    sizes = [m for m, _ in stages]
+    assert sizes == sorted(sizes, reverse=True)  # buckets only shrink
+    live = p
+    for m, cnt in stages:
+        assert m % r == 0 and (m & (m - 1)) == 0  # pow-2, whole blocks
+        counts = _pair_eval_counts(m, r)
+        want = {(a, b) for a in range(m) for b in range(a + 1, m)}
+        assert set(counts) == want
+        assert all(v == 1 for v in counts.values())
+        for _ in range(cnt):
+            assert live <= m  # buffer always holds every live row
+            live -= 1
+    assert live == 1  # the final row needs no find-root
+
+
+def test_ring_order_stages_match_scan_profile_when_ring_degenerate():
+    """With r=1 and a pow-2 min_bucket the ring schedule IS the scan
+    driver's bucket schedule — same buffers, same iteration counts."""
+    from repro.core.paralingam import _scan_stages
+
+    for p, mb in ((8, 8), (17, 8), (64, 32), (100, 32)):
+        assert ring_order_stages(p, mb, 1) == _scan_stages(p, mb)
+
+
+def test_ring_order_stages_reject_non_pow2_ring():
+    with pytest.raises(ValueError):
+        ring_order_stages(64, 8, 6)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,213 @@
+"""Ring-driven full causal order: parity against the host driver, the
+device-resident scan, and the serial numpy oracle on 1/2/4/8-shard rings —
+including odd-p masking, mid-run compactions, and sample-sharded (psum)
+entropy moments.
+
+Multi-shard cases carry ``requires_multidevice(n)`` and auto-skip below n
+devices; the CI ``multidevice`` lane forces 8 host devices so every shard
+count runs on every PR. The shapes mirror tests/test_threshold_scan.py:
+p=17 (odd, prime) exercises padding + mid-run bucket compactions
+(min_bucket=8 -> stages m=32,16,8), p=64 is worker scale.
+"""
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import direct_lingam, sem
+from repro.core.covariance import cov_matrix, normalize
+from repro.core.pairwise import stream_entropy, stream_moments
+from repro.core.paralingam import (
+    ParaLiNGAMConfig,
+    causal_order,
+    causal_order_scan,
+    find_root_dense,
+)
+from repro.dist.ring import ring_find_root
+from repro.dist.ring_order import causal_order_ring
+
+# p -> (n, min_bucket); seeds follow the threshold-scan suite (seed = p).
+CASES = {8: (2500, 8), 17: (1800, 8), 64: (1000, 32)}
+
+
+@functools.lru_cache(maxsize=None)
+def _problem(p: int):
+    n, min_bucket = CASES[p]
+    x = sem.generate(sem.SemSpec(p=p, n=n, density="sparse", seed=p))["x"]
+    serial = direct_lingam.causal_order(x)
+    return x, tuple(serial), min_bucket
+
+
+def _ring_mesh(r: int, msize: int = 1) -> Mesh:
+    devs = np.array(jax.devices()[: r * msize])
+    return Mesh(devs.reshape(r, msize), ("ring", "model"))
+
+
+def _assert_ring_parity(p: int, mesh: Mesh):
+    x, serial, min_bucket = _problem(p)
+    cfg = ParaLiNGAMConfig(ring=True, min_bucket=min_bucket)
+    res = causal_order_ring(x, cfg, mesh=mesh)
+    assert res.order == list(serial)
+    r_scan = causal_order_scan(x, ParaLiNGAMConfig(min_bucket=min_bucket))
+    assert res.order == r_scan.order
+    # same analytic counter contract as the dense scan
+    assert res.comparisons == r_scan.comparisons_dense
+    assert res.converged and res.rounds == 0
+    assert len(res.per_iteration) == p - 1
+
+
+# ---------------------------------------------------------------------------
+# parity: 1/2/4/8-shard rings vs scan + serial oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("p", sorted(CASES))
+def test_ring_order_single_shard(p):
+    _assert_ring_parity(p, _ring_mesh(1))
+
+
+@pytest.mark.requires_multidevice(2)
+@pytest.mark.parametrize("p", sorted(CASES))
+def test_ring_order_two_shards(p):
+    _assert_ring_parity(p, _ring_mesh(2))
+
+
+@pytest.mark.requires_multidevice(4)
+@pytest.mark.parametrize("p", sorted(CASES))
+def test_ring_order_four_shards(p):
+    _assert_ring_parity(p, _ring_mesh(4))
+
+
+@pytest.mark.requires_multidevice(8)
+@pytest.mark.parametrize("p", sorted(CASES))
+def test_ring_order_eight_shards(p):
+    _assert_ring_parity(p, _ring_mesh(8))
+
+
+@pytest.mark.requires_multidevice(4)
+@pytest.mark.parametrize("p", sorted(CASES))
+def test_ring_order_sample_sharded(p):
+    """2x2 ("ring", "model") mesh: rows ring-shard AND samples model-shard,
+    entropy moments psum'd — orders still match the oracle exactly."""
+    _assert_ring_parity(p, _ring_mesh(2, msize=2))
+
+
+@pytest.mark.requires_multidevice(8)
+def test_ring_order_sample_sharded_wide(p=64):
+    _assert_ring_parity(p, _ring_mesh(2, msize=4))
+
+
+# ---------------------------------------------------------------------------
+# routing + degenerate configurations
+# ---------------------------------------------------------------------------
+
+
+def test_config_ring_routes_through_causal_order():
+    """cfg.ring routes causal_order to the ring driver using the active (or
+    default all-devices) mesh — same order as the scan path."""
+    x, serial, min_bucket = _problem(17)
+    res = causal_order(x, ParaLiNGAMConfig(ring=True, min_bucket=min_bucket))
+    assert res.order == list(serial)
+
+
+@pytest.mark.requires_multidevice(8)
+def test_config_ring_uses_active_mesh():
+    x, serial, min_bucket = _problem(8)
+    mesh = _ring_mesh(4, msize=2)
+    with jax.set_mesh(mesh):
+        res = causal_order(
+            x, ParaLiNGAMConfig(ring=True, min_bucket=min_bucket)
+        )
+    assert res.order == list(serial)
+
+
+def test_ring_threshold_combination_rejected():
+    x, _, _ = _problem(8)
+    with pytest.raises(ValueError, match="threshold"):
+        causal_order(x, ParaLiNGAMConfig(ring=True, threshold=True))
+    # method="threshold" must not silently degrade to the dense evaluation
+    with pytest.raises(ValueError, match="threshold"):
+        causal_order(x, ParaLiNGAMConfig(ring=True, method="threshold"))
+
+
+@pytest.mark.requires_multidevice(3)
+def test_ring_order_nonpow2_ring_falls_back_to_scan():
+    """A 3-device ring can't satisfy the pow-2 block schedule -> scan
+    fallback, identical order."""
+    x, serial, min_bucket = _problem(8)
+    devs = np.array(jax.devices()[:3])
+    mesh = Mesh(devs.reshape(3, 1), ("ring", "model"))
+    res = causal_order_ring(
+        x, ParaLiNGAMConfig(ring=True, min_bucket=min_bucket), mesh=mesh
+    )
+    assert res.order == list(serial)
+
+
+# ---------------------------------------------------------------------------
+# sample-sharded (psum) entropy moments == replicated moments
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_moments_match_full_moments():
+    """The math the psum relies on: per-shard moment means averaged over
+    equal shards equal the full-sample moments (linearity), so the entropy
+    epilogue on combined moments equals the replicated entropy. Pure jnp —
+    no mesh needed."""
+    rng = np.random.default_rng(7)
+    u = jnp.asarray(rng.standard_normal((5, 4, 1024)), jnp.float32)
+    h_full = stream_entropy(u)
+    for shards in (2, 4, 8):
+        parts = jnp.split(u, shards, axis=-1)
+        m1s, m2s = zip(*(stream_moments(part) for part in parts))
+        m1 = sum(m1s) / shards
+        m2 = sum(m2s) / shards
+        from repro.core.entropy import entropy_from_moments
+
+        h_sharded = entropy_from_moments(m1, m2)
+        np.testing.assert_allclose(
+            np.asarray(h_full), np.asarray(h_sharded), rtol=1e-5, atol=1e-6
+        )
+
+
+@pytest.mark.requires_multidevice(2)
+def test_psum_moments_match_replicated_under_shard_map():
+    """stream_entropy(psum_axis="model") inside shard_map over a 2-way
+    sample shard reproduces the replicated entropies to f32 roundoff."""
+    rng = np.random.default_rng(11)
+    u = jnp.asarray(rng.standard_normal((16, 2048)), jnp.float32)
+    h_rep = stream_entropy(u)
+    mesh = Mesh(np.array(jax.devices()[:2]), ("model",))
+    h_psum = jax.shard_map(
+        lambda ul: stream_entropy(ul, psum_axis="model"),
+        mesh=mesh,
+        in_specs=P(None, "model"),
+        out_specs=P(),
+        check_vma=False,
+    )(u)
+    np.testing.assert_allclose(
+        np.asarray(h_rep), np.asarray(h_psum), rtol=1e-5, atol=1e-6
+    )
+
+
+@pytest.mark.requires_multidevice(4)
+def test_ring_find_root_sample_sharded_matches_dense():
+    """ring_find_root with sample_axis="model" on a (2, 2) mesh: same root
+    and scores (to f32 roundoff) as the dense single-device evaluation."""
+    rng = np.random.default_rng(5)
+    p, n = 32, 2048
+    xn = normalize(jnp.asarray(rng.standard_normal((p, n)), jnp.float32))
+    c = cov_matrix(xn)
+    mask = jnp.ones((p,), bool)
+    root_d, s_d = find_root_dense(xn, c, mask, block_j=32)
+    mesh = _ring_mesh(2, msize=2)
+    root_r, s_r = ring_find_root(
+        xn, c, mask, mesh, row_axes=("ring",), sample_axis="model"
+    )
+    assert int(root_d) == int(root_r)
+    np.testing.assert_allclose(
+        np.asarray(s_d), np.asarray(s_r), rtol=2e-4, atol=1e-5
+    )
