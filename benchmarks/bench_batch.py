@@ -1,0 +1,94 @@
+"""Batched one-dispatch fit throughput: ``fit_batch`` (one vmapped dispatch
+for B datasets) head-to-head against the serial per-dataset ``fit`` loop (B
+dispatches), plus the serving engine's mixed-shape bucketed path.
+
+The ``batch_fit_*`` ratio (``vs_serial_loop``) is the dispatch-amortization
+product the AcceleratedLiNGAM comparison predicts: the batched dispatch pays
+compile+launch overhead once and lets XLA fuse across the dataset axis, the
+serial loop pays it B times. On CPU the margin is modest (launch overhead is
+microseconds); on accelerators it is the difference between launch-bound and
+compute-bound serving (see EXPERIMENTS.md "One-dispatch fit and batched
+throughput"). The ``batch_engine_mixed`` lane runs ragged shapes through the
+pow-2 bucketing engine so the measured ratio includes the padding overhead a
+real request mix pays.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, time_fns_interleaved
+from repro.core import sem
+from repro.core.paralingam import ParaLiNGAMConfig, fit, fit_batch
+from repro.serve.lingam_engine import LingamEngine, LingamServeConfig
+
+
+def _datasets(p, n, b, seed0=0):
+    return np.stack([
+        sem.generate(sem.SemSpec(p=p, n=n, seed=seed0 + i))["x"]
+        for i in range(b)
+    ])
+
+
+def run(smoke: bool = False):
+    cfg = ParaLiNGAMConfig(min_bucket=16)
+    cells = ((16, 128, 8), (32, 128, 16)) if smoke else \
+        ((32, 256, 16), (64, 256, 8))
+
+    for p, n, b in cells:
+        xs = _datasets(p, n, b)
+
+        def batched(xs=xs):
+            res = fit_batch(xs, cfg)
+            return res.orders, res.b
+
+        def serial(xs=xs):
+            return [fit(xs[i], cfg)[1] for i in range(xs.shape[0])]
+
+        times = time_fns_interleaved(
+            {"batch": batched, "serial": serial}, iters=3
+        )
+        t_batch, t_serial = times["batch"], times["serial"]
+        row(
+            f"batch_fit_p{p}_n{n}_b{b}", t_batch,
+            f"vs_serial_loop={t_serial / t_batch:.2f}x;"
+            f"fits_per_s={b / (t_batch / 1e6):.1f};"
+            f"serial_us={t_serial:.0f};dispatches=1_vs_{b}",
+            p=p, n=n, batch=b,
+        )
+
+    # Mixed-shape traffic through the serving engine: ragged requests share
+    # pow-2 (p, n) buckets, so the whole mix costs a handful of dispatches.
+    # The measured ratio nets the batching win against the padding waste, so
+    # it depends on where the mix sits in its buckets (a 192->256 sample pad
+    # alone costs 1.33x — see EXPERIMENTS.md for the model).
+    p0, n0, b = (12, 96, 8) if smoke else (28, 222, 16)
+    mix = [
+        sem.generate(
+            sem.SemSpec(p=p0 + (i % 4), n=n0 + 17 * (i % 3), seed=40 + i)
+        )["x"]
+        for i in range(b)
+    ]
+    eng = LingamEngine(cfg, LingamServeConfig(min_p_bucket=8, min_n_bucket=64))
+
+    def engine(mix=mix):
+        return eng.fit_many(mix)
+
+    def serial_mix(mix=mix):
+        return [fit(x, cfg)[1] for x in mix]
+
+    times = time_fns_interleaved({"engine": engine, "serial": serial_mix},
+                                 iters=3)
+    t_eng, t_serial = times["engine"], times["serial"]
+    # Every fit_many call submits the same b requests, so the engine's own
+    # counters give dispatches-per-flush without assuming the timer's
+    # warmup/iteration count.
+    flushes = eng.stats["requests"] // b
+    row(
+        f"batch_engine_mixed_b{b}", t_eng,
+        f"vs_serial_loop={t_serial / t_eng:.2f}x;"
+        f"buckets={len(eng.stats['buckets'])};"
+        f"dispatches_per_flush={eng.stats['dispatches'] // flushes};"
+        f"requests={b}",
+        batch=b, p0=p0, n0=n0,
+    )

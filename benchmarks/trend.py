@@ -17,7 +17,10 @@ run's artifacts) against committed baselines and fails on a >``--factor``
     (``metrics.match``, 1.0 when orders are identical): a correctness
     trend — any mismatch drops it to 0 and trips the gate. Wall-clock for
     these lanes is forced-host-device overhead on CPU runners, so speed is
-    deliberately not guarded.
+    deliberately not guarded;
+  * ``batch_`` — batched one-dispatch ``fit_batch`` (and the mixed-shape
+    serving engine) throughput vs the serial per-dataset ``fit`` loop
+    (``metrics.vs_serial_loop``), the PR-5 dispatch-amortization win.
 
 Ratios are compared rather than raw microseconds so the gate survives
 machine differences between the baseline recorder and the CI runner. Shape
@@ -60,6 +63,7 @@ GUARDED = {
     "scanthr_": "saved_vs_serial",
     "fig4_scanthr_": "vs_dense_host",
     "ring_": "match",
+    "batch_": "vs_serial_loop",
 }
 
 

@@ -1,13 +1,16 @@
 """The paper's contribution: DirectLiNGAM + ParaLiNGAM causal discovery."""
 
-from repro.core import direct_lingam, entropy, pairwise, pruning, sem
+from repro.core import adjacency, direct_lingam, entropy, pairwise, pruning, sem
 from repro.core.covariance import cov_matrix, normalize, update_cov, update_data
 from repro.core.paralingam import (
+    BatchFitResult,
     ParaLiNGAMConfig,
     ParaLiNGAMResult,
     causal_order,
+    causal_order_batch,
     causal_order_scan,
     find_root_dense,
     find_root_threshold,
     fit,
+    fit_batch,
 )

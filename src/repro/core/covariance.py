@@ -27,20 +27,56 @@ VAR_EPS = 1e-12
 COLLINEAR_FLOOR = 1e-4
 
 
-def normalize(x, axis: int = -1, ddof: int = 1):
-    """Standardize samples along ``axis`` (zero mean, unit adjusted variance)."""
-    mean = jnp.mean(x, axis=axis, keepdims=True)
-    centered = x - mean
-    n = x.shape[axis]
-    var = jnp.sum(jnp.square(centered), axis=axis, keepdims=True) / max(n - ddof, 1)
+def _sample_count(n_valid, n: int, ddof: int = 0):
+    """Effective sample count minus ``ddof`` as a traced float (>= 1).
+
+    ``n_valid`` is the *batched-fit padding seam*: a traced scalar count of
+    valid samples when the trailing sample axis is zero-padded up to a shape
+    bucket (``None`` -> the static axis length, the unpadded fast path). Every
+    function below that divides by a function of n routes the denominator
+    through here so padded and unpadded datasets produce identical statistics.
+    """
+    if n_valid is None:
+        return max(n - ddof, 1)
+    return jnp.maximum(n_valid - ddof, 1).astype(jnp.float32)
+
+
+def sample_mask(n: int, n_valid):
+    """(n,) bool mask of valid sample columns (``None`` -> all valid)."""
+    if n_valid is None:
+        return None
+    return jnp.arange(n) < n_valid
+
+
+def normalize(x, axis: int = -1, ddof: int = 1, n_valid=None):
+    """Standardize samples along ``axis`` (zero mean, unit adjusted variance).
+
+    With ``n_valid`` set (requires ``axis=-1``), sample columns at index >=
+    n_valid are treated as padding: means/variances divide by ``n_valid`` and
+    the padded columns come back *exactly zero*, which makes the padding
+    invisible to every downstream moment sum (see ``pairwise.stream_moments``).
+    """
+    mean_den = _sample_count(n_valid, x.shape[axis])
+    smask = sample_mask(x.shape[-1], n_valid)
+    if smask is None:
+        mean = jnp.mean(x, axis=axis, keepdims=True)
+        centered = x - mean
+    else:
+        assert axis in (-1, x.ndim - 1), "n_valid requires the sample axis last"
+        xz = jnp.where(smask, x, 0.0)
+        mean = jnp.sum(xz, axis=axis, keepdims=True) / mean_den
+        centered = jnp.where(smask, x - mean, 0.0)
+    var_den = _sample_count(n_valid, x.shape[axis], ddof)
+    var = jnp.sum(jnp.square(centered), axis=axis, keepdims=True) / var_den
     return centered / jnp.sqrt(jnp.maximum(var, VAR_EPS))
 
 
-def cov_matrix(xn, ddof: int = 1):
+def cov_matrix(xn, ddof: int = 1, n_valid=None):
     """Covariance matrix of row-variables ``xn: (p, n)`` (normalized rows ->
-    correlation matrix with unit diagonal)."""
-    n = xn.shape[-1]
-    return (xn @ xn.T) / max(n - ddof, 1)
+    correlation matrix with unit diagonal). Zero-padded sample columns (the
+    ``n_valid`` contract of :func:`normalize`) contribute nothing to the dot
+    products, so only the denominator needs the true count."""
+    return (xn @ xn.T) / _sample_count(n_valid, xn.shape[-1], ddof)
 
 
 def residual_std(cov_ij):
@@ -59,13 +95,16 @@ def rank1_gates(b_raw, live):
     return b, s
 
 
-def update_data(x, cov, root, mask):
+def update_data(x, cov, root, mask, n_valid=None):
     """UpdateData (Algorithm 7): regress the root out of every remaining row
     and renormalize via Eq. (10). Fully vectorized rank-1 update.
 
     ``x: (p, n)`` normalized rows, ``cov: (p, p)``, ``root`` scalar index,
     ``mask: (p,) bool`` rows still in U (including the root before removal).
-    Rows not in U (and the root row itself) are left untouched.
+    Rows not in U (and the root row itself) are left untouched. ``n_valid``
+    as in :func:`normalize` — zero-padded sample columns stay exactly zero
+    through the rank-1 update, so only the renormalization denominator needs
+    the true count.
 
     Eq. (10) renormalization is exact in infinite precision; in f32 the
     residual variance drifts from 1 over many iterations (and explodes for
@@ -80,7 +119,8 @@ def update_data(x, cov, root, mask):
     x_root = x[root][None, :]
     out = (x - b[:, None] * x_root) / s[:, None]
     # drift correction (exact renormalization of live rows)
-    var = jnp.sum(jnp.square(out), axis=1, keepdims=True) / max(n - 1, 1)
+    var_den = _sample_count(n_valid, n, 1)
+    var = jnp.sum(jnp.square(out), axis=1, keepdims=True) / var_den
     scale = jnp.where(live[:, None], jax.lax.rsqrt(jnp.maximum(var, VAR_EPS)), 1.0)
     return out * scale
 

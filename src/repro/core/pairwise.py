@@ -23,37 +23,51 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.covariance import VAR_EPS
+from repro.core.covariance import VAR_EPS, _sample_count
 from repro.core.entropy import entropy_from_moments, log_cosh, u_exp_moment
 
 
-def residual_entropy_block(xn, c_cols, xj, psum_axis: str | None = None):
+def residual_entropy_block(xn, c_cols, xj, psum_axis: str | None = None,
+                           n_valid=None):
     """HR block for all rows of ``xn: (p, n)`` against ``xj: (bj, n)`` with
     correlations ``c_cols: (p, bj)``. Returns (p, bj).
 
     ``psum_axis`` names a mesh axis the samples axis is sharded over (see
     :func:`stream_entropy`): the block math runs on the local n-shard and the
-    moments are pmean'd before the entropy epilogue."""
+    moments are pmean'd before the entropy epilogue. ``n_valid`` as in
+    :func:`stream_moments` (zero-padded sample columns)."""
     denom = jnp.sqrt(jnp.maximum(1.0 - jnp.square(c_cols), VAR_EPS))
     # u: (p, bj, n) — the big intermediate the Pallas kernel avoids spilling.
     u = (xn[:, None, :] - c_cols[:, :, None] * xj[None, :, :]) / denom[:, :, None]
-    return stream_entropy(u, psum_axis=psum_axis)
+    return stream_entropy(u, psum_axis=psum_axis, n_valid=n_valid)
 
 
-def stream_moments(u):
+def stream_moments(u, n_valid=None):
     """The two Hyvarinen moments of each length-n residual stream: per-stream
     means of ``log cosh u`` and ``u exp(-u^2/2)`` (reduce axis -1). Split out
     from :func:`stream_entropy` because the moments — unlike the entropy — are
     linear in the sample axis, which is what makes them *shardable*: equal
     sample shards can each reduce locally and ``pmean`` the results. A TPU
     kernel taking over this reduction must likewise expose (m1, m2), not H,
-    so the cross-device combine stays a moment sum (``kernels/ops.py``)."""
-    m1 = jnp.mean(log_cosh(u), axis=-1)
-    m2 = jnp.mean(u_exp_moment(u), axis=-1)
+    so the cross-device combine stays a moment sum (``kernels/ops.py``).
+
+    ``n_valid`` is the batched-fit padding seam: when the sample axis is
+    zero-padded up to a shape bucket, both integrands vanish at the padded
+    columns (``log cosh 0 = 0``, ``0 * exp(0) = 0`` — the residual streams of
+    zero-padded samples are themselves exactly zero by the ``normalize``
+    contract), so correcting the *denominator* to the traced valid count is
+    sufficient to reproduce the unpadded moments."""
+    if n_valid is None:
+        m1 = jnp.mean(log_cosh(u), axis=-1)
+        m2 = jnp.mean(u_exp_moment(u), axis=-1)
+    else:
+        den = _sample_count(n_valid, u.shape[-1])
+        m1 = jnp.sum(log_cosh(u), axis=-1) / den
+        m2 = jnp.sum(u_exp_moment(u), axis=-1) / den
     return m1, m2
 
 
-def stream_entropy(u, psum_axis: str | None = None):
+def stream_entropy(u, psum_axis: str | None = None, n_valid=None):
     """Hyvarinen entropy of each length-n residual stream (reduce axis -1).
 
     The single moment reduction every pairwise path shares: the square HR
@@ -65,15 +79,17 @@ def stream_entropy(u, psum_axis: str | None = None):
     only this device's equal-size shard of the n samples: the local moments
     are ``pmean``'d over that mesh axis before the (nonlinear) entropy
     epilogue, which reproduces the full-sample moments exactly up to f32
-    summation order — the ring's sample-sharding seam (dist/ring_order.py)."""
-    m1, m2 = stream_moments(u)
+    summation order — the ring's sample-sharding seam (dist/ring_order.py).
+    ``n_valid`` as in :func:`stream_moments` (the padded-sample seam of the
+    batched estimator frontend; the two seams are currently exclusive)."""
+    m1, m2 = stream_moments(u, n_valid=n_valid)
     if psum_axis is not None:
         m1 = jax.lax.pmean(m1, psum_axis)
         m2 = jax.lax.pmean(m2, psum_axis)
     return entropy_from_moments(m1, m2)
 
 
-def residual_entropy_block_pair(xi, c_blk, xj):
+def residual_entropy_block_pair(xi, c_blk, xj, n_valid=None):
     """Both-direction residual entropies for one (bi, bj) block pair.
 
     ``xi: (bi, n)``, ``xj: (bj, n)``, ``c_blk: (bi, bj)``. Returns
@@ -83,10 +99,10 @@ def residual_entropy_block_pair(xi, c_blk, xj):
     inv = jax.lax.rsqrt(jnp.maximum(1.0 - jnp.square(c_blk), VAR_EPS))[..., None]
     u_f = (xi[:, None, :] - c_blk[..., None] * xj[None, :, :]) * inv
     u_r = (xj[None, :, :] - c_blk[..., None] * xi[:, None, :]) * inv
-    return stream_entropy(u_f), stream_entropy(u_r)
+    return stream_entropy(u_f, n_valid=n_valid), stream_entropy(u_r, n_valid=n_valid)
 
 
-def pair_moments(xn, c_vals, xj):
+def pair_moments(xn, c_vals, xj, n_valid=None):
     """Both-direction residual entropies for *gathered* comparison chunks.
 
     The threshold scheduler's per-round evaluation: worker rows ``xn: (m, n)``
@@ -100,10 +116,10 @@ def pair_moments(xn, c_vals, xj):
     xi = xn[:, None, :]
     u_f = (xi - c_vals[..., None] * xj) * inv
     u_r = (xj - c_vals[..., None] * xi) * inv
-    return stream_entropy(u_f), stream_entropy(u_r)
+    return stream_entropy(u_f, n_valid=n_valid), stream_entropy(u_r, n_valid=n_valid)
 
 
-def diag_block_scores(xb, c_diag, hxb, mb):
+def diag_block_scores(xb, c_diag, hxb, mb, n_valid=None):
     """Messaging-folded score contributions of the *diagonal* block tiles.
 
     ``xb: (nt, b, n)`` row blocks, ``c_diag: (nt, b, b)`` the matching
@@ -114,7 +130,7 @@ def diag_block_scores(xb, c_diag, hxb, mb):
     Returns (nt, b) score contributions."""
 
     def one(x, cd, hx, m):
-        hr = residual_entropy_block(x, cd, x)
+        hr = residual_entropy_block(x, cd, x, n_valid=n_valid)
         stat = pair_stat_matrix(hx, hr)
         pm = m[:, None] & m[None, :] & ~jnp.eye(x.shape[0], dtype=bool)
         return jnp.sum(jnp.where(pm, jnp.square(jnp.minimum(0.0, stat)), 0.0), axis=1)
@@ -133,7 +149,7 @@ def tri_block_maps(nt: int):
     return imap, jmap
 
 
-def fused_layout(xn, c, mask, block: int):
+def fused_layout(xn, c, mask, block: int, n_valid=None):
     """Shared prologue of the fused triangular sweep (jnp oracle and Pallas
     wrapper): pad p to the tile size, reshape into (nt, b) tiles and score
     the diagonal tiles. Returns ``(xpad, cp, c4, hxb, mb, s_diag)`` with
@@ -148,18 +164,19 @@ def fused_layout(xn, c, mask, block: int):
     mb = jnp.pad(mask, (0, p_pad - p)).reshape(nt, b)
     cp = jnp.pad(c.astype(jnp.float32), ((0, p_pad - p), (0, p_pad - p)))
     c4 = cp.reshape(nt, b, nt, b).transpose(0, 2, 1, 3)  # (nt, nt, b, b)
-    hx = row_entropies(xn, mask)
+    hx = row_entropies(xn, mask, n_valid=n_valid)
     hxb = jnp.pad(hx.astype(jnp.float32), (0, p_pad - p)).reshape(nt, b)
 
     diag_idx = jnp.arange(nt)
     s_diag = diag_block_scores(
-        xpad.reshape(nt, b, n), c4[diag_idx, diag_idx], hxb, mb
+        xpad.reshape(nt, b, n), c4[diag_idx, diag_idx], hxb, mb, n_valid=n_valid
     )
     return xpad, cp, c4, hxb, mb, s_diag
 
 
 @partial(jax.jit, static_argnames=("block", "unroll"))
-def fused_scores(xn, c, mask, block: int = 32, unroll: bool = False):
+def fused_scores(xn, c, mask, block: int = 32, unroll: bool = False,
+                 n_valid=None):
     """Score vector S with no (p, p) HR round-trip — the jnp oracle of the
     fused triangular kernel (``repro.kernels.fused_score``).
 
@@ -170,7 +187,7 @@ def fused_scores(xn, c, mask, block: int = 32, unroll: bool = False):
     sweep — the p x p intermediate is never formed. ``unroll=True`` replaces
     the lax.map with a python loop for dry-run cost extraction."""
     p, n = xn.shape
-    xpad, _, c4, hxb, mb, s2 = fused_layout(xn, c, mask, block)
+    xpad, _, c4, hxb, mb, s2 = fused_layout(xn, c, mask, block, n_valid=n_valid)
     nt, b = mb.shape
     p_pad = nt * b
     xb = xpad.reshape(nt, b, n)
@@ -182,7 +199,9 @@ def fused_scores(xn, c, mask, block: int = 32, unroll: bool = False):
 
         def pair_body(t):
             i, j = imap[t], jmap[t]
-            hr_f, hr_r = residual_entropy_block_pair(xb[i], c4[i, j], xb[j])
+            hr_f, hr_r = residual_entropy_block_pair(
+                xb[i], c4[i, j], xb[j], n_valid=n_valid
+            )
             stat = (hxb[j][None, :] - hxb[i][:, None]) + (hr_f - hr_r)
             pm = mb[i][:, None] & mb[j][None, :]
             fwd = jnp.where(pm, jnp.square(jnp.minimum(0.0, stat)), 0.0)
@@ -202,7 +221,8 @@ def fused_scores(xn, c, mask, block: int = 32, unroll: bool = False):
 
 
 @partial(jax.jit, static_argnames=("block_j", "unroll"))
-def residual_entropy_matrix(xn, c, block_j: int = 32, unroll: bool = False):
+def residual_entropy_matrix(xn, c, block_j: int = 32, unroll: bool = False,
+                            n_valid=None):
     """Full HR: (p, p), computed in j-blocks to bound the (p, bj, n) buffer.
 
     ``unroll=True`` replaces the lax.map with a python loop — used by the
@@ -216,7 +236,7 @@ def residual_entropy_matrix(xn, c, block_j: int = 32, unroll: bool = False):
         cols = jb * block_j + jnp.arange(block_j)
         xj = xn[cols]
         c_cols = c[:, cols]
-        return residual_entropy_block(xn, c_cols, xj)
+        return residual_entropy_block(xn, c_cols, xj, n_valid=n_valid)
 
     if unroll:
         blocks = jnp.stack([one_block(jnp.int32(i)) for i in range(nb)])
@@ -238,18 +258,21 @@ def scores_from_stats(stat, mask):
     return jnp.where(mask, s, jnp.inf)
 
 
-def row_entropies(xn, mask, psum_axis: str | None = None):
+def row_entropies(xn, mask, psum_axis: str | None = None, n_valid=None):
     """H_hat of each (already normalized) row. ``psum_axis`` as in
-    :func:`stream_entropy` (rows hold local sample shards)."""
-    h = stream_entropy(xn, psum_axis=psum_axis)
+    :func:`stream_entropy` (rows hold local sample shards); ``n_valid`` as in
+    :func:`stream_moments` (zero-padded sample columns)."""
+    h = stream_entropy(xn, psum_axis=psum_axis, n_valid=n_valid)
     return jnp.where(mask, h, 0.0)
 
 
 @partial(jax.jit, static_argnames=("block_j", "unroll"))
-def dense_scores(xn, c, mask, block_j: int = 32, unroll: bool = False):
+def dense_scores(xn, c, mask, block_j: int = 32, unroll: bool = False,
+                 n_valid=None):
     """One-shot dense score vector (the TPU-natural 'Block Compare' analogue,
     with messaging folded in). Returns (S, I, HR)."""
-    hx = row_entropies(xn, mask)
-    hr = residual_entropy_matrix(xn, c, block_j=block_j, unroll=unroll)
+    hx = row_entropies(xn, mask, n_valid=n_valid)
+    hr = residual_entropy_matrix(xn, c, block_j=block_j, unroll=unroll,
+                                 n_valid=n_valid)
     stat = pair_stat_matrix(hx, hr)
     return scores_from_stats(stat, mask), stat, hr

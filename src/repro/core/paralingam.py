@@ -43,8 +43,7 @@ from __future__ import annotations
 
 import warnings
 from dataclasses import dataclass, field
-from functools import partial
-from typing import Callable
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
@@ -64,6 +63,8 @@ from repro.core.pairwise import (
     row_entropies,
     scores_from_stats,
 )
+from repro.core.pairwise import residual_entropy_matrix as _hr_jnp
+from repro.utils.shapes import next_pow2
 
 
 @dataclass(frozen=True)
@@ -103,6 +104,7 @@ class ParaLiNGAMResult:
     rounds: int  # threshold-loop rounds (0 for dense)
     per_iteration: list[dict] = field(default_factory=list)
     converged: bool = True  # False iff any threshold loop hit max_rounds
+    noise_var: np.ndarray | None = None  # Omega diagonal (set by ``fit``)
 
     @property
     def saving_vs_serial(self) -> float:
@@ -118,36 +120,38 @@ class ParaLiNGAMResult:
 # ---------------------------------------------------------------------------
 
 
-def _hr_fn(use_kernel: bool) -> Callable:
-    if use_kernel:
-        from repro.kernels import ops as kops
-
-        return lambda xn, c, block_j: kops.residual_entropy_matrix(xn, c)
-    from repro.core.pairwise import residual_entropy_matrix
-
-    return residual_entropy_matrix
-
-
 @partial(jax.jit, static_argnames=("block_j", "use_kernel", "fused"))
 def find_root_dense(xn, c, mask, block_j: int = 32, use_kernel: bool = False,
-                    fused: bool = False):
+                    fused: bool = False, n_valid=None):
     """One-shot masked dense evaluation. Returns (root_idx, scores).
 
     ``fused=True`` routes scoring through the fused triangular path (each
     unordered block pair evaluated once, messaging credit applied in the same
     pass, no p x p HR intermediate): the Pallas kernel when ``use_kernel``,
     the blocked jnp formulation otherwise. Identical scores to the square
-    path up to f32 summation order."""
+    path up to f32 summation order.
+
+    ``n_valid`` (the batched-fit sample-padding seam, see
+    ``pairwise.stream_moments``) forces the jnp formulation even under
+    ``use_kernel`` — the Pallas kernels reduce over the static tile width and
+    have no masked-mean variant yet (``kernels/ops.py`` documents the seam)."""
+    use_kernel = use_kernel and n_valid is None
     if fused:
         if use_kernel:
             from repro.kernels import ops as kops
 
             s = kops.score_vector(xn, c, mask)
         else:
-            s = fused_scores(xn, c, mask, block=min(block_j, xn.shape[0]))
+            s = fused_scores(xn, c, mask, block=min(block_j, xn.shape[0]),
+                             n_valid=n_valid)
         return jnp.argmin(s), s
-    hx = row_entropies(xn, mask)
-    hr = _hr_fn(use_kernel)(xn, c, block_j)
+    hx = row_entropies(xn, mask, n_valid=n_valid)
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        hr = kops.residual_entropy_matrix(xn, c)
+    else:
+        hr = _hr_jnp(xn, c, block_j, n_valid=n_valid)
     stat = pair_stat_matrix(hx, hr)
     s = scores_from_stats(stat, mask)
     return jnp.argmin(s), s
@@ -166,6 +170,7 @@ def _find_root_threshold_impl(
     gamma_growth,
     chunk: int = 16,
     max_rounds: int = 100_000,
+    n_valid=None,
 ):
     """Threshold-mechanism find-root state machine (shared by the jitted
     standalone ``find_root_threshold`` and the device-resident scan driver).
@@ -178,6 +183,12 @@ def _find_root_threshold_impl(
     no worker is below threshold (Algorithm 6 lines 15-17). ``converged`` is
     False iff the loop was cut off by ``max_rounds`` before Algorithm 6's
     termination condition held (scores may then be incomplete).
+
+    A mask with fewer than two live rows (padded buffers in the batched-fit
+    path can drain entirely) has no pairs to process: the loop is skipped —
+    Algorithm 6's condition can never hold, so without the guard the gamma
+    growth branch would spin to ``max_rounds`` — and the iteration reports
+    converged with zero comparisons.
     """
     m, _ = xn.shape
     # The gathered-chunk evaluation is the shared ``pairwise.pair_moments``
@@ -192,7 +203,8 @@ def _find_root_threshold_impl(
     nc = m // chunk
     idx = jnp.arange(m)
     pair_valid = mask[:, None] & mask[None, :] & ~jnp.eye(m, dtype=bool)
-    hx = row_entropies(xn, mask)
+    has_pairs = jnp.any(pair_valid)
+    hx = row_entropies(xn, mask, n_valid=n_valid)
 
     d0 = ~pair_valid  # done := not a live pair (diag + dead rows/cols)
     s0 = jnp.where(mask, 0.0, jnp.inf)
@@ -227,7 +239,7 @@ def _find_root_threshold_impl(
             cols = ci[:, None] * chunk + jnp.arange(chunk)[None, :]  # (m, B)
             xj = xn[cols.reshape(-1)].reshape(m, chunk, -1)
             c_vals = jnp.take_along_axis(c, cols, axis=1)
-            hr_fwd, hr_rev = pair_moments(xn, c_vals, xj)
+            hr_fwd, hr_rev = pair_moments(xn, c_vals, xj, n_valid=n_valid)
             hx_j = hx[cols]
             stat = (hx_j - hx[:, None]) + (hr_fwd - hr_rev)  # I(i, j): (m, B)
 
@@ -265,13 +277,15 @@ def _find_root_threshold_impl(
         )
 
     def cond(st):
-        return ~st["terminal"] & (st["rounds"] < max_rounds)
+        return ~st["terminal"] & (st["rounds"] < max_rounds) & has_pairs
 
     final = jax.lax.while_loop(cond, round_body, state0)
     root = jnp.argmin(jnp.where(mask, final["s"], jnp.inf))
-    # cond exits either because terminal held (converged) or because rounds
-    # hit max_rounds with terminal still False (truncated).
-    return root, final["s"], final["comparisons"], final["rounds"], final["terminal"]
+    # cond exits because terminal held (converged), because there were no
+    # live pairs to begin with (trivially converged), or because rounds hit
+    # max_rounds with terminal still False (truncated).
+    return (root, final["s"], final["comparisons"], final["rounds"],
+            final["terminal"] | ~has_pairs)
 
 
 @partial(jax.jit, static_argnames=("chunk", "max_rounds"))
@@ -283,6 +297,7 @@ def find_root_threshold(
     gamma_growth: float,
     chunk: int = 16,
     max_rounds: int = 100_000,
+    n_valid=None,
 ):
     """Jitted threshold-mechanism find-root.
     Returns (root, scores, comparisons, rounds, converged) — see
@@ -291,7 +306,7 @@ def find_root_threshold(
     condition never held, so the winning score may be partial)."""
     return _find_root_threshold_impl(
         xn, c, mask, gamma0, gamma_growth,
-        chunk=chunk, max_rounds=max_rounds,
+        chunk=chunk, max_rounds=max_rounds, n_valid=n_valid,
     )
 
 
@@ -301,19 +316,12 @@ def find_root_threshold(
 
 
 @jax.jit
-def _update_iteration(xn, c, root, mask):
+def _update_iteration(xn, c, root, mask, n_valid=None):
     """UpdateData + UpdateCovMat (Algorithms 7-8) and drop root from U."""
-    xn2 = update_data(xn, c, root, mask)
+    xn2 = update_data(xn, c, root, mask, n_valid=n_valid)
     c2 = update_cov(c, root, mask)
     mask2 = mask & (jnp.arange(xn.shape[0]) != root)
     return xn2, c2, mask2
-
-
-def _next_pow2(v: int) -> int:
-    out = 1
-    while out < v:
-        out *= 2
-    return out
 
 
 def _scan_stages(p: int, min_bucket: int) -> list[tuple[int, int]]:
@@ -321,15 +329,16 @@ def _scan_stages(p: int, min_bucket: int) -> list[tuple[int, int]]:
     the host driver's power-of-two bucket schedule for r = p .. 2."""
     import itertools
 
-    cap = _next_pow2(p)
-    ms = [min(cap, max(min_bucket, _next_pow2(r))) for r in range(p, 1, -1)]
+    cap = next_pow2(p)
+    ms = [min(cap, max(min_bucket, next_pow2(r))) for r in range(p, 1, -1)]
     return [(m, len(list(g))) for m, g in itertools.groupby(ms)]
 
 
 def _scan_order_impl(xn, c, gamma0, gamma_growth, block_j: int = 32,
                      use_kernel: bool = False, fused: bool = False,
                      min_bucket: int = 32, threshold: bool = False,
-                     chunk: int = 16, max_rounds: int = 100_000):
+                     chunk: int = 16, max_rounds: int = 100_000,
+                     mask0=None, n_valid=None):
     """Device-resident outer loop: all p find-root -> update iterations in
     ONE dispatch, with no host round-trips.
 
@@ -351,6 +360,17 @@ def _scan_order_impl(xn, c, gamma0, gamma_growth, block_j: int = 32,
     data buffers survive the stage compactions. One dispatch then delivers
     both the paper's ~93% comparison savings and the dispatch amortization.
 
+    Padded-buffer seam (the batched frontend): ``mask0`` marks the initially
+    live rows (None -> all live; dead rows must be zero in ``xn``) and
+    ``n_valid`` the valid sample-column count (``pairwise.stream_moments``
+    contract). The stage plan stays static — a dataset with fewer live rows
+    simply drains early: once its mask is empty the remaining iterations
+    retire nothing and write garbage order entries past position
+    ``sum(mask0) - 1`` (``adjacency.complete_order`` sanitizes them). Live
+    counts are therefore *device-derived* (``sum(mask)``) rather than the
+    static ``p - iteration`` bookkeeping, which also makes the whole driver
+    vmap-safe over a batch of differently-masked datasets.
+
     Returns ``(order, comps_it, rounds_it, conv_it)``: the causal order plus
     per-iteration device-measured comparison counts, threshold-round counts
     and convergence flags (for the dense evaluation these are the analytic
@@ -366,12 +386,15 @@ def _scan_order_impl(xn, c, gamma0, gamma_growth, block_j: int = 32,
 
     idx_g = jnp.arange(p, dtype=jnp.int32)  # local row -> global variable id
     xb, cb = xn, c
-    mloc = jnp.ones((p,), bool)
+    mloc = jnp.ones((p,), bool) if mask0 is None else mask0
     m_cur = p
     pos = 0
     for m, cnt in _scan_stages(p, min_bucket):
         if m != m_cur:
-            live = p - pos  # static: one root retired per iteration
+            # Compaction: pack live rows first; the live count is derived on
+            # device (== the static p - pos when mask0 is None, fewer when a
+            # padded dataset started with dead rows).
+            live = jnp.sum(mloc)
             sel = jnp.nonzero(mloc, size=m, fill_value=0)[0].astype(jnp.int32)
             idx_g = idx_g[sel]
             xb = xb[sel]
@@ -384,15 +407,15 @@ def _scan_order_impl(xn, c, gamma0, gamma_growth, block_j: int = 32,
             if threshold:
                 root_l, _, comps, rounds, conv = _find_root_threshold_impl(
                     xb, cb, ml, gamma0, gamma_growth,
-                    chunk=min(chunk, m), max_rounds=max_rounds,
+                    chunk=min(chunk, m), max_rounds=max_rounds, n_valid=n_valid,
                 )
             else:
                 root_l, _ = find_root_dense(
                     xb, cb, ml, block_j=min(block_j, m),
-                    use_kernel=use_kernel, fused=fused,
+                    use_kernel=use_kernel, fused=fused, n_valid=n_valid,
                 )
-                r = p - pos - k  # live rows this iteration (one retires/iter)
-                comps = (r * (r - 1) // 2).astype(cdtype)
+                r = jnp.sum(ml).astype(cdtype)  # live rows this iteration
+                comps = r * (r - 1) // 2
                 rounds = jnp.asarray(0, jnp.int32)
                 conv = jnp.asarray(True)
             it = pos + k
@@ -400,7 +423,7 @@ def _scan_order_impl(xn, c, gamma0, gamma_growth, block_j: int = 32,
             comps_it = comps_it.at[it].set(comps)
             rounds_it = rounds_it.at[it].set(rounds.astype(jnp.int32))
             conv_it = conv_it.at[it].set(conv)
-            xb2 = update_data(xb, cb, root_l, ml)
+            xb2 = update_data(xb, cb, root_l, ml, n_valid=n_valid)
             cb2 = update_cov(cb, root_l, ml)
             ml2 = ml & (jnp.arange(m) != root_l)
             return xb2, cb2, ml2, order, comps_it, rounds_it, conv_it
@@ -411,7 +434,9 @@ def _scan_order_impl(xn, c, gamma0, gamma_growth, block_j: int = 32,
         )
         pos += cnt
 
-    # One live row remains; no find-root needed (matches the host driver).
+    # One live row remains (for a full buffer); no find-root needed (matches
+    # the host driver). An already-drained padded buffer writes garbage here,
+    # past its valid prefix.
     order = order.at[p - 1].set(idx_g[jnp.argmax(mloc)])
     return order, comps_it, rounds_it, conv_it
 
@@ -438,6 +463,45 @@ def _scan_order(xn, c, gamma0, gamma_growth, **kw):
     return _scan_order_jit(xn, c, gamma0, gamma_growth, **kw)
 
 
+def _result_from_counters(order, comps_it, rounds_it, conv_it, p: int,
+                          max_rounds: int,
+                          stacklevel: int = 3) -> ParaLiNGAMResult:
+    """Host-side ParaLiNGAMResult from the device-measured per-iteration
+    counters of the scan/fit pipeline (the one host readback point).
+    ``stacklevel`` points the max_rounds warning at the caller of the public
+    entry point (3 = one public frame above this helper)."""
+    comps_np = np.asarray(comps_it)
+    rounds_np = np.asarray(rounds_it)
+    conv_np = np.asarray(conv_it)
+    per_iter = [
+        {
+            "r": r,
+            "comparisons": int(comps_np[i]),
+            "rounds": int(rounds_np[i]),
+            "converged": bool(conv_np[i]),
+        }
+        for i, r in enumerate(range(p, 1, -1))
+    ]
+    converged = bool(conv_np.all())
+    if not converged:
+        warnings.warn(
+            f"find_root_threshold hit max_rounds={max_rounds} in "
+            f"{int(p - 1 - conv_np[: p - 1].sum())} of {p - 1} scan iterations; "
+            "scores may be incomplete (raise max_rounds or gamma_growth)",
+            stacklevel=stacklevel,
+        )
+    comps_dense = sum(r * (r - 1) // 2 for r in range(2, p + 1))
+    return ParaLiNGAMResult(
+        order=[int(v) for v in np.asarray(order)],
+        comparisons=int(comps_np.sum()),
+        comparisons_dense=comps_dense,
+        comparisons_serial=2 * comps_dense,
+        rounds=int(rounds_np.sum()),
+        per_iteration=per_iter,
+        converged=converged,
+    )
+
+
 def causal_order_scan(x, config: ParaLiNGAMConfig | None = None) -> ParaLiNGAMResult:
     """Full causal order in ONE device dispatch (vs the host driver's p
     find-root dispatches with an ``int(root)`` sync + bucket re-gather each).
@@ -461,36 +525,8 @@ def causal_order_scan(x, config: ParaLiNGAMConfig | None = None) -> ParaLiNGAMRe
         fused=cfg.fused, min_bucket=cfg.min_bucket,
         threshold=cfg.threshold, chunk=cfg.chunk, max_rounds=cfg.max_rounds,
     )
-    comps_np = np.asarray(comps_it)
-    rounds_np = np.asarray(rounds_it)
-    conv_np = np.asarray(conv_it)
-    per_iter = [
-        {
-            "r": r,
-            "comparisons": int(comps_np[i]),
-            "rounds": int(rounds_np[i]),
-            "converged": bool(conv_np[i]),
-        }
-        for i, r in enumerate(range(p, 1, -1))
-    ]
-    converged = bool(conv_np.all())
-    if not converged:
-        warnings.warn(
-            f"find_root_threshold hit max_rounds={cfg.max_rounds} in "
-            f"{int(p - 1 - conv_np[: p - 1].sum())} of {p - 1} scan iterations; "
-            "scores may be incomplete (raise max_rounds or gamma_growth)",
-            stacklevel=2,
-        )
-    comps_dense = sum(r * (r - 1) // 2 for r in range(2, p + 1))
-    return ParaLiNGAMResult(
-        order=[int(v) for v in np.asarray(order)],
-        comparisons=int(comps_np.sum()),
-        comparisons_dense=comps_dense,
-        comparisons_serial=2 * comps_dense,
-        rounds=int(rounds_np.sum()),
-        per_iteration=per_iter,
-        converged=converged,
-    )
+    return _result_from_counters(order, comps_it, rounds_it, conv_it, p,
+                                 cfg.max_rounds)
 
 
 def causal_order(x, config: ParaLiNGAMConfig | None = None) -> ParaLiNGAMResult:
@@ -528,8 +564,8 @@ def causal_order(x, config: ParaLiNGAMConfig | None = None) -> ParaLiNGAMResult:
         comps_serial += r * (r - 1)
 
         if cfg.bucket:
-            m = max(cfg.min_bucket, _next_pow2(r))
-            m = min(m, _next_pow2(p))
+            m = max(cfg.min_bucket, next_pow2(r))
+            m = min(m, next_pow2(p))
             idx_pad = np.full((m,), live[0], np.int32)
             idx_pad[:r] = live
             maskb = np.zeros((m,), bool)
@@ -593,11 +629,200 @@ def causal_order(x, config: ParaLiNGAMConfig | None = None) -> ParaLiNGAMResult:
     )
 
 
-def fit(x, config: ParaLiNGAMConfig | None = None):
-    """Full DirectLiNGAM pipeline: causal order (step 1, parallel) + causal
-    strengths B (step 2, covariance-based closed form). Returns (result, B)."""
-    from repro.core.pruning import estimate_adjacency
+# ---------------------------------------------------------------------------
+# one-dispatch fit (order + adjacency fused) and the batched frontend
+# ---------------------------------------------------------------------------
 
-    result = causal_order(x, config)
-    b = estimate_adjacency(np.asarray(x, np.float64), result.order)
+
+def _pipeline_impl(x, gamma0, gamma_growth, n_valid, mask0, *,
+                   adjacency: bool, threshold: bool, block_j: int,
+                   use_kernel: bool, fused: bool, min_bucket: int,
+                   chunk: int, max_rounds: int, prune_below: float):
+    """The whole estimator as ONE traced pipeline over raw samples
+    ``x: (p, n)``: normalize -> covariance -> staged causal-order scan ->
+    (optionally) phase-2 adjacency — no host round-trip anywhere, which is
+    what lets ``fit`` be a single dispatch and ``fit_batch`` vmap the whole
+    thing over a batch of datasets.
+
+    Returns ``(order, comps_it, rounds_it, conv_it)`` plus ``(b, omega)``
+    when ``adjacency`` (phase 2 consumes the *raw* x and the completed order
+    permutation, exactly like the numpy oracle — see ``core.adjacency``)."""
+    from repro.core.adjacency import adjacency_from_order, complete_order
+
+    xn = normalize(x, n_valid=n_valid)
+    if mask0 is not None:
+        xn = jnp.where(mask0[:, None], xn, 0.0)  # dead rows exactly zero
+    c = cov_matrix(xn, n_valid=n_valid)
+    order, comps_it, rounds_it, conv_it = _scan_order_impl(
+        xn, c, gamma0, gamma_growth, block_j=block_j, use_kernel=use_kernel,
+        fused=fused, min_bucket=min_bucket, threshold=threshold, chunk=chunk,
+        max_rounds=max_rounds, mask0=mask0, n_valid=n_valid,
+    )
+    if not adjacency:
+        return order, comps_it, rounds_it, conv_it
+    perm = order if mask0 is None else complete_order(order, mask0)
+    b, omega = adjacency_from_order(
+        x, perm, mask=mask0, n_valid=n_valid, prune_below=prune_below
+    )
+    return order, comps_it, rounds_it, conv_it, b, omega
+
+
+@lru_cache(maxsize=None)
+def _pipeline_fn(batched: bool, rules, **static):
+    """Cached jit of ``_pipeline_impl`` (vmapped over the leading dataset
+    axis when ``batched``). ``rules`` is a hashable ``ShardingRules`` whose
+    batch axes the (B, p, n) input is constrained to — the ``dist`` seam that
+    spreads a request batch over the ``"data"`` mesh axis."""
+
+    def run(x, gamma0, gamma_growth, n_valid, mask0):
+        f = partial(_pipeline_impl, **static)
+        if not batched:
+            return f(x, gamma0, gamma_growth, n_valid, mask0)
+        if rules is not None:
+            x = rules.act(x, "lingam_batch")  # batch-dim constraint only
+        axes = (0, None, None,
+                None if n_valid is None else 0,
+                None if mask0 is None else 0)
+        return jax.vmap(f, in_axes=axes)(x, gamma0, gamma_growth, n_valid, mask0)
+
+    return jax.jit(run)
+
+
+def _run_pipeline(x, cfg: ParaLiNGAMConfig, *, adjacency: bool, batched: bool,
+                  n_valid=None, mask0=None, rules=None,
+                  prune_below: float = 0.0):
+    # Same selection contract as the order drivers: the threshold state
+    # machine runs for method="threshold", or method="scan" + cfg.threshold;
+    # cfg.threshold stays ignored under method="dense" (ParaLiNGAMConfig).
+    threshold = cfg.method == "threshold" or (
+        cfg.method == "scan" and cfg.threshold
+    )
+    fn = _pipeline_fn(
+        batched, rules if batched else None,
+        adjacency=adjacency,
+        threshold=threshold,
+        block_j=cfg.block_j, use_kernel=cfg.use_kernel, fused=cfg.fused,
+        min_bucket=cfg.min_bucket, chunk=cfg.chunk, max_rounds=cfg.max_rounds,
+        prune_below=prune_below,
+    )
+    return fn(
+        jnp.asarray(x, cfg.dtype),
+        jnp.asarray(cfg.gamma0, cfg.dtype), jnp.asarray(cfg.gamma_growth, cfg.dtype),
+        n_valid, mask0,
+    )
+
+
+def fit(x, config: ParaLiNGAMConfig | None = None, prune_below: float = 0.0):
+    """Full DirectLiNGAM pipeline: causal order (step 1) + causal strengths B
+    and noise variances (step 2). Returns ``(result, B)`` with ``B`` a (p, p)
+    device array and ``result.noise_var`` the Omega diagonal.
+
+    Both phases run device-resident in ONE jit dispatch (normalize ->
+    covariance -> staged order scan -> Cholesky adjacency) — the host sees
+    nothing until the final result readback. The order scan uses the
+    device-resident driver with the dense or threshold inner evaluation,
+    selected exactly as in :func:`causal_order`: ``method="threshold"``, or
+    ``method="scan"`` with ``config.threshold`` (``config.threshold`` stays
+    ignored under ``method="dense"``). The host drivers remain available via
+    :func:`causal_order` + ``core.adjacency.estimate_adjacency``. With
+    ``config.ring`` the order comes from the multi-device ring driver and
+    phase 2 is a second (still device-side) dispatch."""
+    cfg = config or ParaLiNGAMConfig()
+    if cfg.ring:
+        from repro.core.adjacency import adjacency_from_order_jit
+
+        result = causal_order(x, cfg)
+        b, omega = adjacency_from_order_jit(
+            jnp.asarray(x, cfg.dtype),
+            jnp.asarray(result.order, jnp.int32),
+            prune_below=prune_below,
+        )
+        result.noise_var = np.asarray(omega)
+        return result, b
+    p = np.shape(x)[0]
+    order, comps_it, rounds_it, conv_it, b, omega = _run_pipeline(
+        x, cfg, adjacency=True, batched=False, prune_below=prune_below,
+    )
+    result = _result_from_counters(order, comps_it, rounds_it, conv_it, p,
+                                   cfg.max_rounds)
+    result.noise_var = np.asarray(omega)
     return result, b
+
+
+@dataclass
+class BatchFitResult:
+    """Batched estimator outputs, one leading dataset axis everywhere.
+
+    All fields are *device* arrays — nothing syncs to the host until the
+    caller reads them (so a serving layer can keep results resident or
+    ship them elsewhere). ``orders[i]`` is valid up to the i-th dataset's
+    live-row count (the serve engine slices); ``comparisons``/``rounds``
+    are per-iteration device counters (sum for totals), ``converged`` is
+    per-iteration threshold convergence (``all`` for the dataset verdict).
+    ``b``/``noise_var`` are None for order-only runs."""
+
+    orders: jax.Array  # (B, p) int32
+    comparisons: jax.Array  # (B, p)
+    rounds: jax.Array  # (B, p) int32
+    converged: jax.Array  # (B, p) bool
+    b: jax.Array | None = None  # (B, p, p)
+    noise_var: jax.Array | None = None  # (B, p)
+
+
+def _coerce_batch(xs, cfg: ParaLiNGAMConfig, n_valid, mask, caller: str):
+    """Shared frontend validation of the batched entry points: reject ring
+    configs (no batched ring form — the batch axis shards via ``rules``),
+    coerce the (B, p, n) stack and the per-dataset padding aux arrays."""
+    if cfg.ring:
+        raise ValueError(
+            f"{caller} runs the vmapped scan pipeline; the ring driver has "
+            "no batched form yet — use config.ring=False (shard the batch "
+            "axis via `rules` instead) or per-dataset fit() for the ring"
+        )
+    xs = jnp.asarray(xs, cfg.dtype)
+    if xs.ndim != 3:
+        raise ValueError(f"{caller} wants (B, p, n), got {xs.shape}")
+    nv = None if n_valid is None else jnp.asarray(n_valid, jnp.int32)
+    if nv is not None and nv.ndim == 0:
+        nv = jnp.broadcast_to(nv, (xs.shape[0],))
+    mk = None if mask is None else jnp.asarray(mask, bool)
+    return xs, nv, mk
+
+
+def fit_batch(xs, config: ParaLiNGAMConfig | None = None, *, n_valid=None,
+              mask=None, rules=None, prune_below: float = 0.0) -> BatchFitResult:
+    """Batched one-dispatch DirectLiNGAM over ``xs: (B, p, n)`` — the same
+    fused normalize -> order-scan -> adjacency pipeline as :func:`fit`,
+    vmapped over the leading dataset axis so B problems share one dispatch
+    (and one compiled executable per padded ``(p, n)`` shape bucket — the
+    dispatch-amortization the serve engine is built on).
+
+    ``n_valid`` ((B,) or scalar) and ``mask`` ((B, p) bool) mark the valid
+    sample columns / live variable rows of shape-padded datasets (zero-pad
+    the data; see ``serve.lingam_engine.pad_dataset``). ``rules`` is an
+    optional ``dist.sharding.ShardingRules`` whose batch axes shard the
+    dataset axis over the mesh (``make_rules(cfg, mesh)`` with a ``"data"``
+    axis); orders are bit-identical to the unsharded dispatch."""
+    cfg = config or ParaLiNGAMConfig()
+    xs, nv, mk = _coerce_batch(xs, cfg, n_valid, mask, "fit_batch")
+    order, comps, rounds, conv, b, omega = _run_pipeline(
+        xs, cfg, adjacency=True, batched=True, n_valid=nv, mask0=mk,
+        rules=rules, prune_below=prune_below,
+    )
+    return BatchFitResult(orders=order, comparisons=comps, rounds=rounds,
+                          converged=conv, b=b, noise_var=omega)
+
+
+def causal_order_batch(xs, config: ParaLiNGAMConfig | None = None, *,
+                       n_valid=None, mask=None, rules=None) -> BatchFitResult:
+    """Batched causal order only (phase 1): :func:`fit_batch` without the
+    adjacency epilogue. Same padding/sharding contracts (and like it, no
+    ring form — ``config.ring`` raises rather than being silently ignored)."""
+    cfg = config or ParaLiNGAMConfig()
+    xs, nv, mk = _coerce_batch(xs, cfg, n_valid, mask, "causal_order_batch")
+    order, comps, rounds, conv = _run_pipeline(
+        xs, cfg, adjacency=False, batched=True, n_valid=nv, mask0=mk,
+        rules=rules,
+    )
+    return BatchFitResult(orders=order, comparisons=comps, rounds=rounds,
+                          converged=conv)

@@ -46,8 +46,9 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.covariance import VAR_EPS, cov_matrix, normalize, rank1_gates
-from repro.core.paralingam import _next_pow2, _scan_stages
+from repro.core.paralingam import _scan_stages
 from repro.dist.ring import _ring_body
+from repro.utils.shapes import next_pow2
 
 
 # ---------------------------------------------------------------------------
@@ -66,11 +67,11 @@ def ring_order_stages(p: int, min_bucket: int, r: int) -> list[tuple[int, int]]:
     find-root). With r=1 this IS the scan schedule."""
     if r & (r - 1):
         raise ValueError(f"ring size must be a power of two, got {r}")
-    if r > _next_pow2(p):
+    if r > next_pow2(p):
         # Ring wider than the padded problem: one stage, one row block of
         # size r/r = 1 per device, the excess rows dead from the start.
         return [(r, p - 1)] if p > 1 else []
-    return _scan_stages(p, _next_pow2(max(min_bucket, r)))
+    return _scan_stages(p, next_pow2(max(min_bucket, r)))
 
 
 # ---------------------------------------------------------------------------
@@ -280,7 +281,7 @@ def causal_order_ring(x, config=None, mesh=None):
     xn = normalize(x)
     c = cov_matrix(xn)
     run = _make_ring_order_fn(
-        canon, sample_axis, p, n, _next_pow2(max(cfg.min_bucket, 1))
+        canon, sample_axis, p, n, next_pow2(max(cfg.min_bucket, 1))
     )
     order = run(xn, c)
 

@@ -15,6 +15,18 @@ pair — not the finished entropy — so the cross-device combine stays a plain
 moment mean; the entropy epilogue then runs replicated on the combined
 moments. None of the kernels below is wired into the sharded ring bodies
 yet for exactly this reason: they emit H, not moments.
+
+Batched-fit seam: ``paralingam.fit_batch`` vmaps the whole pipeline over a
+leading dataset axis and threads ``n_valid`` (true sample count of
+shape-padded datasets) through every moment denominator. The kernels below
+reduce over their static tile width with an implicit ``1/n`` mean, so
+``find_root_dense`` silently drops ``use_kernel`` whenever ``n_valid`` is
+set. A TPU kernel serving the batched engine must (a) accept a grid axis for
+the dataset dim (trivial: one more leading BlockSpec index), and (b) emit
+moment *sums* (or take the valid count as a scalar-prefetch operand) so the
+padded-column contract — zero columns add zero, the denominator is the
+traced count — survives. Until then the batched path runs the XLA-native
+formulation, which is what the engine benchmarks measure.
 """
 
 from __future__ import annotations

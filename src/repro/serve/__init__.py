@@ -1,1 +1,8 @@
 from repro.serve.engine import Engine, ServeConfig
+from repro.serve.lingam_engine import (
+    LingamEngine,
+    LingamFit,
+    LingamServeConfig,
+    bucket_shape,
+    pad_dataset,
+)

@@ -16,13 +16,7 @@ import numpy as np
 
 from repro.models import lm
 from repro.dist.sharding import NO_SHARDING
-
-
-def _next_pow2(v: int) -> int:
-    out = 1
-    while out < v:
-        out *= 2
-    return out
+from repro.utils.shapes import next_pow2
 
 
 @dataclass
@@ -64,7 +58,7 @@ class Engine:
         scfg = self.serve_cfg
         b, s = prompts.shape
         if scfg.bucket_prompts:
-            s_pad = _next_pow2(s)
+            s_pad = next_pow2(s)
             prompts = np.pad(prompts, ((0, 0), (0, s_pad - s)), constant_values=0)
         total = prompts.shape[1] + scfg.max_new_tokens
 

@@ -1,2 +1,3 @@
 from repro.utils.tree import param_count, param_bytes, tree_flatten_with_names
 from repro.utils.log import get_logger
+from repro.utils.shapes import next_pow2

@@ -1,0 +1,20 @@
+"""Shape bucketing helpers shared by the estimator frontend and the serve
+layers.
+
+Power-of-two padding is the repo-wide bucketing convention: the causal-order
+drivers pad the live-row count (``core/paralingam``), the ring driver clamps
+its stage sizes (``dist/ring_order``), the LM engine pads prompt lengths
+(``serve/engine``) and the LiNGAM engine pads whole ``(p, n)`` request shapes
+(``serve/lingam_engine``) — all so ragged request shapes collapse onto a
+logarithmic number of compiled executables.
+"""
+
+from __future__ import annotations
+
+
+def next_pow2(v: int) -> int:
+    """Smallest power of two >= ``v`` (``v <= 1`` -> 1)."""
+    out = 1
+    while out < v:
+        out *= 2
+    return out

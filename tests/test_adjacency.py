@@ -1,0 +1,152 @@
+"""JAX phase-2 adjacency vs the numpy oracle, per-variable lstsq regressions
+and the padded-buffer contracts, plus the shared numpy jitter-policy helper."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import direct_lingam, pruning, sem
+from repro.core.adjacency import (
+    adjacency_from_order,
+    complete_order,
+    estimate_adjacency,
+)
+
+
+def _case(p, n, seed, density="sparse"):
+    d = sem.generate(sem.SemSpec(p=p, n=n, density=density, seed=seed))
+    order = direct_lingam.causal_order(d["x"])
+    return d, order
+
+
+@pytest.mark.parametrize("p,n", [(8, 4000), (17, 3000), (64, 2000)])
+def test_matches_numpy_oracle(p, n):
+    d, order = _case(p, n, seed=p)
+    b_np = pruning.estimate_adjacency(d["x"], order)
+    om_np = pruning.regression_residual_variances(d["x"], order)
+    b, omega = adjacency_from_order(
+        jnp.asarray(d["x"], jnp.float32), jnp.asarray(order, jnp.int32)
+    )
+    scale = max(np.abs(b_np).max(), 1.0)
+    np.testing.assert_allclose(np.asarray(b), b_np, atol=5e-3 * scale)
+    np.testing.assert_allclose(
+        np.asarray(omega), om_np, rtol=5e-3, atol=5e-3 * om_np.max()
+    )
+
+
+def test_matches_per_variable_lstsq():
+    """B rows == per-variable least-squares regressions on the predecessors
+    (the literal 'p separate regressions' formulation of DirectLiNGAM step 2,
+    which the closed-form Cholesky path replaces)."""
+    d, order = _case(12, 6000, seed=3)
+    x = d["x"]
+    b, _ = adjacency_from_order(
+        jnp.asarray(x, jnp.float32), jnp.asarray(order, jnp.int32)
+    )
+    b = np.asarray(b)
+    xc = x - x.mean(axis=1, keepdims=True)
+    for k, i in enumerate(order):
+        preds = order[:k]
+        if not preds:
+            assert np.abs(b[i]).max() < 1e-4
+            continue
+        coef, *_ = np.linalg.lstsq(xc[preds].T, xc[i], rcond=None)
+        np.testing.assert_allclose(b[i, preds], coef, atol=2e-3)
+        # no edges from non-predecessors
+        rest = [j for j in range(x.shape[0]) if j not in preds]
+        assert np.abs(b[i, rest]).max() < 1e-4
+
+
+def test_recovers_true_strengths():
+    d, order = _case(10, 8000, seed=11)
+    b, omega = adjacency_from_order(
+        jnp.asarray(d["x"], jnp.float32), jnp.asarray(order, jnp.int32)
+    )
+    np.testing.assert_allclose(np.asarray(b), d["b_true"], atol=0.12)
+    assert (np.asarray(omega) > 0).all()
+
+
+def test_prune_below():
+    d, order = _case(9, 3000, seed=5)
+    b = estimate_adjacency(jnp.asarray(d["x"], jnp.float32),
+                           jnp.asarray(order, jnp.int32), prune_below=0.3)
+    b = np.asarray(b)
+    nz = b[b != 0.0]
+    assert (np.abs(nz) >= 0.3).all()
+
+
+def test_near_singular_covariance_stays_finite():
+    """Dense SEMs can push the correlation spectrum below f32 resolution —
+    the jitter ladder must keep the factorization finite instead of NaN."""
+    d, order = _case(64, 2000, seed=64, density="dense")
+    b, omega = adjacency_from_order(
+        jnp.asarray(d["x"], jnp.float32), jnp.asarray(order, jnp.int32)
+    )
+    assert np.isfinite(np.asarray(b)).all()
+    assert np.isfinite(np.asarray(omega)).all()
+
+
+def test_complete_order_properties():
+    """Valid prefix kept verbatim, garbage tail replaced by the dead ids —
+    always a permutation."""
+    order = jnp.asarray([5, 2, 7, 0, 3, 3, 5, 1], jnp.int32)  # tail garbage
+    mask = jnp.asarray([True] * 8)
+    mask = mask.at[jnp.asarray([1, 4, 6])].set(False)  # dead: 1, 4, 6
+    # live prefix is positions < 5 (5 live rows)
+    perm = np.asarray(complete_order(order, mask))
+    assert sorted(perm.tolist()) == list(range(8))
+    assert perm[:5].tolist() == [5, 2, 7, 0, 3]
+    assert sorted(perm[5:].tolist()) == [1, 4, 6]
+
+    # no-op on a full permutation
+    full = jnp.asarray([3, 1, 0, 2], jnp.int32)
+    out = complete_order(full, jnp.ones((4,), bool))
+    assert np.asarray(out).tolist() == [3, 1, 0, 2]
+
+
+def test_padded_matches_unpadded():
+    """mask + n_valid padding is exact: same B/omega as the dedicated fit."""
+    d, order = _case(17, 1800, seed=9)
+    b_ref, om_ref = adjacency_from_order(
+        jnp.asarray(d["x"], jnp.float32), jnp.asarray(order, jnp.int32)
+    )
+    xpad = np.zeros((32, 2048))
+    xpad[:17, :1800] = d["x"]
+    mask = jnp.arange(32) < 17
+    order_pad = jnp.concatenate(
+        [jnp.asarray(order, jnp.int32), jnp.zeros((15,), jnp.int32)]
+    )
+    perm = complete_order(order_pad, mask)
+    b, omega = adjacency_from_order(
+        jnp.asarray(xpad, jnp.float32), perm, mask=mask,
+        n_valid=jnp.int32(1800),
+    )
+    np.testing.assert_allclose(np.asarray(b)[:17, :17], np.asarray(b_ref),
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(omega)[:17], np.asarray(om_ref),
+                               rtol=2e-4)
+    # dead rows/cols come back exactly zero
+    assert np.abs(np.asarray(b)[17:, :]).max() == 0.0
+    assert np.abs(np.asarray(b)[:, 17:]).max() == 0.0
+    assert np.abs(np.asarray(omega)[17:]).max() == 0.0
+
+
+def test_numpy_helper_shared_jitter_policy():
+    """The satellite dedupe: estimate_adjacency and
+    regression_residual_variances run off one centered-cov + jittered-Cholesky
+    helper, so B and Omega are consistent — reconstructing Sigma from
+    (I - B)^{-1} Omega (I - B)^{-T} reproduces the sample covariance."""
+    d, order = _case(10, 5000, seed=7)
+    x = d["x"]
+    b = pruning.estimate_adjacency(x, order)
+    omega = pruning.regression_residual_variances(x, order)
+    p = x.shape[0]
+    a = np.linalg.inv(np.eye(p) - b)
+    sigma_rec = a @ np.diag(omega) @ a.T
+    xc = x - x.mean(axis=1, keepdims=True)
+    sigma = (xc @ xc.T) / (x.shape[1] - 1)
+    np.testing.assert_allclose(sigma_rec, sigma, rtol=1e-6, atol=1e-8)
+    # and the helper itself returns the factor both consume
+    _, chol = pruning.centered_cov_chol(x, order)
+    np.testing.assert_allclose(np.diag(chol) ** 2,
+                               omega[list(order)], rtol=1e-12)

@@ -1,0 +1,212 @@
+"""Batched one-dispatch estimator: ``fit``/``fit_batch``/``causal_order_batch``
+parity against the per-dataset host path and the serial oracle, including
+shape-padded (mask / n_valid) buffers and the batch axis sharded over a
+``"data"`` mesh (the multidevice CI lane)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import direct_lingam, pruning, sem
+from repro.core.paralingam import (
+    ParaLiNGAMConfig,
+    causal_order,
+    causal_order_batch,
+    fit,
+    fit_batch,
+)
+
+
+def _gen(p, n, seed, density="sparse"):
+    return sem.generate(sem.SemSpec(p=p, n=n, density=density, seed=seed))["x"]
+
+
+# ---------------------------------------------------------------------------
+# single-dataset fit: one dispatch, parity with the two-phase host pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_fit_single_dispatch_parity():
+    x = _gen(10, 3000, seed=0)
+    res, b = fit(x)
+    host = causal_order(x, ParaLiNGAMConfig(method="dense"))
+    assert res.order == host.order
+    b_np = pruning.estimate_adjacency(x, res.order)
+    om_np = pruning.regression_residual_variances(x, res.order)
+    np.testing.assert_allclose(np.asarray(b), b_np, atol=1e-4)
+    np.testing.assert_allclose(res.noise_var, om_np, rtol=1e-3)
+
+
+def test_fit_threshold_inner_matches_serial():
+    x = _gen(9, 2500, seed=4)
+    res, _ = fit(x, ParaLiNGAMConfig(method="threshold", chunk=4, min_bucket=8))
+    assert res.order == direct_lingam.causal_order(x)
+    assert res.comparisons <= res.comparisons_dense
+    assert res.rounds > 0
+
+
+def test_fit_order_counters_match_scan():
+    """fit's diagnostics come off the same device counters as the scan."""
+    from repro.core.paralingam import causal_order_scan
+
+    x = _gen(17, 1500, seed=2)
+    cfg = ParaLiNGAMConfig(method="scan", threshold=True, chunk=8, min_bucket=8)
+    res_fit, _ = fit(x, cfg)
+    res_scan = causal_order_scan(x, cfg)
+    assert res_fit.order == res_scan.order
+    assert res_fit.comparisons == res_scan.comparisons
+    assert res_fit.rounds == res_scan.rounds
+
+
+# ---------------------------------------------------------------------------
+# uniform-shape batches: bit-identical orders vs the per-dataset loop
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("p,n,min_bucket", [(8, 2000, 8), (17, 1200, 8),
+                                            (64, 600, 32)])
+def test_fit_batch_matches_per_dataset_loop(p, n, min_bucket):
+    cfg = ParaLiNGAMConfig(min_bucket=min_bucket)
+    xs = np.stack([_gen(p, n, seed=100 * p + i) for i in range(3)])
+    res = fit_batch(xs, cfg)
+    for i in range(xs.shape[0]):
+        ri, bi = fit(xs[i], cfg)
+        assert list(np.asarray(res.orders[i])) == ri.order  # bit-identical
+        np.testing.assert_allclose(np.asarray(res.b[i]), np.asarray(bi),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(res.noise_var[i]),
+                                   ri.noise_var, rtol=1e-5)
+
+
+def test_fit_batch_threshold_counters():
+    cfg = ParaLiNGAMConfig(method="scan", threshold=True, chunk=8,
+                           gamma0=1e-6, min_bucket=16)
+    xs = np.stack([_gen(16, 1000, seed=i) for i in range(3)])
+    res = fit_batch(xs, cfg)
+    assert bool(np.asarray(res.converged).all())
+    dense = sum(r * (r - 1) // 2 for r in range(2, 17))
+    for i in range(3):
+        ri, _ = fit(xs[i], cfg)
+        assert list(np.asarray(res.orders[i])) == ri.order
+        assert int(np.asarray(res.comparisons[i]).sum()) <= dense
+
+
+def test_causal_order_batch_matches_scan():
+    from repro.core.paralingam import causal_order_scan
+
+    cfg = ParaLiNGAMConfig(min_bucket=8)
+    xs = np.stack([_gen(12, 900, seed=i + 7) for i in range(4)])
+    res = causal_order_batch(xs, cfg)
+    assert res.b is None and res.noise_var is None
+    for i in range(4):
+        assert list(np.asarray(res.orders[i])) == causal_order_scan(xs[i], cfg).order
+
+
+# ---------------------------------------------------------------------------
+# padded buffers: mask (dead rows) + n_valid (padded sample columns)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("threshold", [False, True])
+def test_fit_batch_padded_parity(threshold):
+    """Ragged (p, n) datasets zero-padded into one (B, 32, 2048) bucket give
+    the same orders as dedicated unpadded fits and B within tolerance."""
+    cfg = ParaLiNGAMConfig(method="scan", min_bucket=8, threshold=threshold,
+                           chunk=16, gamma0=1e-6)
+    raw = [_gen(17, 1800, seed=1), _gen(32, 2048, seed=2), _gen(8, 1000, seed=3)]
+    xs = np.zeros((3, 32, 2048))
+    mask = np.zeros((3, 32), bool)
+    nv = np.zeros((3,), np.int32)
+    for i, x in enumerate(raw):
+        p, n = x.shape
+        xs[i, :p, :n] = x
+        mask[i, :p] = True
+        nv[i] = n
+    res = fit_batch(xs, cfg, mask=mask, n_valid=nv)
+    for i, x in enumerate(raw):
+        p = x.shape[0]
+        ri, bi = fit(x, cfg)
+        assert list(np.asarray(res.orders[i])[:p]) == ri.order
+        np.testing.assert_allclose(np.asarray(res.b[i])[:p, :p],
+                                   np.asarray(bi), atol=2e-4)
+        assert bool(np.asarray(res.converged[i]).all())
+        # padded tail contributes nothing
+        assert np.abs(np.asarray(res.b[i])[p:, :]).sum() == 0.0
+
+
+def test_fit_batch_padded_orders_match_serial_oracle():
+    x = _gen(17, 1500, seed=21)
+    xs = np.zeros((1, 32, 2048))
+    xs[0, :17, :1500] = x
+    mask = np.zeros((1, 32), bool)
+    mask[0, :17] = True
+    res = fit_batch(xs, ParaLiNGAMConfig(min_bucket=8), mask=mask,
+                    n_valid=np.asarray([1500], np.int32))
+    assert list(np.asarray(res.orders[0])[:17]) == direct_lingam.causal_order(x)
+
+
+def test_fit_batch_rejects_wrong_rank():
+    with pytest.raises(ValueError, match="B, p, n"):
+        fit_batch(np.zeros((4, 5)))
+
+
+def test_batch_rejects_ring_config():
+    """config.ring must raise, not be silently ignored (there is no batched
+    ring form; the batch axis shards via `rules` instead)."""
+    xs = np.zeros((2, 4, 8))
+    with pytest.raises(ValueError, match="ring"):
+        fit_batch(xs, ParaLiNGAMConfig(ring=True))
+    with pytest.raises(ValueError, match="ring"):
+        causal_order_batch(xs, ParaLiNGAMConfig(ring=True))
+
+
+# ---------------------------------------------------------------------------
+# batch axis sharded over the "data" mesh axis (multidevice CI lane)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.requires_multidevice(8)
+def test_fit_batch_sharded_matches_unsharded():
+    from jax.sharding import Mesh
+    from repro.dist.sharding import make_rules
+
+    cfg = ParaLiNGAMConfig(min_bucket=8)
+    xs = np.stack([_gen(16, 512, seed=50 + i) for i in range(8)])
+    mesh = Mesh(np.array(jax.devices()).reshape(8, 1), ("data", "model"))
+    rules = make_rules(cfg, mesh)
+    res_sharded = fit_batch(xs, cfg, rules=rules)
+    res_local = fit_batch(xs, cfg)
+    np.testing.assert_array_equal(np.asarray(res_sharded.orders),
+                                  np.asarray(res_local.orders))
+    np.testing.assert_allclose(np.asarray(res_sharded.b),
+                               np.asarray(res_local.b), atol=1e-5)
+
+
+@pytest.mark.requires_multidevice(8)
+def test_fit_batch_sharded_padded_ragged():
+    """Sharded dispatch with shape-padded ragged datasets: parity with the
+    per-dataset host loop (the engine's multidevice configuration)."""
+    from jax.sharding import Mesh
+    from repro.dist.sharding import make_rules
+
+    cfg = ParaLiNGAMConfig(min_bucket=8)
+    raw = [_gen(int(p), int(n), seed=i)
+           for i, (p, n) in enumerate([(8, 400), (12, 512), (16, 300),
+                                       (9, 512), (16, 512), (11, 333),
+                                       (8, 512), (13, 444)])]
+    xs = np.zeros((8, 16, 512))
+    mask = np.zeros((8, 16), bool)
+    nv = np.zeros((8,), np.int32)
+    for i, x in enumerate(raw):
+        p, n = x.shape
+        xs[i, :p, :n] = x
+        mask[i, :p] = True
+        nv[i] = n
+    mesh = Mesh(np.array(jax.devices()).reshape(8, 1), ("data", "model"))
+    res = fit_batch(xs, cfg, mask=mask, n_valid=nv,
+                    rules=make_rules(cfg, mesh))
+    for i, x in enumerate(raw):
+        p = x.shape[0]
+        ri, _ = fit(x, cfg)
+        assert list(np.asarray(res.orders[i])[:p]) == ri.order

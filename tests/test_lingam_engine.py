@@ -1,0 +1,171 @@
+"""LiNGAM serving engine: bucketing, batched dispatch, exact unpadding."""
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core import direct_lingam, sem
+from repro.core.paralingam import ParaLiNGAMConfig, fit
+from repro.serve.lingam_engine import (
+    LingamEngine,
+    LingamServeConfig,
+    bucket_shape,
+    pad_dataset,
+)
+from repro.utils.shapes import next_pow2
+
+
+def _gen(p, n, seed):
+    return sem.generate(sem.SemSpec(p=p, n=n, seed=seed))["x"]
+
+
+def test_next_pow2():
+    """The satellite dedupe: one pow-2 helper for every bucketing layer."""
+    assert [next_pow2(v) for v in (0, 1, 2, 3, 4, 5, 17, 64, 65)] == \
+        [1, 1, 2, 4, 4, 8, 32, 64, 128]
+    for v in range(1, 200):
+        out = next_pow2(v)
+        assert out >= v and out & (out - 1) == 0  # pow2, >= v
+        assert out == 1 or out // 2 < v  # minimal
+
+
+def test_bucket_shape_and_pad():
+    scfg = LingamServeConfig(min_p_bucket=8, min_n_bucket=64)
+    assert bucket_shape(3, 10, scfg) == (8, 64)
+    assert bucket_shape(17, 300, scfg) == (32, 512)
+    assert bucket_shape(32, 512, scfg) == (32, 512)
+    x = np.ones((3, 10))
+    padded = pad_dataset(x, 8, 64)
+    assert padded.shape == (8, 64)
+    assert padded[:3, :10].sum() == 30 and padded.sum() == 30
+
+
+def test_mixed_shape_requests_match_dedicated_fits():
+    """The acceptance check: mixed-shape traffic through the engine returns
+    exactly what per-dataset fits return (orders identical, B within fp
+    tolerance), while sharing executables per bucket."""
+    cfg = ParaLiNGAMConfig(min_bucket=8)
+    eng = LingamEngine(cfg, LingamServeConfig(min_p_bucket=8, min_n_bucket=64))
+    shapes = [(8, 300), (7, 256), (17, 500), (16, 512), (8, 256), (10, 400)]
+    xs = [_gen(p, n, seed=i) for i, (p, n) in enumerate(shapes)]
+    fits = eng.fit_many(xs)
+    assert len(fits) == len(xs)
+    for x, f in zip(xs, fits):
+        ref, b_ref = fit(x, cfg)
+        assert f.order == ref.order
+        np.testing.assert_allclose(f.b, np.asarray(b_ref), atol=1e-4)
+        np.testing.assert_allclose(f.noise_var, ref.noise_var, rtol=1e-3)
+        assert f.converged
+        assert f.b.shape == (x.shape[0],) * 2
+    # 4 buckets: (8,512) (8,256)x2 (32,512) (16,512) (16,512) -> see stats
+    assert eng.stats["requests"] == len(xs)
+    assert eng.stats["dispatches"] == len(eng.stats["buckets"]) == 4
+    assert eng.stats["buckets"][(8, 256)] == 2
+
+
+def test_engine_orders_match_serial_oracle():
+    eng = LingamEngine(ParaLiNGAMConfig(min_bucket=8))
+    xs = [_gen(9, 700, seed=31), _gen(13, 900, seed=32)]
+    for x, f in zip(xs, eng.fit_many(xs)):
+        assert f.order == direct_lingam.causal_order(x)
+
+
+def test_same_bucket_shares_one_dispatch():
+    eng = LingamEngine(ParaLiNGAMConfig(min_bucket=8),
+                       LingamServeConfig(min_p_bucket=8, min_n_bucket=64))
+    for i in range(5):  # ragged, all land in the (16, 512) bucket
+        eng.submit(_gen(9 + i, 257 + 11 * i, seed=i))
+    assert eng.pending == 5
+    out = eng.flush()
+    assert len(out) == 5 and eng.pending == 0
+    assert eng.stats["dispatches"] == 1
+    assert eng.stats["buckets"] == {(16, 512): 5}
+
+
+def test_max_batch_splits_dispatches():
+    eng = LingamEngine(
+        ParaLiNGAMConfig(min_bucket=8),
+        LingamServeConfig(min_p_bucket=8, min_n_bucket=64, max_batch=2),
+    )
+    xs = [_gen(8, 256, seed=i) for i in range(5)]
+    fits = eng.fit_many(xs)
+    assert eng.stats["dispatches"] == 3  # 2 + 2 + 1
+    for x, f in zip(xs, fits):
+        assert f.order == fit(x, ParaLiNGAMConfig(min_bucket=8))[0].order
+
+
+def test_threshold_config_flows_through():
+    cfg = ParaLiNGAMConfig(method="scan", threshold=True, chunk=8,
+                           gamma0=1e-6, min_bucket=8)
+    eng = LingamEngine(cfg)
+    x = _gen(16, 800, seed=40)
+    f, = eng.fit_many([x])
+    ref, _ = fit(x, cfg)
+    assert f.order == ref.order
+    assert f.comparisons == ref.comparisons
+    assert f.rounds == ref.rounds > 0
+
+
+def test_submit_rejects_bad_rank():
+    eng = LingamEngine()
+    with pytest.raises(ValueError, match="p, n"):
+        eng.submit(np.zeros((2, 3, 4)))
+
+
+def test_ring_config_rejected_at_construction():
+    with pytest.raises(ValueError, match="ring"):
+        LingamEngine(ParaLiNGAMConfig(ring=True))
+
+
+@pytest.mark.parametrize("fail_call,pending_after", [(1, 3), (2, 1)])
+def test_failed_dispatch_loses_no_work(monkeypatch, fail_call, pending_after):
+    """A dispatch failure must not lose work in either direction: requests of
+    failing/undispatched buckets stay queued, and results of buckets that
+    already delivered in the same flush are retained for the retry flush —
+    fail_call=1 fails before anything delivers, fail_call=2 fails after the
+    first bucket's results are in."""
+    import repro.serve.lingam_engine as mod
+
+    eng = LingamEngine(ParaLiNGAMConfig(min_bucket=8),
+                       LingamServeConfig(min_p_bucket=8, min_n_bucket=64))
+    # two requests in bucket (8, 256), one in bucket (32, 256)
+    xs = [_gen(8, 256, seed=70), _gen(8, 250, seed=71), _gen(17, 256, seed=72)]
+    ids = [eng.submit(x) for x in xs]
+
+    real_fit_batch = mod.fit_batch
+    calls = {"n": 0}
+
+    def boom(*args, **kwargs):
+        calls["n"] += 1
+        if calls["n"] == fail_call:
+            raise RuntimeError("transient dispatch failure")
+        return real_fit_batch(*args, **kwargs)
+
+    monkeypatch.setattr(mod, "fit_batch", boom)
+    with pytest.raises(RuntimeError, match="transient"):
+        eng.flush()
+    assert eng.pending == pending_after
+
+    out = eng.flush()  # retry reruns only the remainder, returns everything
+    assert sorted(out) == sorted(ids)
+    assert eng.pending == 0
+    for x, i in zip(xs, ids):
+        assert out[i].order == fit(x, ParaLiNGAMConfig(min_bucket=8))[0].order
+
+
+@pytest.mark.requires_multidevice(8)
+def test_engine_sharded_over_data_axis():
+    """The engine's multidevice configuration: every dispatch constrains its
+    dataset axis over an 8-way "data" mesh; results match dedicated fits."""
+    from jax.sharding import Mesh
+    from repro.dist.sharding import make_rules
+
+    cfg = ParaLiNGAMConfig(min_bucket=8)
+    mesh = Mesh(np.array(jax.devices()).reshape(8, 1), ("data", "model"))
+    eng = LingamEngine(cfg, LingamServeConfig(min_p_bucket=8, min_n_bucket=64),
+                       rules=make_rules(cfg, mesh))
+    xs = [_gen(8 + (i % 5), 200 + 40 * i, seed=60 + i) for i in range(8)]
+    for x, f in zip(xs, eng.fit_many(xs)):
+        ref, b_ref = fit(x, cfg)
+        assert f.order == ref.order
+        np.testing.assert_allclose(f.b, np.asarray(b_ref), atol=1e-4)
