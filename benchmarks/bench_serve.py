@@ -1,0 +1,122 @@
+"""Async serving engine sustained throughput: N submitter threads pushing a
+ragged request mix through ``AsyncLingamEngine`` (continuous batching,
+background dispatcher) head-to-head against the serial dedicated-``fit``
+loop over the same requests.
+
+The ``serve_sustained_*`` ratio (``vs_serial_loop``) is the continuous-
+batching product: concurrent submitters fill pow-2 buckets between flushes,
+so the engine pays one dispatch per batch where the serial loop pays one per
+request — the ``bench_batch`` amortization win, now measured through the
+whole async service path (admission queue, dispatcher thread, ticket
+delivery) instead of a hand-built batch. The derived columns report the
+service-quality counters that set the ratio: batch occupancy (how full
+flushes ran), padding waste (pow-2 cells that carried no data), and
+delivered fraction (must be 1.0 — the engine sheds or fails loudly, never
+silently). The deadline-vs-occupancy model behind the ``flush_interval``
+choice is in EXPERIMENTS.md "Continuous batching".
+"""
+
+from __future__ import annotations
+
+import threading
+
+from benchmarks.common import row, time_fns_interleaved
+from repro.core import sem
+from repro.core.paralingam import ParaLiNGAMConfig, fit
+from repro.serve.async_engine import AsyncLingamEngine
+from repro.serve.batching import BatchingConfig
+from repro.serve.lingam_engine import LingamServeConfig
+
+
+def _mix(p0, n0, count, seed0=0):
+    """Ragged request mix spanning a few pow-2 buckets."""
+    return [
+        sem.generate(
+            sem.SemSpec(p=p0 + (i % 3), n=n0 + 19 * (i % 2), seed=seed0 + i)
+        )["x"]
+        for i in range(count)
+    ]
+
+
+def _measure(name, cfg, reqs, threads, max_batch, **config):
+    """One sustained cell: pipelined submitters through a fresh engine vs
+    the serial dedicated-fit loop over the identical request stream."""
+    eng = AsyncLingamEngine(
+        cfg,
+        LingamServeConfig(min_p_bucket=8, min_n_bucket=64),
+        batch_cfg=BatchingConfig(
+            max_batch=max_batch,
+            max_queue=4 * threads * len(reqs),
+            flush_interval=0.002,
+        ),
+    )
+
+    def sustained():
+        """Each submitter keeps its whole request list in flight (tickets),
+        the way a client saturating the service would."""
+        def worker():
+            tickets = [eng.submit(x) for x in reqs]
+            for t in tickets:
+                t.result(600)
+
+        ts = [threading.Thread(target=worker, daemon=True)
+              for _ in range(threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        return ()
+
+    def serial():
+        out = None
+        for _ in range(threads):
+            for x in reqs:
+                out = fit(x, cfg)[1]
+        return out
+
+    times = time_fns_interleaved({"async": sustained, "serial": serial},
+                                 iters=3)
+    t_async, t_serial = times["async"], times["serial"]
+
+    stats = eng.stats()
+    eng.close()
+    total = threads * len(reqs)
+    buckets = stats["buckets"].values()
+    batch_sum = sum(b.get("batch_sum", 0) for b in buckets)
+    occupancy = (batch_sum / (stats["dispatches"] * max_batch)
+                 if stats["dispatches"] else 0.0)
+    pad = sum(b.get("pad_cells", 0) for b in buckets)
+    cells = sum(b.get("total_cells", 0) for b in buckets)
+    row(
+        name, t_async,
+        f"vs_serial_loop={t_serial / t_async:.2f}x;"
+        f"req_per_s={total / (t_async / 1e6):.1f};"
+        f"occupancy={occupancy:.2f};"
+        f"padding_waste={pad / cells if cells else 0.0:.2f};"
+        f"delivered_frac={stats['delivered'] / max(stats['admitted'], 1):.3f};"
+        f"dispatches={stats['dispatches']};buckets={len(stats['buckets'])}",
+        threads=threads, per_thread=len(reqs), **config,
+    )
+
+
+def run(smoke: bool = False):
+    cfg = ParaLiNGAMConfig(min_bucket=8)
+    threads, per_thread = (4, 4) if smoke else (8, 8)
+
+    # Exact pow-2 shapes: pure continuous-batching amortization through the
+    # whole async path (no mask/n_valid seams, no padding cells) — the
+    # headline ratio, comparable to the ``batch_fit_*`` rows.
+    p_b, n_b = (16, 128) if smoke else (32, 256)
+    exact = [
+        sem.generate(sem.SemSpec(p=p_b, n=n_b, seed=i))["x"]
+        for i in range(per_thread)
+    ]
+    _measure(f"serve_sustained_t{threads}_p{p_b}_n{n_b}", cfg, exact,
+             threads, max(8, threads), p=p_b, n=n_b)
+
+    # Ragged mix: what a real request distribution pays — the measured ratio
+    # nets the batching win against pow-2 padding waste and the masked
+    # moment seams (see the padding_waste column).
+    p0, n0 = (10, 96) if smoke else (24, 200)
+    _measure(f"serve_mixed_t{threads}_r{per_thread}", cfg,
+             _mix(p0, n0, per_thread), threads, max(8, threads), p0=p0, n0=n0)

@@ -20,7 +20,7 @@ import time
 
 from benchmarks import common
 
-SUITES = ("table2", "fig3", "fig4", "threshold", "kernels", "batch")
+SUITES = ("table2", "fig3", "fig4", "threshold", "kernels", "batch", "serve")
 
 
 def main() -> None:

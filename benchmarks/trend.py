@@ -20,7 +20,10 @@ run's artifacts) against committed baselines and fails on a >``--factor``
     deliberately not guarded;
   * ``batch_`` — batched one-dispatch ``fit_batch`` (and the mixed-shape
     serving engine) throughput vs the serial per-dataset ``fit`` loop
-    (``metrics.vs_serial_loop``), the PR-5 dispatch-amortization win.
+    (``metrics.vs_serial_loop``), the PR-5 dispatch-amortization win;
+  * ``serve_`` — async engine sustained throughput under concurrent
+    submitters vs the serial dedicated-fit loop
+    (``metrics.vs_serial_loop``), the PR-6 continuous-batching win.
 
 Ratios are compared rather than raw microseconds so the gate survives
 machine differences between the baseline recorder and the CI runner. Shape
@@ -64,6 +67,7 @@ GUARDED = {
     "fig4_scanthr_": "vs_dense_host",
     "ring_": "match",
     "batch_": "vs_serial_loop",
+    "serve_": "vs_serial_loop",
 }
 
 

@@ -688,9 +688,51 @@ def _pipeline_fn(batched: bool, rules, **static):
     return jax.jit(run)
 
 
+# Host-side estimator dispatch counters, threaded up into the serving stats
+# surface (``serve.async_engine.AsyncLingamEngine.stats``). "kernel_bypass"
+# counts dispatches where ``use_kernel=True`` was silently dropped because
+# the ``n_valid``/mask padding contract forces the jnp formulation (the
+# Pallas kernels reduce over their static tile width — see kernels/ops.py).
+dispatch_stats: dict = {"kernel_bypass": 0}
+_kernel_bypass_warned = False
+
+
+def reset_dispatch_stats() -> None:
+    """Zero ``dispatch_stats`` and re-arm the warn-once latch (tests)."""
+    global _kernel_bypass_warned
+    dispatch_stats["kernel_bypass"] = 0
+    _kernel_bypass_warned = False
+
+
+def _note_kernel_bypass(cfg: ParaLiNGAMConfig, n_valid) -> None:
+    """Count (and warn once about) the silent kernel bypass: a config asking
+    for the Pallas route (``use_kernel=True``, typically with ``fused=True``)
+    is dispatched with ``n_valid`` sample padding, which ``find_root_dense``
+    silently downgrades to the jnp formulation. Before this counter the
+    bypass was invisible — a padded serving deployment could believe it was
+    benchmarking the kernel path."""
+    global _kernel_bypass_warned
+    if not cfg.use_kernel or n_valid is None:
+        return
+    dispatch_stats["kernel_bypass"] += 1
+    if not _kernel_bypass_warned:
+        _kernel_bypass_warned = True
+        warnings.warn(
+            "use_kernel=True (fused Pallas route) is bypassed for this "
+            "dispatch: n_valid/mask sample padding forces the jnp "
+            "formulation (kernels have no masked-mean variant yet — see "
+            "kernels/ops.py). fused=True still runs the jnp fused path. "
+            "Counted in paralingam.dispatch_stats['kernel_bypass']; this "
+            "warning fires once per process.",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+
+
 def _run_pipeline(x, cfg: ParaLiNGAMConfig, *, adjacency: bool, batched: bool,
                   n_valid=None, mask0=None, rules=None,
                   prune_below: float = 0.0):
+    _note_kernel_bypass(cfg, n_valid)
     # Same selection contract as the order drivers: the threshold state
     # machine runs for method="threshold", or method="scan" + cfg.threshold;
     # cfg.threshold stays ignored under method="dense" (ParaLiNGAMConfig).

@@ -1,8 +1,24 @@
 from repro.serve.engine import Engine, ServeConfig
+from repro.serve.batching import (
+    BatchingConfig,
+    BatchingCore,
+    DispatchFailed,
+    EngineClosed,
+    ManualDispatcher,
+    QueueFull,
+    RequestTimeout,
+    ServeError,
+    Ticket,
+    bucket_dim,
+    bucket_dims,
+    pad_to,
+)
 from repro.serve.lingam_engine import (
     LingamEngine,
     LingamFit,
     LingamServeConfig,
     bucket_shape,
+    dispatch_bucket,
     pad_dataset,
 )
+from repro.serve.async_engine import AsyncLingamEngine

@@ -1,0 +1,178 @@
+"""Async LiNGAM serving engine: continuous batching for multi-tenant
+causal-discovery traffic.
+
+``LingamEngine`` (the sync front door) is submit-then-synchronous-``flush``:
+one caller, one thread, dispatches block the queue. ``AsyncLingamEngine``
+puts the same pack -> ``fit_batch`` -> unpad bucket dispatch
+(``lingam_engine.dispatch_bucket``) behind the continuous-batching core
+(``serve.batching``): any number of submitter threads enqueue concurrently
+and immediately get a ``Ticket``; a background dispatcher thread flushes each
+pow-2 ``(p, n)`` bucket when it fills (``max_batch``) or when its oldest
+request has waited ``flush_interval`` — the occupancy-vs-latency knob — with
+per-request deadlines/priorities, bounded-queue backpressure (block or
+shed), bounded failed-dispatch retry, and a stats surface (queue depth,
+batch occupancy, padding waste, shed/retry counters, per-bucket p50/p95
+latency). See ``serve/batching.py`` for the request lifecycle diagram and
+the delivery guarantees (an admitted request is never silently dropped).
+
+Determinism contract: a request served here returns *bit-identical* causal
+orders to a dedicated ``fit`` call — batching, padding and arrival order
+change only latency, never results (asserted under randomized multi-threaded
+request storms in tests/test_async_engine.py / tests/test_serve_storm.py).
+
+Everything timing- or failure-related is injectable: ``clock`` (a
+``utils.clock.Clock``) and ``dispatch`` (the bucket-level device call) seam
+the engine for deterministic fake-clock and fault-injection tests — and for
+``start=False`` + ``step()`` manual pumping with zero threads involved.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.paralingam import ParaLiNGAMConfig, dispatch_stats
+from repro.serve.batching import (
+    BatchingConfig,
+    BatchingCore,
+    DispatchFailed,
+    Ticket,
+)
+from repro.serve.lingam_engine import (
+    LingamFit,
+    LingamServeConfig,
+    bucket_shape,
+    check_dataset,
+    check_engine_config,
+    dispatch_bucket,
+)
+
+
+class AsyncLingamEngine:
+    """Thread-safe continuously-batching LiNGAM front door.
+
+    ``submit`` returns a :class:`~repro.serve.batching.Ticket` whose
+    ``result()`` blocks for the request's :class:`LingamFit` (or raises its
+    typed ``ServeError``); ``fit``/``fit_many`` are the blocking
+    conveniences. Close with ``close()`` (or use as a context manager) to
+    drain and stop the dispatcher thread.
+
+    ``dispatch`` (signature ``dispatch(bucket, payloads) -> list[LingamFit]``)
+    defaults to the real device path and is the fault-injection seam;
+    ``start=False`` skips the background thread so tests pump the engine
+    manually via ``step()`` under a ``FakeClock``.
+    """
+
+    def __init__(self, config: ParaLiNGAMConfig | None = None,
+                 serve_cfg: LingamServeConfig | None = None, rules=None, *,
+                 batch_cfg: BatchingConfig | None = None, clock=None,
+                 dispatch=None, start: bool = True):
+        self.config = check_engine_config(config)
+        self.serve_cfg = serve_cfg or LingamServeConfig()
+        self.rules = rules
+        batch_cfg = batch_cfg or BatchingConfig(
+            max_batch=self.serve_cfg.max_batch)
+        if batch_cfg.max_batch > self.serve_cfg.max_batch:
+            raise ValueError(
+                f"batch_cfg.max_batch={batch_cfg.max_batch} exceeds "
+                f"serve_cfg.max_batch={self.serve_cfg.max_batch} (the "
+                "dispatch-side batch bound)")
+        self._dispatch_seam = dispatch or self._device_dispatch
+        self.core = BatchingCore(self._dispatch_checked, batch_cfg,
+                                 clock=clock, name="lingam-async")
+        if start:
+            self.core.start()
+
+    # -- dispatch seam ------------------------------------------------------
+
+    def _device_dispatch(self, bucket, payloads) -> list[LingamFit]:
+        """Default dispatch: the shared pack -> fit_batch -> unpad path."""
+        p_pad, n_pad = bucket
+        return dispatch_bucket(payloads, p_pad, n_pad, self.config,
+                               self.serve_cfg, self.rules)
+
+    def _dispatch_checked(self, bucket, payloads):
+        """Run the (injectable) dispatch seam, then validate each result:
+        non-finite fits — a NaN'd Cholesky, a poisoned batch neighbour — are
+        converted to per-request ``DispatchFailed`` rejections so the core
+        retries or fails *that* request instead of delivering corrupt output.
+        Also accounts the bucket's padding waste (pow-2 shape + batch-count
+        padding cells vs live data cells)."""
+        p_pad, n_pad = bucket
+        results = self._dispatch_seam(bucket, payloads)
+        if results is not None and len(results) == len(payloads):
+            live = sum(int(np.prod(x.shape)) for x in payloads)
+            b_pad = len(payloads)
+            if self.serve_cfg.pad_batch_pow2:
+                from repro.utils.shapes import next_pow2
+
+                b_pad = min(next_pow2(len(payloads)), self.serve_cfg.max_batch)
+            total = b_pad * p_pad * n_pad
+            self.core.note_bucket(bucket, pad_cells=total - live,
+                                  total_cells=total)
+            results = [
+                r if isinstance(r, BaseException) or _fit_finite(r)
+                else DispatchFailed(
+                    f"non-finite fit result for request in bucket {bucket}")
+                for r in results
+            ]
+        return results
+
+    # -- intake -------------------------------------------------------------
+
+    def submit(self, x, *, priority: int = 0, deadline: float | None = None,
+               overflow: str | None = None) -> Ticket:
+        """Enqueue one (p, n) dataset. ``deadline`` is relative seconds on
+        the engine clock: the bucket flushes early enough to honor it, and a
+        request still queued past it is failed with ``RequestTimeout``
+        (work already on the device is delivered, not cancelled). Higher
+        ``priority`` wins within a bucket. ``overflow`` ("block"/"shed")
+        overrides the configured backpressure policy for this request."""
+        x = check_dataset(x)
+        bucket = bucket_shape(*x.shape, self.serve_cfg)
+        return self.core.submit(x, bucket, priority=priority,
+                                deadline=deadline, overflow=overflow)
+
+    def fit(self, x, *, priority: int = 0, deadline: float | None = None,
+            timeout: float | None = None) -> LingamFit:
+        """Blocking submit + result."""
+        return self.submit(x, priority=priority, deadline=deadline).result(timeout)
+
+    def fit_many(self, xs, *, timeout: float | None = None) -> list[LingamFit]:
+        tickets = [self.submit(x) for x in xs]
+        return [t.result(timeout) for t in tickets]
+
+    # -- control / observability -------------------------------------------
+
+    def step(self) -> int:
+        """Manual scheduling pass (``start=False`` engines / tests). Returns
+        the number of batches dispatched."""
+        return self.core.step()
+
+    def join(self, timeout: float | None = None) -> bool:
+        return self.core.join(timeout)
+
+    @property
+    def pending(self) -> int:
+        return self.core.pending
+
+    def stats(self) -> dict:
+        """Core stats snapshot plus the estimator-level counters threaded up
+        from ``core.paralingam`` (currently: how many dispatches silently
+        bypassed the Pallas kernel route because of the ``n_valid``/mask
+        padding contract)."""
+        out = self.core.snapshot()
+        out["kernel_bypass"] = dispatch_stats["kernel_bypass"]
+        return out
+
+    def close(self, *, drain: bool = True, timeout: float | None = None) -> None:
+        self.core.close(drain=drain, timeout=timeout)
+
+    def __enter__(self) -> "AsyncLingamEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def _fit_finite(f: LingamFit) -> bool:
+    return bool(np.isfinite(f.b).all() and np.isfinite(f.noise_var).all())

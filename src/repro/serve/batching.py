@@ -1,0 +1,604 @@
+"""Reusable continuous-batching core shared by the serving engines.
+
+Both engines in ``serve/`` batch for the same reason — jit compiles one
+executable per shape, so throughput is won by packing many requests into one
+dispatch on a small pow-2 shape grid (``bucket_dim``/``pad_to`` below are
+that shared grid logic). This module adds the *service* half: a bounded
+admission queue, per-bucket continuous batching with size- and deadline-
+triggered flushes, backpressure, load shedding, bounded retry, and a stats
+surface. ``AsyncLingamEngine`` (``serve/async_engine.py``) is the first
+engine built on it.
+
+Request lifecycle::
+
+        submit(payload, bucket, priority, deadline)
+             |
+             v
+      +------------------+  full + overflow="shed"  -> QueueFull raised (counted)
+      | admission queue  |  full + overflow="block" -> submitter parks until a
+      |  (max_queue)     |                             dispatch frees space
+      +------------------+
+             | grouped by bucket key (e.g. the pow-2 padded (p, n) shape)
+             v
+      +------------------+  a bucket flushes when:
+      | per-bucket rows  |    - it holds >= max_batch requests (size trigger)
+      |  priority-sorted |    - its earliest "due" time passes (age trigger:
+      +------------------+      enqueue + flush_interval, pulled earlier by
+             |                  any request deadline minus deadline_margin)
+             v
+        dispatcher  (background thread, or test-driven via step())
+             |-- deadline already passed      -> ticket <- RequestTimeout
+             |-- dispatch seam raises / returns bad rows:
+             |       retries_left > 0  -> re-queued, due=now (counted retry)
+             |       retries_left == 0 -> ticket <- DispatchFailed
+             v
+        ticket.result()   (unblocks the submitter with value or typed error)
+
+Every admitted request terminates in exactly one of delivered / timed-out /
+failed, and every submitted request is admitted or shed — the conservation
+laws (``submitted == admitted + shed``, ``admitted == delivered + timeouts +
+failed + still-queued/in-flight``) that the fault-injection and storm tests
+assert. A request is *never* silently dropped: even a dispatcher-thread crash
+fails the queue with typed errors rather than hanging callers.
+
+All time flows through the ``utils.clock`` seam and all device work through
+the ``dispatch`` callable, so every timing and failure path is
+deterministically testable with ``FakeClock`` + ``ManualDispatcher`` and zero
+wall-clock sleeps (tests/test_batching.py).
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.utils.clock import Clock, MonotonicClock
+from repro.utils.shapes import next_pow2
+
+
+# ---------------------------------------------------------------------------
+# shared shape-bucketing helpers (the LM and LiNGAM engines' common grid)
+# ---------------------------------------------------------------------------
+
+
+def bucket_dim(v: int, floor: int = 1) -> int:
+    """One dimension of the pow-2 bucket grid: ``next_pow2`` with a floor so
+    tiny requests share one executable instead of one each."""
+    return max(floor, next_pow2(v))
+
+
+def bucket_dims(shape, floors) -> tuple[int, ...]:
+    """Pow-2 bucket for a whole shape (elementwise ``bucket_dim``)."""
+    return tuple(bucket_dim(v, f) for v, f in zip(shape, floors))
+
+
+def pad_to(x: np.ndarray, shape, dtype=None) -> np.ndarray:
+    """Zero-pad ``x`` up to ``shape`` (leading corner). Zeros are the padding
+    contract of the mask/``n_valid`` seams: dead rows and padded sample
+    columns must be exactly zero."""
+    out = np.zeros(shape, dtype or x.dtype)
+    out[tuple(slice(0, s) for s in x.shape)] = x
+    return out
+
+
+# ---------------------------------------------------------------------------
+# typed request-terminal errors
+# ---------------------------------------------------------------------------
+
+
+class ServeError(Exception):
+    """Base class of every typed serving error a ticket can carry."""
+
+
+class QueueFull(ServeError):
+    """Admission queue full and overflow policy is "shed" (raised at
+    ``submit`` time; the request was never admitted)."""
+
+
+class RequestTimeout(ServeError):
+    """The request's deadline passed while it was still queued. Requests
+    already in flight on the device are delivered, not cancelled."""
+
+
+class DispatchFailed(ServeError):
+    """Dispatch raised (or produced an invalid result) and the retry budget
+    is exhausted; ``__cause__`` carries the last underlying error."""
+
+
+class EngineClosed(ServeError):
+    """The engine was closed before this request could be served."""
+
+
+# ---------------------------------------------------------------------------
+# configuration / ticket
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BatchingConfig:
+    max_batch: int = 64  # requests per dispatch (a bucket splits into chunks)
+    max_queue: int = 256  # bounded admission queue (queued, not yet in flight)
+    flush_interval: float = 0.01  # age trigger: flush a bucket once its
+    #   oldest request has waited this long (seconds; the occupancy-vs-latency
+    #   knob — see EXPERIMENTS.md "Continuous batching")
+    deadline_margin: float = 0.0  # flush this early relative to a request
+    #   deadline (budget for the dispatch itself)
+    overflow: str = "block"  # "block" | "shed": backpressure policy when the
+    #   admission queue is full (per-submit override available)
+    max_retries: int = 1  # failed-dispatch re-queue budget per request
+    latency_window: int = 512  # per-bucket delivered-latency ring buffer
+
+
+class Ticket:
+    """One request's completion handle: ``result()`` blocks until the
+    dispatcher delivers a value or a typed ``ServeError``."""
+
+    __slots__ = ("req_id", "bucket", "_event", "_value", "_error")
+
+    def __init__(self, req_id: int, bucket):
+        self.req_id = req_id
+        self.bucket = bucket
+        self._event = threading.Event()
+        self._value = None
+        self._error: BaseException | None = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: float | None = None):
+        """Block for the result; raises the ticket's typed error if the
+        request failed, or ``TimeoutError`` if *this wait* (real wall-clock,
+        independent of the engine's clock seam) times out."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request {self.req_id} not done after {timeout}s")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+    def error(self) -> BaseException | None:
+        """The typed error of a finished-failed ticket (None while pending
+        or when delivered)."""
+        return self._error
+
+    def _deliver(self, value) -> None:
+        self._value = value
+        self._event.set()
+
+    def _fail(self, err: BaseException) -> None:
+        self._error = err
+        self._event.set()
+
+
+class _Req:
+    __slots__ = ("seq", "payload", "bucket", "priority", "deadline", "due",
+                 "enqueue_t", "retries_left", "ticket")
+
+    def __init__(self, seq, payload, bucket, priority, deadline, due,
+                 enqueue_t, retries_left, ticket):
+        self.seq = seq
+        self.payload = payload
+        self.bucket = bucket
+        self.priority = priority
+        self.deadline = deadline  # absolute engine-clock time, or None
+        self.due = due  # absolute time at which this request forces a flush
+        self.enqueue_t = enqueue_t
+        self.retries_left = retries_left
+        self.ticket = ticket
+
+
+# ---------------------------------------------------------------------------
+# the core
+# ---------------------------------------------------------------------------
+
+
+class BatchingCore:
+    """Bounded admission queue + bucketed continuous batcher.
+
+    ``dispatch(bucket, payloads) -> results`` is the injectable work seam: it
+    receives one bucket's batch (payloads in dispatch order) and must return
+    one result per payload, in order. A raised exception fails the whole
+    batch into the retry path; a result that is an ``Exception`` instance
+    fails (or retries) just that request — the hook engines use to reject
+    corrupt results (e.g. NaN outputs) without losing the rest of the batch.
+
+    Run modes: ``start()`` spawns the background dispatcher thread
+    (production); without it, ``step()`` runs one scheduling pass in the
+    calling thread (deterministic tests drive this under a ``FakeClock``).
+    """
+
+    def __init__(self, dispatch, cfg: BatchingConfig | None = None, *,
+                 clock: Clock | None = None, name: str = "batching"):
+        if cfg is not None and cfg.overflow not in ("block", "shed"):
+            raise ValueError(f"overflow must be 'block' or 'shed', got {cfg.overflow!r}")
+        self.dispatch = dispatch
+        self.cfg = cfg or BatchingConfig()
+        self.clock = clock or MonotonicClock()
+        self.name = name
+        self._mu = threading.Lock()
+        self._work = threading.Condition(self._mu)  # dispatcher parks here
+        self._space = threading.Condition(self._mu)  # blocked submitters park
+        self._idle = threading.Condition(self._mu)  # join() waiters park
+        self._queue: dict = {}  # bucket -> list[_Req]
+        self._depth = 0  # queued request count (the admission bound)
+        self._in_flight = 0
+        self._seq = 0
+        self._closed = False
+        self._thread: threading.Thread | None = None
+        self.stats: dict = {
+            "submitted": 0, "admitted": 0, "shed": 0, "rejected": 0,
+            "delivered": 0, "timeouts": 0, "failed": 0, "retries": 0,
+            "dispatches": 0, "dispatch_failures": 0, "queue_peak": 0,
+            "blocked_submits": 0,
+        }
+        self._buckets: dict = {}  # bucket -> mutable stats dict
+
+    # -- intake -------------------------------------------------------------
+
+    def submit(self, payload, bucket, *, priority: int = 0,
+               deadline: float | None = None,
+               overflow: str | None = None) -> Ticket:
+        """Enqueue one request. ``deadline`` is *relative* seconds from now
+        (engine clock); pass None for no deadline. Higher ``priority``
+        dispatches first within a bucket. ``overflow`` overrides the
+        configured backpressure policy for this call."""
+        policy = overflow or self.cfg.overflow
+        if policy not in ("block", "shed"):
+            raise ValueError(f"overflow must be 'block' or 'shed', got {policy!r}")
+        with self._mu:
+            self.stats["submitted"] += 1
+            if self._closed:
+                self.stats["rejected"] += 1
+                raise EngineClosed(f"{self.name}: engine is closed")
+            blocked = False
+            while self._depth >= self.cfg.max_queue:
+                if policy == "shed":
+                    self.stats["shed"] += 1
+                    self._bucket_stats(bucket)["shed"] += 1
+                    raise QueueFull(
+                        f"{self.name}: admission queue full "
+                        f"({self._depth}/{self.cfg.max_queue}); request shed"
+                    )
+                if not blocked:
+                    blocked = True
+                    self.stats["blocked_submits"] += 1
+                self._space.wait()
+                if self._closed:
+                    self.stats["rejected"] += 1
+                    raise EngineClosed(f"{self.name}: engine closed while blocked")
+            now = self.clock.now()
+            ticket = Ticket(self._seq, bucket)
+            due = now + self.cfg.flush_interval
+            abs_deadline = None
+            if deadline is not None:
+                abs_deadline = now + deadline
+                due = min(due, abs_deadline - self.cfg.deadline_margin)
+            req = _Req(self._seq, payload, bucket, priority, abs_deadline,
+                       due, now, self.cfg.max_retries, ticket)
+            self._seq += 1
+            self._queue.setdefault(bucket, []).append(req)
+            self._depth += 1
+            self.stats["admitted"] += 1
+            self._bucket_stats(bucket)["requests"] += 1
+            self.stats["queue_peak"] = max(self.stats["queue_peak"], self._depth)
+            self._work.notify()
+        return ticket
+
+    # -- scheduling ---------------------------------------------------------
+
+    def step(self) -> int:
+        """One scheduling pass in the calling thread: expire overdue
+        deadlines, then dispatch every currently-flushable batch (full
+        buckets, or buckets whose earliest due time has passed). Returns the
+        number of batches dispatched. This is the deterministic test
+        entrypoint; the background thread calls it too."""
+        dispatched = 0
+        while True:
+            taken = self._take_batch()
+            if taken is None:
+                return dispatched
+            self._run_batch(*taken)
+            dispatched += 1
+
+    def _bucket_stats(self, bucket) -> dict:
+        # caller holds self._mu
+        bs = self._buckets.get(bucket)
+        if bs is None:
+            bs = self._buckets[bucket] = {
+                "requests": 0, "dispatches": 0, "delivered": 0, "shed": 0,
+                "timeouts": 0, "failed": 0, "retries": 0, "batch_sum": 0,
+                "lat": deque(maxlen=self.cfg.latency_window),
+            }
+        return bs
+
+    def note_bucket(self, bucket, **deltas) -> None:
+        """Accumulate engine-specific numeric counters into a bucket's stats
+        (e.g. the LiNGAM engine's padding-waste cells). Thread-safe."""
+        with self._mu:
+            bs = self._bucket_stats(bucket)
+            for k, v in deltas.items():
+                bs[k] = bs.get(k, 0) + v
+
+    def _take_batch(self):
+        """Pop the most urgent flushable batch (or None). Also fails overdue
+        queued requests with ``RequestTimeout`` — load-shedding of work that
+        can no longer meet its deadline, *before* it wastes a dispatch."""
+        now = self.clock.now()
+        with self._mu:
+            best = None
+            best_trigger = None
+            for bucket in list(self._queue):
+                reqs = self._queue[bucket]
+                alive = []
+                for r in reqs:
+                    if r.deadline is not None and r.deadline <= now:
+                        self._finish_locked(r, kind="timeouts", now=now,
+                                            error=RequestTimeout(
+                                                f"{self.name}: request "
+                                                f"{r.ticket.req_id} missed its "
+                                                f"deadline while queued"))
+                        self._depth -= 1
+                    else:
+                        alive.append(r)
+                if not alive:
+                    del self._queue[bucket]
+                    continue
+                self._queue[bucket] = alive
+                trigger = (now if len(alive) >= self.cfg.max_batch
+                           else min(r.due for r in alive))
+                if trigger <= now and (best is None or trigger < best_trigger):
+                    best, best_trigger = bucket, trigger
+            if best is None:
+                if self._depth == 0 and self._in_flight == 0:
+                    self._idle.notify_all()
+                self._space.notify_all()  # timeouts may have freed space
+                return None
+            reqs = self._queue[best]
+            reqs.sort(key=lambda r: (-r.priority, r.seq))
+            take, rest = reqs[: self.cfg.max_batch], reqs[self.cfg.max_batch:]
+            if rest:
+                self._queue[best] = rest
+            else:
+                del self._queue[best]
+            self._depth -= len(take)
+            self._in_flight += len(take)
+            self._space.notify_all()
+            return best, take
+
+    def _run_batch(self, bucket, reqs) -> None:
+        try:
+            results = self.dispatch(bucket, [r.payload for r in reqs])
+            if results is None or len(results) != len(reqs):
+                got = 0 if results is None else len(results)
+                raise DispatchFailed(
+                    f"{self.name}: dispatch returned {got} results for "
+                    f"{len(reqs)} requests (partial batch)"
+                )
+        except BaseException as e:  # noqa: BLE001 — every failure is typed
+            with self._mu:
+                self.stats["dispatch_failures"] += 1
+                self._in_flight -= len(reqs)
+                for r in reqs:
+                    self._retry_or_fail_locked(r, e)
+            return
+        now = self.clock.now()
+        with self._mu:
+            self.stats["dispatches"] += 1
+            bs = self._bucket_stats(bucket)
+            bs["dispatches"] += 1
+            bs["batch_sum"] += len(reqs)
+            self._in_flight -= len(reqs)
+            for r, val in zip(reqs, results):
+                if isinstance(val, BaseException):
+                    # per-request rejection from the seam (e.g. NaN result)
+                    self._retry_or_fail_locked(r, val)
+                else:
+                    self._finish_locked(r, kind="delivered", now=now, value=val)
+            if self._depth == 0 and self._in_flight == 0:
+                self._idle.notify_all()
+
+    def _retry_or_fail_locked(self, r: _Req, err: BaseException) -> None:
+        if r.retries_left > 0 and not self._closed:
+            r.retries_left -= 1
+            r.due = self.clock.now()  # retry at the next pass, don't re-age
+            self.stats["retries"] += 1
+            self._bucket_stats(r.bucket)["retries"] += 1
+            # Re-queueing may transiently exceed max_queue: the bound is an
+            # *admission* bound; already-admitted work is never shed.
+            self._queue.setdefault(r.bucket, []).append(r)
+            self._depth += 1
+            self._work.notify()
+            return
+        if isinstance(err, ServeError):
+            final: BaseException = err
+        else:
+            final = DispatchFailed(f"{self.name}: dispatch failed: {err!r}")
+            final.__cause__ = err
+        self._finish_locked(r, kind="failed", now=self.clock.now(), error=final)
+
+    def _finish_locked(self, r: _Req, *, kind: str, now: float,
+                       value=None, error: BaseException | None = None) -> None:
+        self.stats[kind] += 1
+        bs = self._bucket_stats(r.bucket)
+        bs[kind] += 1
+        if kind == "delivered":
+            bs["lat"].append(now - r.enqueue_t)
+            r.ticket._deliver(value)
+        else:
+            r.ticket._fail(error)
+
+    # -- background thread --------------------------------------------------
+
+    def start(self) -> "BatchingCore":
+        """Spawn the background dispatcher thread (idempotent)."""
+        with self._mu:
+            if self._closed:
+                raise EngineClosed(f"{self.name}: engine is closed")
+            if self._thread is not None:
+                return self
+            self._thread = threading.Thread(
+                target=self._run, name=f"{self.name}-dispatcher", daemon=True
+            )
+        self._thread.start()
+        return self
+
+    def _run(self) -> None:
+        try:
+            while True:
+                with self._mu:
+                    if self._closed and self._depth == 0:
+                        return
+                    wake = None
+                    for reqs in self._queue.values():
+                        if len(reqs) >= self.cfg.max_batch:
+                            wake = self.clock.now()
+                            break
+                        for r in reqs:
+                            wake = r.due if wake is None else min(wake, r.due)
+                            if r.deadline is not None:
+                                wake = min(wake, r.deadline)
+                    if wake is None:  # nothing queued
+                        self.clock.wait(self._work, None)
+                        continue
+                    now = self.clock.now()
+                    if wake > now:
+                        self.clock.wait(self._work, wake - now)
+                        continue
+                self.step()
+        except BaseException as e:  # pragma: no cover - defensive: never hang
+            # A dispatcher bug must not strand callers on tickets forever:
+            # fail everything queued with a typed error, then re-raise so the
+            # crash is loud in logs.
+            with self._mu:
+                self._closed = True
+                for reqs in self._queue.values():
+                    for r in reqs:
+                        self._finish_locked(
+                            r, kind="failed", now=self.clock.now(),
+                            error=DispatchFailed(
+                                f"{self.name}: dispatcher thread crashed: {e!r}"))
+                self._queue.clear()
+                self._depth = 0
+                self._space.notify_all()
+                self._idle.notify_all()
+            raise
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def join(self, timeout: float | None = None) -> bool:
+        """Block until nothing is queued or in flight (real wall-clock
+        ``timeout``); returns False on timeout. Only meaningful with the
+        background thread running."""
+        deadline = None if timeout is None else (MonotonicClock().now() + timeout)
+        with self._mu:
+            while self._depth > 0 or self._in_flight > 0:
+                remaining = None
+                if deadline is not None:
+                    remaining = deadline - MonotonicClock().now()
+                    if remaining <= 0:
+                        return False
+                self._idle.wait(remaining)
+        return True
+
+    def close(self, *, drain: bool = True, timeout: float | None = None) -> None:
+        """Stop accepting requests. ``drain=True`` flushes everything still
+        queued (ignoring flush-interval aging) before the dispatcher exits;
+        ``drain=False`` fails queued requests with ``EngineClosed``."""
+        with self._mu:
+            if self._closed:
+                thread = self._thread
+            else:
+                self._closed = True
+                if drain:
+                    now = self.clock.now()
+                    for reqs in self._queue.values():
+                        for r in reqs:
+                            r.due = now  # flush immediately, age no further
+                else:
+                    for reqs in self._queue.values():
+                        for r in reqs:
+                            self._finish_locked(
+                                r, kind="failed", now=self.clock.now(),
+                                error=EngineClosed(
+                                    f"{self.name}: closed before dispatch"))
+                    self._queue.clear()
+                    self._depth = 0
+                thread = self._thread
+                self._work.notify_all()
+                self._space.notify_all()
+        if thread is not None:
+            thread.join(timeout)
+        elif drain:
+            while self.step():
+                pass
+
+    def __enter__(self) -> "BatchingCore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- stats --------------------------------------------------------------
+
+    @property
+    def pending(self) -> int:
+        with self._mu:
+            return self._depth
+
+    def snapshot(self) -> dict:
+        """Point-in-time stats: global counters, queue depth/in-flight, and
+        per-bucket occupancy, padding counters and p50/p95 delivered latency
+        (seconds, engine clock)."""
+        with self._mu:
+            out = dict(self.stats)
+            out["queue_depth"] = self._depth
+            out["in_flight"] = self._in_flight
+            buckets = {}
+            for bucket, bs in self._buckets.items():
+                b = {k: v for k, v in bs.items() if k != "lat"}
+                if bs["dispatches"]:
+                    b["occupancy"] = bs["batch_sum"] / (
+                        bs["dispatches"] * self.cfg.max_batch)
+                    b["avg_batch"] = bs["batch_sum"] / bs["dispatches"]
+                lat = sorted(bs["lat"])
+                if lat:
+                    b["p50_latency"] = lat[len(lat) // 2]
+                    b["p95_latency"] = lat[min(len(lat) - 1,
+                                               int(len(lat) * 0.95))]
+                if bs.get("total_cells"):
+                    b["padding_waste"] = bs.get("pad_cells", 0) / bs["total_cells"]
+                buckets[bucket] = b
+            out["buckets"] = buckets
+        return out
+
+
+class ManualDispatcher:
+    """Deterministic, scriptable dispatch seam for tests.
+
+    Records every ``(bucket, payloads)`` call; by default maps ``fn`` (the
+    identity) over the payloads. Fault injection: ``fail_call(k, exc=...)``
+    makes the k-th call (1-based) raise, ``fail_call(k, results=...)``
+    substitutes the k-th call's return value — a list (possibly partial, or
+    containing ``Exception`` entries for per-request rejection) or a callable
+    of the payloads. Each scripted failure fires once."""
+
+    def __init__(self, fn=None):
+        self.fn = fn if fn is not None else (lambda p: p)
+        self.calls: list[tuple] = []
+        self._failures: dict[int, tuple] = {}
+
+    def fail_call(self, k: int, exc: BaseException | None = None,
+                  results=None) -> None:
+        self._failures[k] = (exc, results)
+
+    def __call__(self, bucket, payloads):
+        self.calls.append((bucket, list(payloads)))
+        k = len(self.calls)
+        if k in self._failures:
+            exc, results = self._failures.pop(k)
+            if exc is not None:
+                raise exc
+            return results(payloads) if callable(results) else results
+        return [self.fn(p) for p in payloads]

@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.models import lm
 from repro.dist.sharding import NO_SHARDING
-from repro.utils.shapes import next_pow2
+from repro.serve.batching import bucket_dim
 
 
 @dataclass
@@ -58,7 +58,7 @@ class Engine:
         scfg = self.serve_cfg
         b, s = prompts.shape
         if scfg.bucket_prompts:
-            s_pad = next_pow2(s)
+            s_pad = bucket_dim(s)  # the serve-wide pow-2 bucket grid
             prompts = np.pad(prompts, ((0, 0), (0, s_pad - s)), constant_values=0)
         total = prompts.shape[1] + scfg.max_new_tokens
 

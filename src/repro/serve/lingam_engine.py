@@ -29,13 +29,13 @@ mesh — the multidevice CI lane runs exactly that on 8 forced host devices.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.paralingam import ParaLiNGAMConfig, fit_batch
+from repro.serve.batching import bucket_dims, pad_to
 from repro.utils.shapes import next_pow2
 
 
@@ -68,18 +68,89 @@ class _Pending:
 
 
 def bucket_shape(p: int, n: int, cfg: LingamServeConfig) -> tuple[int, int]:
-    """The padded (p, n) executable bucket a request shape lands in."""
-    return (max(cfg.min_p_bucket, next_pow2(p)),
-            max(cfg.min_n_bucket, next_pow2(n)))
+    """The padded (p, n) executable bucket a request shape lands in (the
+    shared pow-2 grid of ``serve.batching``, floored per dimension)."""
+    return bucket_dims((p, n), (cfg.min_p_bucket, cfg.min_n_bucket))
 
 
 def pad_dataset(x: np.ndarray, p_pad: int, n_pad: int) -> np.ndarray:
     """Zero-pad ``x: (p, n)`` to (p_pad, n_pad) — zeros are the padding
     contract of the mask/n_valid seams (dead rows and padded sample columns
     must be exactly zero)."""
-    p, n = x.shape
-    out = np.zeros((p_pad, n_pad), np.float64)
-    out[:p, :n] = x
+    return pad_to(x, (p_pad, n_pad), np.float64)
+
+
+def check_engine_config(config: ParaLiNGAMConfig | None) -> ParaLiNGAMConfig:
+    """Shared construction-time config validation of the sync and async
+    engines: fail at construction, not at the first flush — fit_batch has no
+    batched ring form (the batch axis shards via ``rules`` instead)."""
+    config = config or ParaLiNGAMConfig()
+    if config.ring:
+        raise ValueError(
+            "the LiNGAM engines dispatch through fit_batch, which has no "
+            "ring form — use config.ring=False and shard the batch axis "
+            "via rules=make_rules(cfg, mesh)"
+        )
+    return config
+
+
+def check_dataset(x) -> np.ndarray:
+    """Coerce one request payload to a float64 (p, n) matrix (shared request
+    validation of the sync and async engines)."""
+    x = np.asarray(x, np.float64)
+    if x.ndim != 2:
+        raise ValueError(f"expected one (p, n) dataset, got shape {x.shape}")
+    return x
+
+
+def dispatch_bucket(xs_list: list[np.ndarray], p_pad: int, n_pad: int,
+                    config: ParaLiNGAMConfig,
+                    serve_cfg: LingamServeConfig,
+                    rules=None) -> list[LingamFit]:
+    """One bucket's device dispatch, shared by the sync and async engines:
+    pack the raw ragged datasets into a zero-padded (B, p_pad, n_pad) batch
+    (batch count pow-2 padded too, per ``serve_cfg``), run the one-dispatch
+    batched fit, and unpad each result back to its request's true shape.
+    Returns one ``LingamFit`` per input dataset, in order."""
+    b = len(xs_list)
+    b_pad = (min(next_pow2(b), serve_cfg.max_batch)
+             if serve_cfg.pad_batch_pow2 else b)
+    xs = np.zeros((b_pad, p_pad, n_pad), np.float64)
+    mask = np.zeros((b_pad, p_pad), bool)
+    n_valid = np.full((b_pad,), n_pad, np.int32)
+    exact = True  # no request actually padded -> skip the masked seams
+    for i, x in enumerate(xs_list):
+        p, n = x.shape
+        xs[i, :p, :n] = x
+        mask[i, :p] = True
+        n_valid[i] = n
+        exact &= (p == p_pad and n == n_pad)
+    exact &= b == b_pad
+
+    res = fit_batch(
+        xs, config,
+        mask=None if exact else jnp.asarray(mask),
+        n_valid=None if exact else jnp.asarray(n_valid),
+        rules=rules,
+    )
+
+    orders = np.asarray(res.orders)
+    bs = np.asarray(res.b)
+    omegas = np.asarray(res.noise_var)
+    comps = np.asarray(res.comparisons)
+    rounds = np.asarray(res.rounds)
+    conv = np.asarray(res.converged)
+    out = []
+    for i, x in enumerate(xs_list):
+        p = x.shape[0]
+        out.append(LingamFit(
+            order=[int(v) for v in orders[i, :p]],
+            b=bs[i, :p, :p],
+            noise_var=omegas[i, :p],
+            comparisons=int(comps[i, : max(p - 1, 0)].sum()),
+            rounds=int(rounds[i, : max(p - 1, 0)].sum()),
+            converged=bool(conv[i, : max(p - 1, 0)].all()),
+        ))
     return out
 
 
@@ -93,15 +164,7 @@ class LingamEngine:
 
     def __init__(self, config: ParaLiNGAMConfig | None = None,
                  serve_cfg: LingamServeConfig | None = None, rules=None):
-        self.config = config or ParaLiNGAMConfig()
-        if self.config.ring:
-            # Fail at construction, not at the first flush: fit_batch has no
-            # batched ring form (the batch axis shards via ``rules`` instead).
-            raise ValueError(
-                "LingamEngine dispatches through fit_batch, which has no "
-                "ring form — use config.ring=False and shard the batch axis "
-                "via rules=make_rules(cfg, mesh)"
-            )
+        self.config = check_engine_config(config)
         self.serve_cfg = serve_cfg or LingamServeConfig()
         self.rules = rules
         self._queue: list[_Pending] = []
@@ -112,9 +175,7 @@ class LingamEngine:
     # -- intake -------------------------------------------------------------
 
     def submit(self, x) -> int:
-        x = np.asarray(x, np.float64)
-        if x.ndim != 2:
-            raise ValueError(f"expected one (p, n) dataset, got shape {x.shape}")
+        x = check_dataset(x)
         req_id = self._next_id
         self._next_id += 1
         self._queue.append(_Pending(req_id, x))
@@ -159,44 +220,7 @@ class LingamEngine:
 
     def _dispatch(self, reqs: list[_Pending], p_pad: int,
                   n_pad: int) -> dict[int, LingamFit]:
-        scfg = self.serve_cfg
-        b = len(reqs)
-        b_pad = min(next_pow2(b), scfg.max_batch) if scfg.pad_batch_pow2 else b
-        xs = np.zeros((b_pad, p_pad, n_pad), np.float64)
-        mask = np.zeros((b_pad, p_pad), bool)
-        n_valid = np.full((b_pad,), n_pad, np.int32)
-        exact = True  # no request actually padded -> skip the masked seams
-        for i, req in enumerate(reqs):
-            p, n = req.x.shape
-            xs[i, :p, :n] = req.x
-            mask[i, :p] = True
-            n_valid[i] = n
-            exact &= (p == p_pad and n == n_pad)
-        exact &= b == b_pad
-
-        res = fit_batch(
-            xs, self.config,
-            mask=None if exact else jnp.asarray(mask),
-            n_valid=None if exact else jnp.asarray(n_valid),
-            rules=self.rules,
-        )
+        fits = dispatch_bucket([req.x for req in reqs], p_pad, n_pad,
+                               self.config, self.serve_cfg, self.rules)
         self.stats["dispatches"] += 1
-
-        orders = np.asarray(res.orders)
-        bs = np.asarray(res.b)
-        omegas = np.asarray(res.noise_var)
-        comps = np.asarray(res.comparisons)
-        rounds = np.asarray(res.rounds)
-        conv = np.asarray(res.converged)
-        out = {}
-        for i, req in enumerate(reqs):
-            p = req.x.shape[0]
-            out[req.req_id] = LingamFit(
-                order=[int(v) for v in orders[i, :p]],
-                b=bs[i, :p, :p],
-                noise_var=omegas[i, :p],
-                comparisons=int(comps[i, : max(p - 1, 0)].sum()),
-                rounds=int(rounds[i, : max(p - 1, 0)].sum()),
-                converged=bool(conv[i, : max(p - 1, 0)].all()),
-            )
-        return out
+        return {req.req_id: f for req, f in zip(reqs, fits)}

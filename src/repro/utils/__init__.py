@@ -1,3 +1,4 @@
 from repro.utils.tree import param_count, param_bytes, tree_flatten_with_names
+from repro.utils.clock import Clock, FakeClock, MonotonicClock
 from repro.utils.log import get_logger
 from repro.utils.shapes import next_pow2

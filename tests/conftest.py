@@ -11,7 +11,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # Optional dev dependency (requirements-dev.txt): property tests need
 # hypothesis; without it, skip collecting those modules instead of erroring
 # the whole run (conftest-level importorskip).
-_HYPOTHESIS_MODULES = ("test_covariance.py",)
+_HYPOTHESIS_MODULES = ("test_covariance.py", "test_serve_storm.py")
 collect_ignore = (
     [] if importlib.util.find_spec("hypothesis") else list(_HYPOTHESIS_MODULES)
 )
@@ -21,6 +21,28 @@ collect_ignore = (
 # the slowest part of the suite. Marked ``slow`` so CI can run a fast
 # ``-m "not slow"`` lane; the full lane still runs everything.
 _SLOW_MODULES = {"test_distributed.py", "test_elastic.py"}
+
+
+# -- deterministic serving-test fixtures -------------------------------------
+# The async serving stack (serve/batching.py) seams all timing through
+# utils.clock and all device work through the dispatch callable. These
+# fixtures are the deterministic halves of those seams: a manually-advanced
+# clock and a scriptable dispatcher, so deadline-flush, timeout, shed and
+# fault-injection paths are tested with zero wall-clock sleeps.
+
+
+@pytest.fixture
+def fake_clock():
+    from repro.utils.clock import FakeClock
+
+    return FakeClock()
+
+
+@pytest.fixture
+def manual_dispatcher():
+    from repro.serve.batching import ManualDispatcher
+
+    return ManualDispatcher()
 
 
 def pytest_configure(config):

@@ -1,0 +1,330 @@
+"""AsyncLingamEngine: continuous batching with results bit-identical to
+dedicated fits, under fake-clock determinism, concurrent submitters, and
+injected dispatch faults.
+
+The deterministic tests pump a stopped engine (``start=False``) with a
+``FakeClock`` — no dispatcher thread, no sleeps. The concurrency tests run
+the real background thread with a tiny flush interval and only bounded waits.
+"""
+
+import threading
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import sem
+from repro.core.paralingam import ParaLiNGAMConfig, fit
+from repro.serve.async_engine import AsyncLingamEngine
+from repro.serve.batching import (
+    BatchingConfig,
+    DispatchFailed,
+    QueueFull,
+    RequestTimeout,
+)
+from repro.serve.lingam_engine import LingamServeConfig
+from repro.utils.clock import FakeClock
+
+CFG = ParaLiNGAMConfig(min_bucket=8)
+SCFG = LingamServeConfig(min_p_bucket=8, min_n_bucket=64)
+
+
+def _gen(p, n, seed):
+    return sem.generate(sem.SemSpec(p=p, n=n, seed=seed))["x"]
+
+
+def _ref_order(x):
+    return fit(x, CFG)[0].order
+
+
+def _manual_engine(clock, dispatch=None, **cfg):
+    defaults = dict(max_batch=4, max_queue=64, flush_interval=1.0)
+    defaults.update(cfg)
+    return AsyncLingamEngine(CFG, SCFG, batch_cfg=BatchingConfig(**defaults),
+                             clock=clock, dispatch=dispatch, start=False)
+
+
+def _assert_conserved(stats):
+    assert stats["submitted"] == (stats["admitted"] + stats["shed"]
+                                  + stats["rejected"])
+    assert stats["admitted"] == (stats["delivered"] + stats["timeouts"]
+                                 + stats["failed"] + stats["queue_depth"]
+                                 + stats["in_flight"])
+
+
+# -- deterministic (fake clock, manual pump) ---------------------------------
+
+
+def test_mixed_shapes_match_dedicated_fits(fake_clock):
+    """Bucketed, padded, batched async traffic returns exactly what
+    per-dataset fits return."""
+    eng = _manual_engine(fake_clock)
+    shapes = [(8, 300), (7, 256), (8, 256), (10, 400)]
+    xs = [_gen(p, n, seed=i) for i, (p, n) in enumerate(shapes)]
+    tickets = [eng.submit(x) for x in xs]
+    assert eng.step() == 0  # nothing due yet, no bucket full
+    fake_clock.advance(1.0)
+    assert eng.step() > 0
+    for x, t in zip(xs, tickets):
+        f = t.result(0)
+        ref, b_ref = fit(x, CFG)
+        assert f.order == ref.order
+        np.testing.assert_allclose(f.b, np.asarray(b_ref), atol=1e-4)
+        np.testing.assert_allclose(f.noise_var, ref.noise_var, rtol=1e-3)
+    stats = eng.stats()
+    assert stats["delivered"] == len(xs)
+    # padding waste is accounted for every dispatched bucket
+    for b in stats["buckets"].values():
+        assert 0.0 <= b["padding_waste"] < 1.0
+    _assert_conserved(stats)
+
+
+def test_full_bucket_dispatches_without_waiting(fake_clock):
+    eng = _manual_engine(fake_clock, max_batch=2)
+    xs = [_gen(8, 256, seed=10 + i) for i in range(2)]
+    tickets = [eng.submit(x) for x in xs]
+    assert eng.step() == 1  # size-triggered: zero time elapsed
+    assert [t.result(0).order for t in tickets] == [_ref_order(x) for x in xs]
+
+
+def test_deadline_flush_and_queued_timeout(fake_clock):
+    eng = _manual_engine(fake_clock, flush_interval=10.0, deadline_margin=0.5)
+    urgent = eng.submit(_gen(8, 256, seed=20), deadline=1.0)
+    fake_clock.advance(0.5)  # due = deadline - margin, far before the 10s age
+    assert eng.step() == 1
+    assert urgent.result(0).order == _ref_order(_gen(8, 256, seed=20))
+    # a request nobody flushes in time fails typed, and is never dispatched
+    calls = []
+    eng2 = _manual_engine(
+        fake_clock, flush_interval=10.0,
+        dispatch=lambda bucket, ps: calls.append(bucket) or [])
+    late = eng2.submit(_gen(8, 256, seed=21), deadline=1.0)
+    fake_clock.advance(5.0)  # dispatcher stalled past the deadline
+    assert eng2.step() == 0 and calls == []
+    with pytest.raises(RequestTimeout):
+        late.result(0)
+    stats = eng2.stats()
+    assert stats["timeouts"] == 1
+    _assert_conserved(stats)
+
+
+def test_shed_backpressure_counts(fake_clock):
+    eng = _manual_engine(fake_clock, max_queue=2, overflow="shed")
+    xs = [_gen(8, 256, seed=30 + i) for i in range(3)]
+    eng.submit(xs[0])
+    eng.submit(xs[1])
+    with pytest.raises(QueueFull):
+        eng.submit(xs[2])
+    fake_clock.advance(1.0)
+    eng.step()
+    stats = eng.stats()
+    assert stats["shed"] == 1 and stats["delivered"] == 2
+    _assert_conserved(stats)
+
+
+def test_nan_result_is_retried_then_delivered(fake_clock):
+    """Fault injection at the dispatch seam: a NaN'd fit is rejected by the
+    engine's validator, retried, and the retry delivers the real result —
+    the caller never sees corrupt output."""
+    from repro.serve.lingam_engine import dispatch_bucket
+
+    calls = {"n": 0}
+
+    def nan_once(bucket, payloads):
+        out = dispatch_bucket(payloads, *bucket, CFG, SCFG)
+        calls["n"] += 1
+        if calls["n"] == 1:
+            out[0].b = np.full_like(out[0].b, np.nan)
+        return out
+
+    eng = _manual_engine(fake_clock, dispatch=nan_once, max_retries=1)
+    x = _gen(8, 256, seed=40)
+    t = eng.submit(x)
+    fake_clock.advance(1.0)
+    assert eng.step() == 2  # poisoned dispatch + the retry
+    f = t.result(0)
+    assert f.order == _ref_order(x) and np.isfinite(f.b).all()
+    stats = eng.stats()
+    assert stats["retries"] == 1 and stats["delivered"] == 1
+
+
+def test_nan_result_exhausts_retries_to_typed_error(fake_clock):
+    def always_nan(bucket, payloads):
+        from repro.serve.lingam_engine import dispatch_bucket
+
+        out = dispatch_bucket(payloads, *bucket, CFG, SCFG)
+        for f in out:
+            f.noise_var = np.full_like(f.noise_var, np.nan)
+        return out
+
+    eng = _manual_engine(fake_clock, dispatch=always_nan, max_retries=1)
+    t = eng.submit(_gen(8, 256, seed=41))
+    fake_clock.advance(1.0)
+    eng.step()
+    with pytest.raises(DispatchFailed, match="non-finite"):
+        t.result(0)
+    stats = eng.stats()
+    assert stats["failed"] == 1 and stats["delivered"] == 0
+    _assert_conserved(stats)
+
+
+def test_construction_contracts():
+    with pytest.raises(ValueError, match="ring"):
+        AsyncLingamEngine(ParaLiNGAMConfig(ring=True), start=False)
+    with pytest.raises(ValueError, match="max_batch"):
+        AsyncLingamEngine(CFG, LingamServeConfig(max_batch=4),
+                          batch_cfg=BatchingConfig(max_batch=8), start=False)
+    eng = AsyncLingamEngine(CFG, SCFG, start=False)
+    with pytest.raises(ValueError, match="p, n"):
+        eng.submit(np.zeros((2, 3, 4)))
+
+
+# -- concurrency (real clock, background thread) -----------------------------
+
+
+def test_four_concurrent_submitters_bit_identical():
+    """The acceptance bar: >= 4 submitter threads hammering the engine get
+    results bit-identical to dedicated fits, with nothing lost."""
+    datasets = [_gen(8, 128 + 32 * (i % 2), seed=50 + i) for i in range(6)]
+    refs = [_ref_order(x) for x in datasets]
+    failures = []
+    with AsyncLingamEngine(
+        CFG, SCFG,
+        batch_cfg=BatchingConfig(max_batch=4, max_queue=64,
+                                 flush_interval=0.005),
+    ) as eng:
+
+        def worker(w):
+            try:
+                for i, x in enumerate(datasets):
+                    f = eng.fit(x, timeout=300)
+                    if f.order != refs[i]:
+                        failures.append((w, i, f.order))
+            except Exception as e:  # noqa: BLE001 — surfaced via `failures`
+                failures.append((w, repr(e)))
+
+        threads = [threading.Thread(target=worker, args=(w,), daemon=True)
+                   for w in range(4)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(300)
+        assert all(not th.is_alive() for th in threads)
+        assert failures == []
+        stats = eng.stats()
+        assert stats["delivered"] == 4 * len(datasets)
+        assert stats["dispatches"] >= 1
+        _assert_conserved(stats)
+
+
+def test_seeded_concurrent_storm_conserves_and_matches():
+    """Randomized (seeded) ragged request storm: N threads, shuffled shapes,
+    mixed priorities, a shedding queue bound — every request either delivers
+    the dedicated-fit order or fails typed; the stats ledger balances."""
+    rng = np.random.default_rng(7)
+    pool = [_gen(6 + (i % 3), 100 + 28 * (i % 2), seed=80 + i)
+            for i in range(5)]
+    refs = [_ref_order(x) for x in pool]
+    plan = [list(rng.permutation(len(pool))) for _ in range(5)]
+    prio = rng.integers(0, 3, size=(5, len(pool)))  # pre-drawn: rng isn't
+    bad = []                                        # thread-safe
+    with AsyncLingamEngine(
+        CFG, SCFG,
+        batch_cfg=BatchingConfig(max_batch=4, max_queue=8,
+                                 flush_interval=0.003, overflow="block",
+                                 max_retries=1),
+    ) as eng:
+
+        def worker(w):
+            for k, i in enumerate(plan[w]):
+                try:
+                    f = eng.fit(pool[i], priority=int(prio[w, k]),
+                                timeout=300)
+                    if f.order != refs[i]:
+                        bad.append((w, i, "order mismatch"))
+                except QueueFull:
+                    pass  # typed shed is a legal outcome
+                except Exception as e:  # noqa: BLE001
+                    bad.append((w, i, repr(e)))
+
+        threads = [threading.Thread(target=worker, args=(w,), daemon=True)
+                   for w in range(5)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(300)
+        assert all(not th.is_alive() for th in threads)
+        assert bad == []
+        stats = eng.stats()
+        assert stats["delivered"] == 5 * len(pool) - stats["shed"]
+        _assert_conserved(stats)
+        # per-bucket ledgers add up too
+        total_bucket_requests = sum(
+            b["requests"] for b in stats["buckets"].values())
+        assert total_bucket_requests == stats["admitted"]
+
+
+# -- sharded (multidevice CI lane) -------------------------------------------
+
+
+@pytest.mark.requires_multidevice(8)
+def test_async_engine_sharded_over_data_axis():
+    """Async engine with every dispatch's dataset axis constrained over an
+    8-way "data" mesh, under concurrent submitters."""
+    from jax.sharding import Mesh
+    from repro.dist.sharding import make_rules
+
+    mesh = Mesh(np.array(jax.devices()).reshape(8, 1), ("data", "model"))
+    datasets = [_gen(8 + (i % 3), 200 + 40 * (i % 2), seed=90 + i)
+                for i in range(8)]
+    refs = [_ref_order(x) for x in datasets]
+    bad = []
+    with AsyncLingamEngine(
+        CFG, SCFG, rules=make_rules(CFG, mesh),
+        batch_cfg=BatchingConfig(max_batch=8, max_queue=64,
+                                 flush_interval=0.005),
+    ) as eng:
+
+        def worker():
+            for i, x in enumerate(datasets):
+                f = eng.fit(x, timeout=300)
+                if f.order != refs[i]:
+                    bad.append(i)
+
+        threads = [threading.Thread(target=worker, daemon=True)
+                   for _ in range(4)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(300)
+        assert all(not th.is_alive() for th in threads)
+        assert bad == []
+        assert eng.stats()["delivered"] == 4 * len(datasets)
+
+
+# -- the kernel-bypass stats thread (satellite) ------------------------------
+
+
+def test_kernel_bypass_surfaces_in_engine_stats(fake_clock):
+    """A padded dispatch under use_kernel=True silently falls back to the
+    jnp formulation (kernels/ops.py contract); the engine stats surface now
+    counts it instead of hiding it."""
+    from repro.core import paralingam
+
+    paralingam.reset_dispatch_stats()
+    kcfg = ParaLiNGAMConfig(min_bucket=8, fused=True, use_kernel=True)
+    eng = AsyncLingamEngine(kcfg, SCFG,
+                            batch_cfg=BatchingConfig(flush_interval=1.0),
+                            clock=fake_clock, start=False)
+    x = _gen(7, 200, seed=95)  # ragged -> padded -> n_valid set
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        t = eng.submit(x)
+        fake_clock.advance(1.0)
+        eng.step()
+        t.result(0)
+    assert [w for w in rec if issubclass(w.category, RuntimeWarning)]
+    assert eng.stats()["kernel_bypass"] == 1
+    paralingam.reset_dispatch_stats()

@@ -1,0 +1,359 @@
+"""Continuous-batching core: deterministic timing/failure-path coverage.
+
+Every timing path (size/age/deadline flush, queued-request timeout) runs
+under a ``FakeClock`` with manual ``step()`` pumping — zero wall-clock
+sleeps — and every failure path through the scripted ``ManualDispatcher``
+seam. The threaded-mode tests at the bottom use the real clock but only
+bounded waits (``result(timeout)``/``join``), never ``sleep``.
+"""
+
+import threading
+
+import pytest
+
+from repro.serve.batching import (
+    BatchingConfig,
+    BatchingCore,
+    DispatchFailed,
+    EngineClosed,
+    ManualDispatcher,
+    QueueFull,
+    RequestTimeout,
+    bucket_dim,
+    bucket_dims,
+    pad_to,
+)
+
+
+def _core(dispatcher, clock, **cfg):
+    defaults = dict(max_batch=4, max_queue=16, flush_interval=1.0)
+    defaults.update(cfg)
+    return BatchingCore(dispatcher, BatchingConfig(**defaults), clock=clock)
+
+
+def _conserved(snap):
+    """The delivery guarantee, as arithmetic: every submitted request is
+    accounted for exactly once."""
+    assert snap["submitted"] == (snap["admitted"] + snap["shed"]
+                                 + snap["rejected"])
+    assert snap["admitted"] == (snap["delivered"] + snap["timeouts"]
+                                + snap["failed"] + snap["queue_depth"]
+                                + snap["in_flight"])
+
+
+# -- shared bucket-grid helpers ----------------------------------------------
+
+
+def test_bucket_grid_helpers():
+    assert bucket_dim(5) == 8 and bucket_dim(3, floor=16) == 16
+    assert bucket_dims((7, 200), (8, 64)) == (8, 256)
+    import numpy as np
+
+    x = np.arange(6, dtype=np.float32).reshape(2, 3)
+    out = pad_to(x, (4, 8))
+    assert out.shape == (4, 8) and out.dtype == np.float32
+    assert out.sum() == x.sum() and (out[:2, :3] == x).all()
+
+
+# -- flush triggers ----------------------------------------------------------
+
+
+def test_size_triggered_flush_ignores_age(fake_clock, manual_dispatcher):
+    core = _core(manual_dispatcher, fake_clock, max_batch=3)
+    tickets = [core.submit(i, "b") for i in range(3)]
+    assert core.step() == 1  # full bucket flushes with zero elapsed time
+    assert [t.result(0) for t in tickets] == [0, 1, 2]
+    assert manual_dispatcher.calls == [("b", [0, 1, 2])]
+
+
+def test_age_triggered_flush_waits_for_interval(fake_clock, manual_dispatcher):
+    core = _core(manual_dispatcher, fake_clock, flush_interval=2.0)
+    t = core.submit(7, "b")
+    assert core.step() == 0 and not t.done()
+    fake_clock.advance(1.9)
+    assert core.step() == 0  # still inside the flush window
+    fake_clock.advance(0.2)
+    assert core.step() == 1 and t.result(0) == 7
+
+
+def test_deadline_pulls_flush_before_interval(fake_clock, manual_dispatcher):
+    core = _core(manual_dispatcher, fake_clock, flush_interval=10.0,
+                 deadline_margin=0.5)
+    t = core.submit(1, "b", deadline=2.0)  # due at 2.0 - 0.5 = 1.5
+    fake_clock.advance(1.0)
+    assert core.step() == 0
+    fake_clock.advance(0.6)
+    assert core.step() == 1 and t.result(0) == 1  # well before enqueue+10
+
+
+def test_oversize_bucket_splits_into_chunks(fake_clock, manual_dispatcher):
+    core = _core(manual_dispatcher, fake_clock, max_batch=2)
+    tickets = [core.submit(i, "b") for i in range(5)]
+    fake_clock.advance(1.0)
+    assert core.step() == 3  # 2 + 2 + 1
+    assert [len(p) for _, p in manual_dispatcher.calls] == [2, 2, 1]
+    assert all(t.done() for t in tickets)
+
+
+def test_priority_orders_within_bucket(fake_clock, manual_dispatcher):
+    core = _core(manual_dispatcher, fake_clock, max_batch=2)
+    core.submit("lo", "b", priority=0)
+    core.submit("hi", "b", priority=5)
+    core.submit("mid", "b", priority=1)
+    fake_clock.advance(1.0)
+    core.step()
+    # highest priority first; FIFO (seq) breaks ties across batches
+    assert [p for _, p in manual_dispatcher.calls] == [["hi", "mid"], ["lo"]]
+
+
+def test_buckets_flush_independently(fake_clock, manual_dispatcher):
+    core = _core(manual_dispatcher, fake_clock, flush_interval=1.0)
+    core.submit(1, "a")
+    fake_clock.advance(0.6)
+    core.submit(2, "b")
+    fake_clock.advance(0.5)  # a is due (1.1s old), b is not (0.5s old)
+    assert core.step() == 1
+    assert manual_dispatcher.calls == [("a", [1])]
+    fake_clock.advance(0.5)
+    assert core.step() == 1
+    assert manual_dispatcher.calls[1] == ("b", [2])
+
+
+# -- deadlines / timeouts ----------------------------------------------------
+
+
+def test_queued_request_times_out_with_typed_error(fake_clock, manual_dispatcher):
+    core = _core(manual_dispatcher, fake_clock, flush_interval=10.0,
+                 max_batch=100)
+    t = core.submit(1, "b", deadline=1.0)
+    fake_clock.advance(5.0)  # dispatcher was busy elsewhere; deadline passed
+    assert core.step() == 0  # expired, not dispatched
+    assert manual_dispatcher.calls == []
+    assert isinstance(t.error(), RequestTimeout)
+    with pytest.raises(RequestTimeout):
+        t.result(0)
+    snap = core.snapshot()
+    assert snap["timeouts"] == 1 and snap["delivered"] == 0
+    _conserved(snap)
+
+
+def test_timeout_only_sheds_the_late_request(fake_clock, manual_dispatcher):
+    core = _core(manual_dispatcher, fake_clock, flush_interval=3.0)
+    late = core.submit(1, "b", deadline=1.0)
+    ok = core.submit(2, "b")
+    fake_clock.advance(3.1)
+    assert core.step() == 1
+    assert isinstance(late.error(), RequestTimeout)
+    assert ok.result(0) == 2
+    assert manual_dispatcher.calls == [("b", [2])]
+
+
+# -- backpressure ------------------------------------------------------------
+
+
+def test_shed_overflow_raises_and_counts(fake_clock, manual_dispatcher):
+    core = _core(manual_dispatcher, fake_clock, max_queue=2, overflow="shed")
+    core.submit(1, "b")
+    core.submit(2, "b")
+    with pytest.raises(QueueFull):
+        core.submit(3, "b")
+    snap = core.snapshot()
+    assert snap["shed"] == 1 and snap["submitted"] == 3 and snap["admitted"] == 2
+    assert snap["buckets"]["b"]["shed"] == 1
+    _conserved(snap)
+
+
+def test_per_submit_overflow_override(fake_clock, manual_dispatcher):
+    core = _core(manual_dispatcher, fake_clock, max_queue=1, overflow="block")
+    core.submit(1, "b")
+    with pytest.raises(QueueFull):
+        core.submit(2, "b", overflow="shed")
+    with pytest.raises(ValueError, match="overflow"):
+        core.submit(3, "b", overflow="drop-table")
+
+
+def test_block_overflow_waits_for_space(fake_clock, manual_dispatcher):
+    """A blocked submitter parks on the space condition (no spinning, no
+    sleeps) and resumes the moment a dispatch drains the queue."""
+    core = _core(manual_dispatcher, fake_clock, max_queue=2, max_batch=2,
+                 overflow="block")
+    core.submit(1, "b")
+    core.submit(2, "b")
+    unblocked = threading.Event()
+    tickets = []
+
+    def submitter():
+        tickets.append(core.submit(3, "b"))
+        unblocked.set()
+
+    th = threading.Thread(target=submitter, daemon=True)
+    th.start()
+    assert not unblocked.wait(0.05)  # genuinely blocked on the full queue
+    assert core.snapshot()["blocked_submits"] == 1
+    assert core.step() == 1  # full bucket (size trigger) frees 2 slots
+    assert unblocked.wait(5)
+    th.join(5)
+    fake_clock.advance(1.0)
+    core.step()
+    assert tickets[0].result(0) == 3
+    _conserved(core.snapshot())
+
+
+# -- fault injection: the dispatch seam --------------------------------------
+
+
+def test_failed_dispatch_retries_to_success(fake_clock, manual_dispatcher):
+    manual_dispatcher.fail_call(1, exc=RuntimeError("transient"))
+    core = _core(manual_dispatcher, fake_clock, max_batch=2, max_retries=1)
+    t1, t2 = core.submit(1, "b"), core.submit(2, "b")
+    assert core.step() == 2  # failing dispatch + the retry, one pass
+    assert t1.result(0) == 1 and t2.result(0) == 2
+    snap = core.snapshot()
+    assert snap["retries"] == 2 and snap["dispatch_failures"] == 1
+    assert snap["delivered"] == 2 and snap["failed"] == 0
+    _conserved(snap)
+
+
+def test_retries_exhausted_is_typed_never_lost(fake_clock, manual_dispatcher):
+    manual_dispatcher.fail_call(1, exc=RuntimeError("b1"))
+    manual_dispatcher.fail_call(2, exc=RuntimeError("b2"))
+    core = _core(manual_dispatcher, fake_clock, max_retries=1)
+    t = core.submit(1, "b")
+    fake_clock.advance(1.0)
+    core.step()
+    err = t.error()
+    assert isinstance(err, DispatchFailed)
+    assert isinstance(err.__cause__, RuntimeError)
+    assert str(err.__cause__) == "b2"  # the *last* underlying failure
+    snap = core.snapshot()
+    assert snap["failed"] == 1 and snap["retries"] == 1
+    _conserved(snap)
+
+
+def test_partial_batch_is_a_failure_then_retried(fake_clock, manual_dispatcher):
+    manual_dispatcher.fail_call(1, results=lambda ps: ps[:1])  # drops one row
+    core = _core(manual_dispatcher, fake_clock, max_batch=2, max_retries=1)
+    t1, t2 = core.submit(1, "b"), core.submit(2, "b")
+    core.step()
+    assert t1.result(0) == 1 and t2.result(0) == 2
+    assert core.snapshot()["dispatch_failures"] == 1
+
+
+def test_per_request_exception_result_retries_only_that_request(
+        fake_clock, manual_dispatcher):
+    """The NaN-result path: the seam returns an Exception entry for one
+    request; only that request re-queues, its batch-mates deliver."""
+    manual_dispatcher.fail_call(
+        1, results=lambda ps: [ps[0], DispatchFailed("nan result")])
+    core = _core(manual_dispatcher, fake_clock, max_batch=2, max_retries=1)
+    t1, t2 = core.submit(1, "b"), core.submit(2, "b")
+    assert core.step() == 2
+    assert t1.result(0) == 1 and t2.result(0) == 2
+    assert [p for _, p in manual_dispatcher.calls] == [[1, 2], [2]]
+    snap = core.snapshot()
+    assert snap["retries"] == 1 and snap["dispatch_failures"] == 0
+
+
+def test_requeue_may_exceed_admission_bound(fake_clock, manual_dispatcher):
+    """The queue bound applies at admission only: a failing dispatch re-queues
+    its requests even when the queue is already full — admitted work is never
+    shed."""
+    manual_dispatcher.fail_call(1, exc=RuntimeError("boom"))
+    core = _core(manual_dispatcher, fake_clock, max_queue=2, max_batch=2,
+                 overflow="shed", max_retries=1)
+    t1, t2 = core.submit(1, "b"), core.submit(2, "b")
+    core.step()
+    assert t1.result(0) == 1 and t2.result(0) == 2
+
+
+# -- lifecycle ---------------------------------------------------------------
+
+
+def test_close_drain_flushes_unaged_requests(fake_clock, manual_dispatcher):
+    core = _core(manual_dispatcher, fake_clock, flush_interval=100.0)
+    t = core.submit(1, "b")
+    core.close(drain=True)  # no thread: close steps the queue dry itself
+    assert t.result(0) == 1
+
+
+def test_close_without_drain_fails_queued_typed(fake_clock, manual_dispatcher):
+    core = _core(manual_dispatcher, fake_clock)
+    t = core.submit(1, "b")
+    core.close(drain=False)
+    assert isinstance(t.error(), EngineClosed)
+    with pytest.raises(EngineClosed):
+        core.submit(2, "b")
+    _conserved(core.snapshot())
+
+
+def test_stats_surface_shape(fake_clock, manual_dispatcher):
+    core = _core(manual_dispatcher, fake_clock, max_batch=4)
+    for i in range(3):
+        core.submit(i, "b")
+        fake_clock.advance(0.25)
+    fake_clock.advance(1.0)
+    core.step()
+    core.note_bucket("b", pad_cells=10, total_cells=40)
+    snap = core.snapshot()
+    b = snap["buckets"]["b"]
+    assert b["occupancy"] == pytest.approx(3 / 4)
+    assert b["avg_batch"] == pytest.approx(3.0)
+    assert b["padding_waste"] == pytest.approx(0.25)
+    # flush at t=1.75; the requests (enqueued at 0/0.25/0.5) waited
+    # 1.75/1.5/1.25 engine-seconds
+    assert b["p50_latency"] == pytest.approx(1.5)
+    assert b["p95_latency"] == pytest.approx(1.75)
+    assert snap["queue_depth"] == 0 and snap["in_flight"] == 0
+    assert snap["queue_peak"] == 3
+
+
+# -- threaded mode (real clock, bounded waits only) --------------------------
+
+
+def test_background_thread_serves_and_drains():
+    disp = ManualDispatcher(fn=lambda p: p * 10)
+    core = BatchingCore(
+        disp, BatchingConfig(max_batch=4, max_queue=32, flush_interval=0.002)
+    ).start()
+    tickets = [core.submit(i, "b") for i in range(10)]
+    assert [t.result(10) for t in tickets] == [i * 10 for i in range(10)]
+    assert core.join(10)
+    core.close(timeout=10)
+    snap = core.snapshot()
+    assert snap["delivered"] == 10
+    _conserved(snap)
+
+
+def test_background_thread_retries_injected_failure():
+    disp = ManualDispatcher()
+    disp.fail_call(1, exc=RuntimeError("transient"))
+    core = BatchingCore(
+        disp, BatchingConfig(max_batch=8, max_queue=32, flush_interval=0.002,
+                             max_retries=1)
+    ).start()
+    tickets = [core.submit(i, "b") for i in range(4)]
+    assert [t.result(10) for t in tickets] == list(range(4))
+    core.close(timeout=10)
+    assert core.snapshot()["dispatch_failures"] == 1
+
+
+def test_close_unblocks_blocked_submitter():
+    core = BatchingCore(
+        ManualDispatcher(),
+        BatchingConfig(max_batch=2, max_queue=1, flush_interval=100.0,
+                       overflow="block"),
+    )  # no thread, nothing will ever drain the queue
+    core.submit(1, "b")
+    errs = []
+
+    def submitter():
+        try:
+            core.submit(2, "b")
+        except EngineClosed as e:
+            errs.append(e)
+
+    th = threading.Thread(target=submitter, daemon=True)
+    th.start()
+    core.close(drain=False)
+    th.join(5)
+    assert not th.is_alive() and len(errs) == 1

@@ -210,3 +210,40 @@ def test_fit_batch_sharded_padded_ragged():
         p = x.shape[0]
         ri, _ = fit(x, cfg)
         assert list(np.asarray(res.orders[i])[:p]) == ri.order
+
+
+# ---------------------------------------------------------------------------
+# kernel-bypass accounting: the n_valid/mask contract silently drops the
+# Pallas route (kernels/ops.py reduces over the static tile width) — that
+# bypass must be visible, not silent
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_bypass_warns_once_and_counts():
+    from repro.core import paralingam
+
+    paralingam.reset_dispatch_stats()
+    cfg = ParaLiNGAMConfig(min_bucket=8, fused=True, use_kernel=True)
+    xs = np.zeros((2, 8, 128))
+    nv = np.full((2,), 100, np.int32)
+    for i in range(2):
+        xs[i, :, :100] = _gen(8, 100, seed=90 + i)
+    import warnings
+
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        fit_batch(xs, cfg, n_valid=nv)
+        fit_batch(xs, cfg, n_valid=nv)
+    warns = [w for w in rec if issubclass(w.category, RuntimeWarning)
+             and "use_kernel" in str(w.message)]
+    assert len(warns) == 1  # warn once, not per dispatch
+    assert paralingam.dispatch_stats["kernel_bypass"] == 2  # count every one
+
+    # the unpadded route keeps the kernel: no bypass, no warning
+    with warnings.catch_warnings(record=True) as rec2:
+        warnings.simplefilter("always")
+        fit(np.asarray(xs[0]), cfg)
+    assert not [w for w in rec2 if issubclass(w.category, RuntimeWarning)
+                and "use_kernel" in str(w.message)]
+    assert paralingam.dispatch_stats["kernel_bypass"] == 2
+    paralingam.reset_dispatch_stats()

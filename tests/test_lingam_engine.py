@@ -153,6 +153,75 @@ def test_failed_dispatch_loses_no_work(monkeypatch, fail_call, pending_after):
         assert out[i].order == fit(x, ParaLiNGAMConfig(min_bucket=8))[0].order
 
 
+def test_failed_dispatch_loses_no_work_concurrent():
+    """The async extension of the re-queue guarantee: with 4 submitter
+    threads racing and the dispatch seam failing transiently (k-th dispatch
+    raises), every request is either retried to a successful delivery or
+    failed with a typed error — never dropped, never hung."""
+    import threading
+
+    import repro.serve.lingam_engine as mod
+    from repro.serve.async_engine import AsyncLingamEngine
+    from repro.serve.batching import BatchingConfig, ServeError
+
+    cfg = ParaLiNGAMConfig(min_bucket=8)
+    datasets = [_gen(8, 128 + 32 * (i % 2), seed=80 + i) for i in range(5)]
+    refs = [fit(x, cfg)[0].order for x in datasets]
+
+    calls = {"n": 0}
+    lock = threading.Lock()
+
+    def flaky(bucket, payloads):
+        with lock:
+            calls["n"] += 1
+            k = calls["n"]
+        if k in (1, 3):  # transient: retry budget covers it
+            raise RuntimeError(f"transient dispatch failure #{k}")
+        return mod.dispatch_bucket(payloads, *bucket, cfg,
+                                   eng.serve_cfg)
+
+    eng = AsyncLingamEngine(
+        cfg, LingamServeConfig(min_p_bucket=8, min_n_bucket=64),
+        batch_cfg=BatchingConfig(max_batch=4, max_queue=64,
+                                 flush_interval=0.005, max_retries=2),
+        dispatch=flaky,
+    )
+    outcomes = []  # (worker, index, "ok" | error) — appended under the GIL
+
+    def worker(w):
+        for i, x in enumerate(datasets):
+            try:
+                f = eng.fit(x, timeout=300)
+                outcomes.append((w, i, "ok" if f.order == refs[i] else "bad"))
+            except ServeError as e:
+                outcomes.append((w, i, e))
+            except Exception as e:  # noqa: BLE001
+                outcomes.append((w, i, e))
+
+    threads = [threading.Thread(target=worker, args=(w,), daemon=True)
+               for w in range(4)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(300)
+    assert all(not th.is_alive() for th in threads)
+    eng.close()
+
+    # every request reached a terminal outcome: delivered bit-identical or a
+    # typed ServeError — nothing lost, nothing hung, nothing wrong-valued
+    assert len(outcomes) == 4 * len(datasets)
+    assert all(o == "ok" or isinstance(o, ServeError)
+               for _, _, o in outcomes)
+    oks = sum(1 for _, _, o in outcomes if o == "ok")
+    stats = eng.stats()
+    assert stats["dispatch_failures"] >= 1  # the injected faults really fired
+    assert stats["retries"] >= 1
+    assert stats["delivered"] == oks
+    assert stats["delivered"] + stats["failed"] + stats["timeouts"] \
+        == stats["admitted"]
+    assert stats["queue_depth"] == 0 and stats["in_flight"] == 0
+
+
 @pytest.mark.requires_multidevice(8)
 def test_engine_sharded_over_data_axis():
     """The engine's multidevice configuration: every dispatch constrains its

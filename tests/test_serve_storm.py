@@ -1,0 +1,194 @@
+"""Hypothesis-driven randomized request storms against the async serving
+stack (requires the optional ``hypothesis`` dev dependency; the CI ``serve``
+lane runs this, local runs without hypothesis skip it via conftest).
+
+Two layers:
+
+- core storms: random ragged traffic through a bare ``BatchingCore`` with an
+  identity dispatch — pure scheduling, no jax — asserting the conservation
+  ledger (every submitted request terminates in exactly one bucket of the
+  stats) under arbitrary bucket mixes, priorities and queue bounds;
+- engine storms: N submitter threads pushing shuffled dataset mixes through
+  ``AsyncLingamEngine``, asserting every delivered result is bit-identical
+  to a dedicated ``fit`` and the ledger still balances.
+
+The dataset pool is tiny and fixed (two pow-2 buckets) so jit executables are
+compiled once and every hypothesis example is a cache hit.
+"""
+
+import functools
+import threading
+
+import numpy as np
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import sem
+from repro.core.paralingam import ParaLiNGAMConfig, fit
+from repro.serve.async_engine import AsyncLingamEngine
+from repro.serve.batching import (
+    BatchingConfig,
+    BatchingCore,
+    QueueFull,
+    ServeError,
+)
+from repro.serve.lingam_engine import LingamServeConfig
+from repro.utils.clock import FakeClock
+
+CFG = ParaLiNGAMConfig(min_bucket=8)
+SCFG = LingamServeConfig(min_p_bucket=8, min_n_bucket=64)
+SHAPES = [(6, 100), (7, 120), (8, 90), (9, 140)]  # 2 buckets: (8,128),(16,256)
+
+STORM_SETTINGS = settings(
+    max_examples=5, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+
+@functools.lru_cache(maxsize=None)
+def _dataset(i: int) -> np.ndarray:
+    p, n = SHAPES[i]
+    return sem.generate(sem.SemSpec(p=p, n=n, seed=100 + i))["x"]
+
+
+@functools.lru_cache(maxsize=None)
+def _ref_order(i: int) -> tuple:
+    return tuple(fit(_dataset(i), CFG)[0].order)
+
+
+def _assert_conserved(stats):
+    assert stats["submitted"] == (stats["admitted"] + stats["shed"]
+                                  + stats["rejected"])
+    assert stats["admitted"] == (stats["delivered"] + stats["timeouts"]
+                                 + stats["failed"] + stats["queue_depth"]
+                                 + stats["in_flight"])
+
+
+# ---------------------------------------------------------------------------
+# core storms: scheduling only, FakeClock, no threads, no jax
+# ---------------------------------------------------------------------------
+
+
+@STORM_SETTINGS
+@given(
+    reqs=st.lists(
+        st.tuples(st.integers(0, 2),        # bucket id
+                  st.integers(-2, 2),       # priority
+                  st.one_of(st.none(),      # deadline (relative)
+                            st.floats(0.1, 5.0))),
+        min_size=1, max_size=40),
+    max_batch=st.integers(1, 5),
+    max_queue=st.integers(1, 50),
+    advance=st.floats(0.05, 2.0),
+)
+def test_core_storm_ledger_balances(reqs, max_batch, max_queue, advance):
+    """Arbitrary request mixes through the bare core: pump until drained;
+    every request terminates (delivered / shed / timed out) and the global +
+    per-bucket ledgers balance exactly."""
+    clk = FakeClock()
+    core = BatchingCore(
+        lambda bucket, payloads: list(payloads),
+        BatchingConfig(max_batch=max_batch, max_queue=max_queue,
+                       flush_interval=1.0, overflow="shed"),
+        clock=clk,
+    )
+    tickets, n_shed = [], 0
+    for bucket_id, prio, deadline in reqs:
+        try:
+            tickets.append(core.submit(("payload", len(tickets)),
+                                       ("b", bucket_id), priority=prio,
+                                       deadline=deadline))
+        except QueueFull:
+            n_shed += 1
+        clk.advance(advance)
+        core.step()
+    # drain: step until nothing moves and nothing is queued
+    for _ in range(200):
+        if core.pending == 0:
+            break
+        clk.advance(1.0)
+        core.step()
+    assert core.pending == 0
+
+    snap = core.snapshot()
+    assert snap["shed"] == n_shed
+    n_done = sum(1 for t in tickets if t.done())
+    assert n_done == len(tickets)  # every admitted request terminated
+    n_delivered = sum(1 for t in tickets if t.error() is None)
+    assert snap["delivered"] == n_delivered
+    assert snap["timeouts"] == len(tickets) - n_delivered
+    _assert_conserved(snap)
+    per_bucket = snap["buckets"].values()
+    assert sum(b["requests"] for b in per_bucket) == snap["admitted"]
+    assert sum(b["delivered"] for b in per_bucket) == snap["delivered"]
+    assert sum(b["timeouts"] for b in per_bucket) == snap["timeouts"]
+    for t in tickets:  # delivered payloads come back unswapped
+        if t.error() is None:
+            assert t.result(0)[0] == "payload"
+
+
+# ---------------------------------------------------------------------------
+# engine storms: real threads, real dispatches, bit-identical results
+# ---------------------------------------------------------------------------
+
+
+@STORM_SETTINGS
+@given(
+    plan=st.lists(  # one shuffled request list per submitter thread
+        st.lists(st.integers(0, len(SHAPES) - 1), min_size=1, max_size=6),
+        min_size=1, max_size=4),
+    priorities=st.lists(st.integers(0, 3), min_size=24, max_size=24),
+    max_queue=st.sampled_from([3, 64]),
+    overflow=st.sampled_from(["block", "shed"]),
+)
+def test_engine_storm_bit_identical_and_conserved(plan, priorities, max_queue,
+                                                  overflow):
+    """Randomized ragged storms: arbitrary per-thread dataset mixes, arrival
+    interleaving decided by the scheduler, both backpressure policies. Every
+    delivered result equals the dedicated fit exactly; shed requests raise
+    typed ``QueueFull``; the ledger balances afterwards."""
+    outcomes = []  # (tag, dataset index, value) — list.append is atomic
+
+    with AsyncLingamEngine(
+        CFG, SCFG,
+        batch_cfg=BatchingConfig(max_batch=4, max_queue=max_queue,
+                                 flush_interval=0.003, overflow=overflow,
+                                 max_retries=1),
+    ) as eng:
+
+        def worker(w):
+            for k, i in enumerate(plan[w]):
+                try:
+                    f = eng.fit(_dataset(i),
+                                priority=priorities[(7 * w + k) % 24],
+                                timeout=300)
+                    outcomes.append(("ok", i, tuple(f.order)))
+                except QueueFull:
+                    outcomes.append(("shed", i, None))
+                except ServeError as e:  # never expected here — surfaced below
+                    outcomes.append(("err", i, e))
+
+        threads = [threading.Thread(target=worker, args=(w,), daemon=True)
+                   for w in range(len(plan))]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(300)
+        assert all(not th.is_alive() for th in threads)
+        stats = eng.stats()
+
+    total = sum(len(p) for p in plan)
+    assert len(outcomes) == total  # nothing lost, nothing hung
+    assert not [o for o in outcomes if o[0] == "err"]
+    for tag, i, val in outcomes:
+        if tag == "ok":
+            assert val == _ref_order(i)  # bit-identical to a dedicated fit
+    n_ok = sum(1 for o in outcomes if o[0] == "ok")
+    n_shed = sum(1 for o in outcomes if o[0] == "shed")
+    if overflow == "block":
+        assert n_shed == 0
+    assert stats["delivered"] == n_ok
+    assert stats["shed"] == n_shed
+    assert stats["queue_depth"] == 0 and stats["in_flight"] == 0
+    _assert_conserved(stats)
+    assert sum(b["requests"] for b in stats["buckets"].values()) \
+        == stats["admitted"]
