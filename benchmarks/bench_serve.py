@@ -14,11 +14,25 @@ flushes ran), padding waste (pow-2 cells that carried no data), and
 delivered fraction (must be 1.0 — the engine sheds or fails loudly, never
 silently). The deadline-vs-occupancy model behind the ``flush_interval``
 choice is in EXPERIMENTS.md "Continuous batching".
+
+Two fault-tolerance lanes ride along (EXPERIMENTS.md "Failure containment"):
+
+- ``serve_replicas_r{1,2,4}`` — the same sustained storm through a
+  replicated dispatcher pool. On one device all replicas share the
+  accelerator, so the ratio prices the *coordination overhead* of the
+  failover machinery (watchdog arming, health bookkeeping), not a speedup:
+  the lane exists so that overhead is a guarded trend, never silent drift.
+- ``serve_prewarm_first_request`` — first-request latency on a cold engine
+  vs one whose bucket grid was AOT pre-warmed (``engine.prewarm``). The
+  ``cold_vs_prewarmed`` ratio is the compile stall a prewarmed deployment
+  hides from its first caller; the two lanes use disjoint bucket shapes so
+  neither inherits the other's jit cache.
 """
 
 from __future__ import annotations
 
 import threading
+import time
 
 from benchmarks.common import row, time_fns_interleaved
 from repro.core import sem
@@ -38,7 +52,7 @@ def _mix(p0, n0, count, seed0=0):
     ]
 
 
-def _measure(name, cfg, reqs, threads, max_batch, **config):
+def _measure(name, cfg, reqs, threads, max_batch, replicas=1, **config):
     """One sustained cell: pipelined submitters through a fresh engine vs
     the serial dedicated-fit loop over the identical request stream."""
     eng = AsyncLingamEngine(
@@ -49,6 +63,7 @@ def _measure(name, cfg, reqs, threads, max_batch, **config):
             max_queue=4 * threads * len(reqs),
             flush_interval=0.002,
         ),
+        replicas=replicas,
     )
 
     def sustained():
@@ -95,7 +110,7 @@ def _measure(name, cfg, reqs, threads, max_batch, **config):
         f"padding_waste={pad / cells if cells else 0.0:.2f};"
         f"delivered_frac={stats['delivered'] / max(stats['admitted'], 1):.3f};"
         f"dispatches={stats['dispatches']};buckets={len(stats['buckets'])}",
-        threads=threads, per_thread=len(reqs), **config,
+        threads=threads, per_thread=len(reqs), replicas=replicas, **config,
     )
 
 
@@ -120,3 +135,55 @@ def run(smoke: bool = False):
     p0, n0 = (10, 96) if smoke else (24, 200)
     _measure(f"serve_mixed_t{threads}_r{per_thread}", cfg,
              _mix(p0, n0, per_thread), threads, max(8, threads), p0=p0, n0=n0)
+
+    # Replica-count sweep: the fault-tolerance machinery priced on the same
+    # sustained storm. One shared device => the guarded ratio tracks pool
+    # overhead, not parallel speedup.
+    for r in (1, 2, 4):
+        _measure(f"serve_replicas_r{r}_t{threads}_p{p_b}_n{n_b}", cfg, exact,
+                 threads, max(8, threads), replicas=r, p=p_b, n=n_b)
+
+    _prewarm_lane(cfg, smoke)
+
+
+def _first_request_us(cfg, x, prewarm: bool) -> tuple[float, float]:
+    """Wall time (µs) from submit to delivery for the *first* request a
+    fresh engine serves on a never-before-seen bucket shape, plus the
+    prewarm compile cost (0 when prewarm is off)."""
+    eng = AsyncLingamEngine(
+        cfg,
+        LingamServeConfig(min_p_bucket=8, min_n_bucket=64),
+        batch_cfg=BatchingConfig(max_batch=1, max_queue=8,
+                                 flush_interval=0.0),
+    )
+    compile_s = 0.0
+    if prewarm:
+        eng.prewarm([x.shape])
+        compile_s = eng.prewarm_stats["compile_seconds"]
+    t0 = time.perf_counter()
+    eng.fit(x, timeout=600)
+    dt = time.perf_counter() - t0
+    eng.close()
+    return dt * 1e6, compile_s
+
+
+def _prewarm_lane(cfg, smoke: bool):
+    """Cold first-request vs AOT-prewarmed first-request. The two lanes use
+    *disjoint* bucket shapes — (8, 128) cold, (8, 512) prewarmed — so the
+    cold lane genuinely pays its jit compile and the prewarmed lane cannot
+    ride a jit cache entry populated earlier in the process (the prewarmed
+    engine serves through the stored AOT executable either way)."""
+    from repro.core import sem as _sem
+
+    cold_x = _sem.generate(_sem.SemSpec(p=8, n=96, seed=700))["x"]
+    warm_x = _sem.generate(_sem.SemSpec(p=8, n=400, seed=701))["x"]
+    cold_us, _ = _first_request_us(cfg, cold_x, prewarm=False)
+    warm_us, compile_s = _first_request_us(cfg, warm_x, prewarm=True)
+    row(
+        "serve_prewarm_first_request", warm_us,
+        f"cold_vs_prewarmed={cold_us / warm_us:.2f}x;"
+        f"cold_first_ms={cold_us / 1e3:.1f};"
+        f"prewarmed_first_ms={warm_us / 1e3:.1f};"
+        f"prewarm_compile_s={compile_s:.2f}",
+        cold_bucket="8x128", warm_bucket="8x512",
+    )

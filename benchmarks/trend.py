@@ -23,7 +23,13 @@ run's artifacts) against committed baselines and fails on a >``--factor``
     (``metrics.vs_serial_loop``), the PR-5 dispatch-amortization win;
   * ``serve_`` — async engine sustained throughput under concurrent
     submitters vs the serial dedicated-fit loop
-    (``metrics.vs_serial_loop``), the PR-6 continuous-batching win.
+    (``metrics.vs_serial_loop``), the PR-6 continuous-batching win. The
+    ``serve_replicas_r{1,2,4}`` rows run the same storm through the
+    replicated dispatcher pool, so pool-coordination overhead is guarded
+    by the same metric;
+  * ``serve_prewarm`` — cold first-request latency vs an AOT-prewarmed
+    engine's first request (``metrics.cold_vs_prewarmed``), the PR-7
+    compile-stall-hiding win.
 
 Ratios are compared rather than raw microseconds so the gate survives
 machine differences between the baseline recorder and the CI runner. Shape
@@ -68,6 +74,7 @@ GUARDED = {
     "ring_": "match",
     "batch_": "vs_serial_loop",
     "serve_": "vs_serial_loop",
+    "serve_prewarm": "cold_vs_prewarmed",
 }
 
 

@@ -4,8 +4,10 @@ from repro.core import adjacency, direct_lingam, entropy, pairwise, pruning, sem
 from repro.core.covariance import cov_matrix, normalize, update_cov, update_data
 from repro.core.paralingam import (
     BatchFitResult,
+    CompiledFitBatch,
     ParaLiNGAMConfig,
     ParaLiNGAMResult,
+    aot_fit_batch,
     causal_order,
     causal_order_batch,
     causal_order_scan,
@@ -13,4 +15,10 @@ from repro.core.paralingam import (
     find_root_threshold,
     fit,
     fit_batch,
+)
+from repro.core.validate import (
+    DatasetDiagnostics,
+    DatasetError,
+    require_valid,
+    validate_dataset,
 )

@@ -41,6 +41,8 @@ as the dense path by the paper's Section 3.2 correctness argument.
 
 from __future__ import annotations
 
+import threading
+import time
 import warnings
 from dataclasses import dataclass, field
 from functools import lru_cache, partial
@@ -105,6 +107,8 @@ class ParaLiNGAMResult:
     per_iteration: list[dict] = field(default_factory=list)
     converged: bool = True  # False iff any threshold loop hit max_rounds
     noise_var: np.ndarray | None = None  # Omega diagonal (set by ``fit``)
+    diagnostics: object | None = None  # core.validate.DatasetDiagnostics
+    #   when the fit ran with validate=True (admission guardrail record)
 
     @property
     def saving_vs_serial(self) -> float:
@@ -695,13 +699,26 @@ def _pipeline_fn(batched: bool, rules, **static):
 # Pallas kernels reduce over their static tile width — see kernels/ops.py).
 dispatch_stats: dict = {"kernel_bypass": 0}
 _kernel_bypass_warned = False
+# N submitter + dispatcher-replica threads all funnel through
+# _note_kernel_bypass; the += and the warn-once latch race without this
+# (lost increments under the GIL's bytecode-level interleaving).
+_dispatch_stats_mu = threading.Lock()
 
 
 def reset_dispatch_stats() -> None:
-    """Zero ``dispatch_stats`` and re-arm the warn-once latch (tests)."""
+    """Zero ``dispatch_stats`` and re-arm the warn-once latch (tests).
+    Thread-safe against concurrent dispatches."""
     global _kernel_bypass_warned
-    dispatch_stats["kernel_bypass"] = 0
-    _kernel_bypass_warned = False
+    with _dispatch_stats_mu:
+        dispatch_stats["kernel_bypass"] = 0
+        _kernel_bypass_warned = False
+
+
+def dispatch_stats_snapshot() -> dict:
+    """Consistent point-in-time copy of ``dispatch_stats`` (the live dict
+    may be mid-update in another thread)."""
+    with _dispatch_stats_mu:
+        return dict(dispatch_stats)
 
 
 def _note_kernel_bypass(cfg: ParaLiNGAMConfig, n_valid) -> None:
@@ -714,9 +731,11 @@ def _note_kernel_bypass(cfg: ParaLiNGAMConfig, n_valid) -> None:
     global _kernel_bypass_warned
     if not cfg.use_kernel or n_valid is None:
         return
-    dispatch_stats["kernel_bypass"] += 1
-    if not _kernel_bypass_warned:
+    with _dispatch_stats_mu:
+        dispatch_stats["kernel_bypass"] += 1
+        first = not _kernel_bypass_warned
         _kernel_bypass_warned = True
+    if first:
         warnings.warn(
             "use_kernel=True (fused Pallas route) is bypassed for this "
             "dispatch: n_valid/mask sample padding forces the jnp "
@@ -754,7 +773,8 @@ def _run_pipeline(x, cfg: ParaLiNGAMConfig, *, adjacency: bool, batched: bool,
     )
 
 
-def fit(x, config: ParaLiNGAMConfig | None = None, prune_below: float = 0.0):
+def fit(x, config: ParaLiNGAMConfig | None = None, prune_below: float = 0.0,
+        *, validate: bool = False):
     """Full DirectLiNGAM pipeline: causal order (step 1) + causal strengths B
     and noise variances (step 2). Returns ``(result, B)`` with ``B`` a (p, p)
     device array and ``result.noise_var`` the Omega diagonal.
@@ -768,8 +788,18 @@ def fit(x, config: ParaLiNGAMConfig | None = None, prune_below: float = 0.0):
     ignored under ``method="dense"``). The host drivers remain available via
     :func:`causal_order` + ``core.adjacency.estimate_adjacency``. With
     ``config.ring`` the order comes from the multi-device ring driver and
-    phase 2 is a second (still device-side) dispatch."""
+    phase 2 is a second (still device-side) dispatch.
+
+    ``validate=True`` runs the :mod:`repro.core.validate` admission checks
+    first — NaN/Inf cells, constant or duplicate variables, p > n rank
+    deficiency raise a typed ``DatasetError`` *before* any device work, and
+    the clean diagnostics land in ``result.diagnostics``."""
     cfg = config or ParaLiNGAMConfig()
+    diag = None
+    if validate:
+        from repro.core.validate import require_valid
+
+        diag = require_valid(x)
     if cfg.ring:
         from repro.core.adjacency import adjacency_from_order_jit
 
@@ -780,6 +810,7 @@ def fit(x, config: ParaLiNGAMConfig | None = None, prune_below: float = 0.0):
             prune_below=prune_below,
         )
         result.noise_var = np.asarray(omega)
+        result.diagnostics = diag
         return result, b
     p = np.shape(x)[0]
     order, comps_it, rounds_it, conv_it, b, omega = _run_pipeline(
@@ -788,6 +819,7 @@ def fit(x, config: ParaLiNGAMConfig | None = None, prune_below: float = 0.0):
     result = _result_from_counters(order, comps_it, rounds_it, conv_it, p,
                                    cfg.max_rounds)
     result.noise_var = np.asarray(omega)
+    result.diagnostics = diag
     return result, b
 
 
@@ -853,6 +885,100 @@ def fit_batch(xs, config: ParaLiNGAMConfig | None = None, *, n_valid=None,
     )
     return BatchFitResult(orders=order, comparisons=comps, rounds=rounds,
                           converged=conv, b=b, noise_var=omega)
+
+
+@dataclass
+class CompiledFitBatch:
+    """AOT-compiled :func:`fit_batch` executable for ONE ``(batch, p, n)``
+    bucket shape (see :func:`aot_fit_batch`).
+
+    Calling it mirrors ``fit_batch`` (same result type, same padding
+    contract) but runs the stored ``jax.stages.Compiled`` executable
+    directly — *no* tracing, *no* compile, *no* jit-cache lookup on the
+    call path. This matters because ``jit_fn.lower().compile()`` does NOT
+    populate the jit dispatch cache (verified empirically: the first normal
+    ``fit_batch`` call after an AOT compile still pays the full ~100ms
+    trace+compile); holding and invoking the Compiled object is the only
+    way AOT pre-warming actually removes the cold-start cost."""
+
+    batch: int
+    p: int
+    n: int
+    padded: bool  # compiled with the n_valid/mask seams (the serve path)
+    cfg: ParaLiNGAMConfig
+    compiled: object  # jax.stages.Compiled
+    compile_seconds: float  # what the pre-warm saved the first request
+
+    def __call__(self, xs, n_valid=None, mask=None) -> BatchFitResult:
+        cfg = self.cfg
+        xs = jnp.asarray(xs, cfg.dtype)
+        if xs.shape != (self.batch, self.p, self.n):
+            raise ValueError(
+                f"CompiledFitBatch is specialized to "
+                f"{(self.batch, self.p, self.n)}, got {xs.shape}")
+        g0 = jnp.asarray(cfg.gamma0, cfg.dtype)
+        gg = jnp.asarray(cfg.gamma_growth, cfg.dtype)
+        if self.padded:
+            nv = (jnp.full((self.batch,), self.n, jnp.int32)
+                  if n_valid is None else jnp.asarray(n_valid, jnp.int32))
+            if nv.ndim == 0:
+                nv = jnp.broadcast_to(nv, (self.batch,))
+            mk = (jnp.ones((self.batch, self.p), bool)
+                  if mask is None else jnp.asarray(mask, bool))
+            _note_kernel_bypass(cfg, nv)
+            out = self.compiled(xs, g0, gg, nv, mk)
+        else:
+            if n_valid is not None or mask is not None:
+                raise ValueError(
+                    "this executable was compiled for exact (unpadded) "
+                    "batches; aot_fit_batch(padded=True) for the seams")
+            out = self.compiled(xs, g0, gg, None, None)
+        order, comps, rounds, conv, b, omega = out
+        return BatchFitResult(orders=order, comparisons=comps, rounds=rounds,
+                              converged=conv, b=b, noise_var=omega)
+
+
+def aot_fit_batch(batch: int, p: int, n: int,
+                  config: ParaLiNGAMConfig | None = None, *,
+                  padded: bool = True, rules=None,
+                  prune_below: float = 0.0) -> CompiledFitBatch:
+    """Ahead-of-time compile the :func:`fit_batch` pipeline for one
+    ``(batch, p, n)`` bucket shape: ``jax.jit(...).lower(...).compile()``
+    against abstract ``ShapeDtypeStruct`` inputs — no example data, no
+    device execution, just trace + XLA compile.
+
+    The serving engines call this at startup over the configured pow-2
+    bucket grid (``AsyncLingamEngine(prewarm=True)``) so the first request
+    landing on a fresh bucket no longer eats the compile — which otherwise
+    shows up as a latency spike that can trip deadline shedding and, under
+    a circuit breaker, look exactly like a sick bucket. ``padded`` selects
+    the ``n_valid``/mask variant (what bucketed serving dispatches);
+    ``padded=False`` matches the exact-shape fast path."""
+    cfg = config or ParaLiNGAMConfig()
+    if cfg.ring:
+        raise ValueError("aot_fit_batch compiles the vmapped scan pipeline; "
+                         "the ring driver has no batched form")
+    threshold = cfg.method == "threshold" or (
+        cfg.method == "scan" and cfg.threshold
+    )
+    fn = _pipeline_fn(
+        True, rules,
+        adjacency=True,
+        threshold=threshold,
+        block_j=cfg.block_j, use_kernel=cfg.use_kernel, fused=cfg.fused,
+        min_bucket=cfg.min_bucket, chunk=cfg.chunk, max_rounds=cfg.max_rounds,
+        prune_below=prune_below,
+    )
+    sds = jax.ShapeDtypeStruct
+    x_s = sds((batch, p, n), cfg.dtype)
+    g_s = sds((), cfg.dtype)
+    nv_s = sds((batch,), jnp.int32) if padded else None
+    mk_s = sds((batch, p), jnp.bool_) if padded else None
+    t0 = time.perf_counter()
+    compiled = fn.lower(x_s, g_s, g_s, nv_s, mk_s).compile()
+    dt = time.perf_counter() - t0
+    return CompiledFitBatch(batch=batch, p=p, n=n, padded=padded, cfg=cfg,
+                            compiled=compiled, compile_seconds=dt)
 
 
 def causal_order_batch(xs, config: ParaLiNGAMConfig | None = None, *,

@@ -2,6 +2,7 @@ from repro.serve.engine import Engine, ServeConfig
 from repro.serve.batching import (
     BatchingConfig,
     BatchingCore,
+    BucketQuarantined,
     DispatchFailed,
     EngineClosed,
     ManualDispatcher,
@@ -22,3 +23,10 @@ from repro.serve.lingam_engine import (
     pad_dataset,
 )
 from repro.serve.async_engine import AsyncLingamEngine
+from repro.serve.replica import (
+    ChaosDispatcher,
+    HungDispatch,
+    ReplicaCrashed,
+    ReplicaPool,
+    ReplicaPoolConfig,
+)

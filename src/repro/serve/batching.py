@@ -26,20 +26,42 @@ Request lifecycle::
       +------------------+      enqueue + flush_interval, pulled earlier by
              |                  any request deadline minus deadline_margin)
              v
-        dispatcher  (background thread, or test-driven via step())
+        dispatcher  (background thread, replica pool, or step() in tests)
              |-- deadline already passed      -> ticket <- RequestTimeout
+             |-- bucket breaker open          -> ticket <- BucketQuarantined
              |-- dispatch seam raises / returns bad rows:
              |       retries_left > 0  -> re-queued, due=now (counted retry)
              |       retries_left == 0 -> ticket <- DispatchFailed
+             |-- dispatcher replica hung/crashed (serve/replica.py):
+             |       failovers_left > 0 -> re-queued to a healthy peer
+             |       failovers_left == 0 -> ticket <- DispatchFailed
              v
         ticket.result()   (unblocks the submitter with value or typed error)
 
 Every admitted request terminates in exactly one of delivered / timed-out /
-failed, and every submitted request is admitted or shed — the conservation
-laws (``submitted == admitted + shed``, ``admitted == delivered + timeouts +
-failed + still-queued/in-flight``) that the fault-injection and storm tests
-assert. A request is *never* silently dropped: even a dispatcher-thread crash
-fails the queue with typed errors rather than hanging callers.
+failed, and every submitted request is admitted or shed/quarantined — the
+conservation laws (``submitted == admitted + shed + rejected + quarantined``,
+``admitted == delivered + timeouts + failed + still-queued/in-flight``) that
+the fault-injection and storm tests assert. A request is *never* silently
+dropped: even a dispatcher-thread crash fails the queue with typed errors
+rather than hanging callers.
+
+Two fault-containment mechanisms live at this layer:
+
+* **Per-bucket circuit breakers** (``breaker_threshold`` > 0): K consecutive
+  whole-dispatch failures on one bucket shape open that bucket's breaker —
+  new submits to the shape fast-fail with ``BucketQuarantined`` (cheap,
+  immediate, no retry budget burned) and the bucket's queued requests are
+  held rather than dispatched into a failing executable. After
+  ``breaker_cooldown`` the breaker goes half-open and admits exactly one
+  probe batch: success closes it, failure re-opens it. Per-*request*
+  rejections (e.g. a NaN result for one dataset) do NOT count — those are
+  data-dependent, not shape-dependent, and ride the normal retry path.
+* **Failover re-queue** (``requeue_batch``): an external dispatcher (the
+  replica pool's watchdog, a crashed replica) can push a taken batch back
+  without burning the per-request *retry* budget — replica failure is not
+  the request's fault. A separate ``max_failovers`` budget bounds it so a
+  batch can't ping-pong between dying replicas forever.
 
 All time flows through the ``utils.clock`` seam and all device work through
 the ``dispatch`` callable, so every timing and failure path is
@@ -108,6 +130,15 @@ class DispatchFailed(ServeError):
     is exhausted; ``__cause__`` carries the last underlying error."""
 
 
+class BucketQuarantined(ServeError):
+    """The request's bucket shape has its circuit breaker open after
+    ``breaker_threshold`` consecutive whole-dispatch failures. Raised at
+    ``submit`` time (fast-fail, never admitted) and used to terminate
+    queued requests of an open bucket without burning their retry budget;
+    in the latter case ``__cause__`` carries the underlying dispatch
+    error."""
+
+
 class EngineClosed(ServeError):
     """The engine was closed before this request could be served."""
 
@@ -129,6 +160,13 @@ class BatchingConfig:
     overflow: str = "block"  # "block" | "shed": backpressure policy when the
     #   admission queue is full (per-submit override available)
     max_retries: int = 1  # failed-dispatch re-queue budget per request
+    max_failovers: int = 4  # replica-failover re-queue budget per request
+    #   (hung/crashed dispatcher path via ``requeue_batch``; independent of
+    #   max_retries — replica failure is not the request's fault)
+    breaker_threshold: int = 0  # K consecutive whole-dispatch failures on
+    #   one bucket open its circuit breaker (0 disables breakers entirely)
+    breaker_cooldown: float = 30.0  # seconds an open breaker holds before
+    #   going half-open and admitting one probe batch
     latency_window: int = 512  # per-bucket delivered-latency ring buffer
 
 
@@ -174,10 +212,10 @@ class Ticket:
 
 class _Req:
     __slots__ = ("seq", "payload", "bucket", "priority", "deadline", "due",
-                 "enqueue_t", "retries_left", "ticket")
+                 "enqueue_t", "retries_left", "failovers_left", "ticket")
 
     def __init__(self, seq, payload, bucket, priority, deadline, due,
-                 enqueue_t, retries_left, ticket):
+                 enqueue_t, retries_left, failovers_left, ticket):
         self.seq = seq
         self.payload = payload
         self.bucket = bucket
@@ -186,6 +224,7 @@ class _Req:
         self.due = due  # absolute time at which this request forces a flush
         self.enqueue_t = enqueue_t
         self.retries_left = retries_left
+        self.failovers_left = failovers_left  # replica-failure re-queues
         self.ticket = ticket
 
 
@@ -226,11 +265,15 @@ class BatchingCore:
         self._in_flight = 0
         self._seq = 0
         self._closed = False
+        self._draining = False  # closed with drain=True: intake shut, but
+        #   queued/in-flight work still flushes (and may retry/fail over)
         self._thread: threading.Thread | None = None
+        self._breakers: dict = {}  # bucket -> circuit-breaker state dict
         self.stats: dict = {
             "submitted": 0, "admitted": 0, "shed": 0, "rejected": 0,
-            "delivered": 0, "timeouts": 0, "failed": 0, "retries": 0,
-            "dispatches": 0, "dispatch_failures": 0, "queue_peak": 0,
+            "quarantined": 0, "delivered": 0, "timeouts": 0, "failed": 0,
+            "retries": 0, "failovers": 0, "dispatches": 0,
+            "dispatch_failures": 0, "breaker_opens": 0, "queue_peak": 0,
             "blocked_submits": 0,
         }
         self._buckets: dict = {}  # bucket -> mutable stats dict
@@ -252,6 +295,19 @@ class BatchingCore:
             if self._closed:
                 self.stats["rejected"] += 1
                 raise EngineClosed(f"{self.name}: engine is closed")
+            if self.cfg.breaker_threshold > 0:
+                br = self._breakers.get(bucket)
+                if br is not None and br["state"] == "open":
+                    if (self.clock.now() - br["opened_at"]
+                            < self.cfg.breaker_cooldown):
+                        self.stats["quarantined"] += 1
+                        self._bucket_stats(bucket)["quarantined"] += 1
+                        raise BucketQuarantined(
+                            f"{self.name}: bucket {bucket!r} is quarantined "
+                            f"after {br['consecutive']} consecutive dispatch "
+                            f"failures; retry after cooldown")
+                    br["state"] = "half_open"  # cooldown over: admit a probe
+                    br["probing"] = False
             blocked = False
             while self._depth >= self.cfg.max_queue:
                 if policy == "shed":
@@ -276,7 +332,8 @@ class BatchingCore:
                 abs_deadline = now + deadline
                 due = min(due, abs_deadline - self.cfg.deadline_margin)
             req = _Req(self._seq, payload, bucket, priority, abs_deadline,
-                       due, now, self.cfg.max_retries, ticket)
+                       due, now, self.cfg.max_retries,
+                       self.cfg.max_failovers, ticket)
             self._seq += 1
             self._queue.setdefault(bucket, []).append(req)
             self._depth += 1
@@ -308,7 +365,8 @@ class BatchingCore:
         if bs is None:
             bs = self._buckets[bucket] = {
                 "requests": 0, "dispatches": 0, "delivered": 0, "shed": 0,
-                "timeouts": 0, "failed": 0, "retries": 0, "batch_sum": 0,
+                "quarantined": 0, "timeouts": 0, "failed": 0, "retries": 0,
+                "failovers": 0, "batch_sum": 0,
                 "lat": deque(maxlen=self.cfg.latency_window),
             }
         return bs
@@ -321,67 +379,147 @@ class BatchingCore:
             for k, v in deltas.items():
                 bs[k] = bs.get(k, 0) + v
 
-    def _take_batch(self):
-        """Pop the most urgent flushable batch (or None). Also fails overdue
-        queued requests with ``RequestTimeout`` — load-shedding of work that
-        can no longer meet its deadline, *before* it wastes a dispatch."""
+    # -- circuit breakers (per bucket) --------------------------------------
+
+    def _breaker_locked(self, bucket) -> dict:
+        br = self._breakers.get(bucket)
+        if br is None:
+            br = self._breakers[bucket] = {
+                "state": "closed", "consecutive": 0, "opened_at": 0.0,
+                "probing": False,
+            }
+        return br
+
+    def _breaker_holds_locked(self, bucket, now: float) -> bool:
+        """True if the bucket's breaker currently blocks dispatches.
+        Transitions open -> half_open once the cooldown has elapsed;
+        half_open admits exactly one probe batch at a time."""
+        if self.cfg.breaker_threshold <= 0:
+            return False
+        br = self._breakers.get(bucket)
+        if br is None or br["state"] == "closed":
+            return False
+        if br["state"] == "open":
+            if now - br["opened_at"] < self.cfg.breaker_cooldown:
+                return True
+            br["state"] = "half_open"
+            br["probing"] = False
+            return False
+        return br["probing"]
+
+    def _note_dispatch_failure_locked(self, bucket) -> None:
+        if self.cfg.breaker_threshold <= 0:
+            return
+        br = self._breaker_locked(bucket)
+        br["consecutive"] += 1
+        reopen = br["state"] == "half_open"  # failed probe: straight back
+        if reopen or (br["state"] == "closed"
+                      and br["consecutive"] >= self.cfg.breaker_threshold):
+            br["state"] = "open"
+            br["opened_at"] = self.clock.now()
+            br["probing"] = False
+            self.stats["breaker_opens"] += 1
+            bs = self._bucket_stats(bucket)
+            bs["breaker_opens"] = bs.get("breaker_opens", 0) + 1
+
+    def _note_dispatch_success_locked(self, bucket) -> None:
+        if self.cfg.breaker_threshold <= 0:
+            return
+        br = self._breakers.get(bucket)
+        if br is None:
+            return
+        br["consecutive"] = 0
+        br["probing"] = False
+        if br["state"] != "closed":
+            br["state"] = "closed"
+            # held requests are dispatchable again: wake parked dispatchers
+            self._work.notify_all()
+
+    # -- batch intake/completion (the dispatch contract) --------------------
+    #
+    # ``take_batch`` / ``complete_batch`` / ``fail_batch`` / ``requeue_batch``
+    # are the public dispatch contract: every taken batch must be handed to
+    # exactly one of the other three. ``step()`` composes take + dispatch +
+    # complete/fail in one thread; the replica pool (serve/replica.py) splits
+    # them across its dispatcher threads and watchdog.
+
+    def take_batch(self):
+        """Pop the most urgent flushable batch as ``(bucket, reqs)``, or
+        None if nothing is currently dispatchable."""
         now = self.clock.now()
         with self._mu:
-            best = None
-            best_trigger = None
-            for bucket in list(self._queue):
-                reqs = self._queue[bucket]
-                alive = []
-                for r in reqs:
-                    if r.deadline is not None and r.deadline <= now:
-                        self._finish_locked(r, kind="timeouts", now=now,
-                                            error=RequestTimeout(
-                                                f"{self.name}: request "
-                                                f"{r.ticket.req_id} missed its "
-                                                f"deadline while queued"))
-                        self._depth -= 1
-                    else:
-                        alive.append(r)
-                if not alive:
-                    del self._queue[bucket]
-                    continue
-                self._queue[bucket] = alive
-                trigger = (now if len(alive) >= self.cfg.max_batch
-                           else min(r.due for r in alive))
-                if trigger <= now and (best is None or trigger < best_trigger):
-                    best, best_trigger = bucket, trigger
-            if best is None:
-                if self._depth == 0 and self._in_flight == 0:
-                    self._idle.notify_all()
-                self._space.notify_all()  # timeouts may have freed space
-                return None
-            reqs = self._queue[best]
-            reqs.sort(key=lambda r: (-r.priority, r.seq))
-            take, rest = reqs[: self.cfg.max_batch], reqs[self.cfg.max_batch:]
-            if rest:
-                self._queue[best] = rest
-            else:
-                del self._queue[best]
-            self._depth -= len(take)
-            self._in_flight += len(take)
-            self._space.notify_all()
-            return best, take
+            return self._take_batch_locked(now)
+
+    _take_batch = take_batch  # historical internal name
+
+    def _take_batch_locked(self, now: float):
+        """Core of ``take_batch``; caller holds ``self._mu``. Also fails
+        overdue queued requests with ``RequestTimeout`` — load-shedding of
+        work that can no longer meet its deadline, *before* it wastes a
+        dispatch — and holds buckets whose circuit breaker is open (bypassed
+        while draining, so a close(drain=True) never strands a request
+        behind a quarantined shape)."""
+        best = None
+        best_trigger = None
+        for bucket in list(self._queue):
+            reqs = self._queue[bucket]
+            alive = []
+            for r in reqs:
+                if r.deadline is not None and r.deadline <= now:
+                    self._finish_locked(r, kind="timeouts", now=now,
+                                        error=RequestTimeout(
+                                            f"{self.name}: request "
+                                            f"{r.ticket.req_id} missed its "
+                                            f"deadline while queued"))
+                    self._depth -= 1
+                else:
+                    alive.append(r)
+            if not alive:
+                del self._queue[bucket]
+                continue
+            self._queue[bucket] = alive
+            if not self._draining and self._breaker_holds_locked(bucket, now):
+                continue
+            trigger = (now if len(alive) >= self.cfg.max_batch
+                       else min(r.due for r in alive))
+            if trigger <= now and (best is None or trigger < best_trigger):
+                best, best_trigger = bucket, trigger
+        if best is None:
+            self._maybe_idle_locked()
+            self._space.notify_all()  # timeouts may have freed space
+            return None
+        reqs = self._queue[best]
+        reqs.sort(key=lambda r: (-r.priority, r.seq))
+        take, rest = reqs[: self.cfg.max_batch], reqs[self.cfg.max_batch:]
+        if rest:
+            self._queue[best] = rest
+        else:
+            del self._queue[best]
+        self._depth -= len(take)
+        self._in_flight += len(take)
+        br = self._breakers.get(best)
+        if br is not None and br["state"] == "half_open":
+            br["probing"] = True  # this batch is the one half-open probe
+        self._space.notify_all()
+        return best, take
 
     def _run_batch(self, bucket, reqs) -> None:
         try:
             results = self.dispatch(bucket, [r.payload for r in reqs])
-            if results is None or len(results) != len(reqs):
-                got = 0 if results is None else len(results)
-                raise DispatchFailed(
-                    f"{self.name}: dispatch returned {got} results for "
-                    f"{len(reqs)} requests (partial batch)"
-                )
         except BaseException as e:  # noqa: BLE001 — every failure is typed
-            with self._mu:
-                self.stats["dispatch_failures"] += 1
-                self._in_flight -= len(reqs)
-                for r in reqs:
-                    self._retry_or_fail_locked(r, e)
+            self.fail_batch(bucket, reqs, e)
+            return
+        self.complete_batch(bucket, reqs, results)
+
+    def complete_batch(self, bucket, reqs, results) -> None:
+        """Deliver one taken batch's results (per-request ``Exception``
+        entries reject/retry just that request). A missing or wrong-length
+        result list is a whole-batch failure."""
+        if results is None or len(results) != len(reqs):
+            got = 0 if results is None else len(results)
+            self.fail_batch(bucket, reqs, DispatchFailed(
+                f"{self.name}: dispatch returned {got} results for "
+                f"{len(reqs)} requests (partial batch)"))
             return
         now = self.clock.now()
         with self._mu:
@@ -390,17 +528,70 @@ class BatchingCore:
             bs["dispatches"] += 1
             bs["batch_sum"] += len(reqs)
             self._in_flight -= len(reqs)
+            self._note_dispatch_success_locked(bucket)
             for r, val in zip(reqs, results):
                 if isinstance(val, BaseException):
-                    # per-request rejection from the seam (e.g. NaN result)
+                    # per-request rejection from the seam (e.g. NaN result);
+                    # data-dependent, so it does NOT count toward the breaker
                     self._retry_or_fail_locked(r, val)
                 else:
                     self._finish_locked(r, kind="delivered", now=now, value=val)
-            if self._depth == 0 and self._in_flight == 0:
-                self._idle.notify_all()
+            self._maybe_idle_locked()
+
+    def fail_batch(self, bucket, reqs, err: BaseException) -> None:
+        """Fail one taken batch into the retry/breaker path (whole-dispatch
+        failure: the seam raised, or a replica produced garbage)."""
+        with self._mu:
+            self.stats["dispatch_failures"] += 1
+            self._in_flight -= len(reqs)
+            self._note_dispatch_failure_locked(bucket)
+            for r in reqs:
+                self._retry_or_fail_locked(r, err)
+            self._maybe_idle_locked()
+
+    def requeue_batch(self, bucket, reqs, cause) -> None:
+        """Fail over one taken batch: push it back onto the queue *without*
+        burning per-request retry budget — a hung or crashed dispatcher
+        replica is not the request's fault, and does not count toward the
+        bucket's breaker. Bounded by ``max_failovers`` per request; on
+        exhaustion the request fails with a typed ``DispatchFailed``."""
+        now = self.clock.now()
+        with self._mu:
+            for r in reqs:
+                self._in_flight -= 1
+                if r.failovers_left > 0 and (not self._closed or self._draining):
+                    r.failovers_left -= 1
+                    r.due = now  # fail over at the next pass, don't re-age
+                    self.stats["failovers"] += 1
+                    self._bucket_stats(r.bucket)["failovers"] += 1
+                    self._queue.setdefault(r.bucket, []).append(r)
+                    self._depth += 1
+                else:
+                    err = DispatchFailed(
+                        f"{self.name}: request {r.ticket.req_id} exhausted "
+                        f"its failover budget ({self.cfg.max_failovers}) "
+                        f"after repeated replica failures: {cause!r}")
+                    if isinstance(cause, BaseException):
+                        err.__cause__ = cause
+                    self._finish_locked(r, kind="failed", now=now, error=err)
+            self._work.notify_all()
+            self._maybe_idle_locked()
+
+    def _maybe_idle_locked(self) -> None:
+        # Wake join() waiters on EVERY path that can complete the last piece
+        # of work — including whole-batch dispatch failure, which previously
+        # skipped the notify and could hang join() forever.
+        if self._depth == 0 and self._in_flight == 0:
+            self._idle.notify_all()
+            if self._closed:
+                self._work.notify_all()  # let dispatcher/pool threads exit
 
     def _retry_or_fail_locked(self, r: _Req, err: BaseException) -> None:
-        if r.retries_left > 0 and not self._closed:
+        br = self._breakers.get(r.bucket)
+        quarantined = (br is not None and br["state"] == "open"
+                       and not self._draining)
+        if (r.retries_left > 0 and not quarantined
+                and (not self._closed or self._draining)):
             r.retries_left -= 1
             r.due = self.clock.now()  # retry at the next pass, don't re-age
             self.stats["retries"] += 1
@@ -411,8 +602,13 @@ class BatchingCore:
             self._depth += 1
             self._work.notify()
             return
-        if isinstance(err, ServeError):
-            final: BaseException = err
+        if quarantined and not isinstance(err, ServeError):
+            final: BaseException = BucketQuarantined(
+                f"{self.name}: bucket {r.bucket!r} quarantined after "
+                f"repeated dispatch failures; not retrying")
+            final.__cause__ = err
+        elif isinstance(err, ServeError):
+            final = err
         else:
             final = DispatchFailed(f"{self.name}: dispatch failed: {err!r}")
             final.__cause__ = err
@@ -444,22 +640,46 @@ class BatchingCore:
         self._thread.start()
         return self
 
+    def _next_wake_locked(self) -> float | None:
+        """Earliest absolute time at which queued work may become
+        dispatchable — bucket due/deadline/size triggers plus open-breaker
+        cooldown expiries — or None if nothing is queued. Shared by the
+        background thread and the replica pool's dispatcher threads."""
+        wake = None
+
+        def _min(a, b):
+            return b if a is None else min(a, b)
+
+        for bucket, reqs in self._queue.items():
+            held = False
+            if not self._draining and self.cfg.breaker_threshold > 0:
+                br = self._breakers.get(bucket)
+                if br is not None and br["state"] == "open":
+                    wake = _min(wake, br["opened_at"] + self.cfg.breaker_cooldown)
+                    held = True
+                elif br is not None and br["state"] == "half_open" and br["probing"]:
+                    held = True  # probe in flight decides this bucket's fate
+            if held:
+                for r in reqs:  # deadlines still expire while quarantined
+                    if r.deadline is not None:
+                        wake = _min(wake, r.deadline)
+                continue
+            if len(reqs) >= self.cfg.max_batch:
+                return self.clock.now()
+            for r in reqs:
+                wake = _min(wake, r.due)
+                if r.deadline is not None:
+                    wake = _min(wake, r.deadline)
+        return wake
+
     def _run(self) -> None:
         try:
             while True:
                 with self._mu:
                     if self._closed and self._depth == 0:
                         return
-                    wake = None
-                    for reqs in self._queue.values():
-                        if len(reqs) >= self.cfg.max_batch:
-                            wake = self.clock.now()
-                            break
-                        for r in reqs:
-                            wake = r.due if wake is None else min(wake, r.due)
-                            if r.deadline is not None:
-                                wake = min(wake, r.deadline)
-                    if wake is None:  # nothing queued
+                    wake = self._next_wake_locked()
+                    if wake is None:  # nothing queued (or all held)
                         self.clock.wait(self._work, None)
                         continue
                     now = self.clock.now()
@@ -502,32 +722,45 @@ class BatchingCore:
                 self._idle.wait(remaining)
         return True
 
-    def close(self, *, drain: bool = True, timeout: float | None = None) -> None:
-        """Stop accepting requests. ``drain=True`` flushes everything still
-        queued (ignoring flush-interval aging) before the dispatcher exits;
-        ``drain=False`` fails queued requests with ``EngineClosed``."""
+    def shut_intake(self, *, drain: bool = True) -> None:
+        """Close the admission queue without driving any dispatches — the
+        intake half of ``close()``, used by external dispatcher pools that
+        own the drain themselves. ``drain=True`` marks everything queued due
+        now (and keeps the retry/failover paths alive until the queue is
+        empty); ``drain=False`` fails queued requests with ``EngineClosed``.
+        Idempotent."""
         with self._mu:
             if self._closed:
-                thread = self._thread
+                return
+            self._closed = True
+            self._draining = drain
+            if drain:
+                now = self.clock.now()
+                for reqs in self._queue.values():
+                    for r in reqs:
+                        r.due = now  # flush immediately, age no further
             else:
-                self._closed = True
-                if drain:
-                    now = self.clock.now()
-                    for reqs in self._queue.values():
-                        for r in reqs:
-                            r.due = now  # flush immediately, age no further
-                else:
-                    for reqs in self._queue.values():
-                        for r in reqs:
-                            self._finish_locked(
-                                r, kind="failed", now=self.clock.now(),
-                                error=EngineClosed(
-                                    f"{self.name}: closed before dispatch"))
-                    self._queue.clear()
-                    self._depth = 0
-                thread = self._thread
-                self._work.notify_all()
-                self._space.notify_all()
+                for reqs in self._queue.values():
+                    for r in reqs:
+                        self._finish_locked(
+                            r, kind="failed", now=self.clock.now(),
+                            error=EngineClosed(
+                                f"{self.name}: closed before dispatch"))
+                self._queue.clear()
+                self._depth = 0
+            self._work.notify_all()
+            self._space.notify_all()
+            self._maybe_idle_locked()
+
+    def close(self, *, drain: bool = True, timeout: float | None = None) -> None:
+        """Stop accepting requests. ``drain=True`` flushes everything still
+        queued (ignoring flush-interval aging) before the dispatcher exits —
+        in-flight work may still retry or fail over while draining, so every
+        ticket deterministically resolves to delivered or a typed error;
+        ``drain=False`` fails queued requests with ``EngineClosed``."""
+        self.shut_intake(drain=drain)
+        with self._mu:
+            thread = self._thread
         if thread is not None:
             thread.join(timeout)
         elif drain:
@@ -569,6 +802,9 @@ class BatchingCore:
                                                int(len(lat) * 0.95))]
                 if bs.get("total_cells"):
                     b["padding_waste"] = bs.get("pad_cells", 0) / bs["total_cells"]
+                br = self._breakers.get(bucket)
+                if br is not None:
+                    b["breaker"] = br["state"]
                 buckets[bucket] = b
             out["buckets"] = buckets
         return out

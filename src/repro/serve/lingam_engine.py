@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.paralingam import ParaLiNGAMConfig, fit_batch
+from repro.core.validate import require_valid
 from repro.serve.batching import bucket_dims, pad_to
 from repro.utils.shapes import next_pow2
 
@@ -47,6 +48,10 @@ class LingamServeConfig:
     pad_batch_pow2: bool = True  # pad the batch count up to a power of two
     #   (zero datasets, all-dead mask) so partial batches reuse the compiled
     #   executable of the full bucket instead of compiling per batch count.
+    validate: bool = True  # run the core.validate admission guardrails on
+    #   every submitted dataset (NaN/Inf cells, constant/duplicate variables,
+    #   p > n rank deficiency) and reject with a typed DatasetError before
+    #   the request ever occupies a batch slot or burns a retry.
 
 
 @dataclass
@@ -94,24 +99,35 @@ def check_engine_config(config: ParaLiNGAMConfig | None) -> ParaLiNGAMConfig:
     return config
 
 
-def check_dataset(x) -> np.ndarray:
+def check_dataset(x, *, validate: bool = False) -> np.ndarray:
     """Coerce one request payload to a float64 (p, n) matrix (shared request
-    validation of the sync and async engines)."""
+    validation of the sync and async engines). ``validate=True`` additionally
+    runs the :mod:`repro.core.validate` admission guardrails, raising a typed
+    ``DatasetError`` (a ``ValueError``) with full diagnostics on degenerate
+    data — before any queueing or device work."""
     x = np.asarray(x, np.float64)
     if x.ndim != 2:
         raise ValueError(f"expected one (p, n) dataset, got shape {x.shape}")
+    if validate:
+        require_valid(x)
     return x
 
 
 def dispatch_bucket(xs_list: list[np.ndarray], p_pad: int, n_pad: int,
                     config: ParaLiNGAMConfig,
                     serve_cfg: LingamServeConfig,
-                    rules=None) -> list[LingamFit]:
+                    rules=None, compiled=None) -> list[LingamFit]:
     """One bucket's device dispatch, shared by the sync and async engines:
     pack the raw ragged datasets into a zero-padded (B, p_pad, n_pad) batch
     (batch count pow-2 padded too, per ``serve_cfg``), run the one-dispatch
     batched fit, and unpad each result back to its request's true shape.
-    Returns one ``LingamFit`` per input dataset, in order."""
+    Returns one ``LingamFit`` per input dataset, in order.
+
+    ``compiled`` is an optional ``{(b_pad, p_pad, n_pad): CompiledFitBatch}``
+    pre-warm cache (see ``paralingam.aot_fit_batch``): on a hit the stored
+    executable runs directly — no trace, no compile, no jit-cache lookup —
+    so a pre-warmed bucket's first request pays no cold-start. Misses fall
+    back to the normal ``fit_batch`` path."""
     b = len(xs_list)
     b_pad = (min(next_pow2(b), serve_cfg.max_batch)
              if serve_cfg.pad_batch_pow2 else b)
@@ -127,12 +143,18 @@ def dispatch_bucket(xs_list: list[np.ndarray], p_pad: int, n_pad: int,
         exact &= (p == p_pad and n == n_pad)
     exact &= b == b_pad
 
-    res = fit_batch(
-        xs, config,
-        mask=None if exact else jnp.asarray(mask),
-        n_valid=None if exact else jnp.asarray(n_valid),
-        rules=rules,
-    )
+    exe = compiled.get((b_pad, p_pad, n_pad)) if compiled else None
+    if exe is not None:
+        # pre-warmed executables carry the n_valid/mask seams; feeding the
+        # full-batch/full-shape values is bit-identical to the exact path
+        res = exe(xs, n_valid=jnp.asarray(n_valid), mask=jnp.asarray(mask))
+    else:
+        res = fit_batch(
+            xs, config,
+            mask=None if exact else jnp.asarray(mask),
+            n_valid=None if exact else jnp.asarray(n_valid),
+            rules=rules,
+        )
 
     orders = np.asarray(res.orders)
     bs = np.asarray(res.b)
@@ -175,7 +197,7 @@ class LingamEngine:
     # -- intake -------------------------------------------------------------
 
     def submit(self, x) -> int:
-        x = check_dataset(x)
+        x = check_dataset(x, validate=self.serve_cfg.validate)
         req_id = self._next_id
         self._next_id += 1
         self._queue.append(_Pending(req_id, x))

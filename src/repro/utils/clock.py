@@ -11,6 +11,12 @@ The waiting primitive is condition-based, not sleep-based: ``wait(cond,
 timeout)`` parks the caller on a ``threading.Condition`` it already holds,
 so real engines wake instantly on new work (``notify``) and fake-clock
 engines wake when a test calls :meth:`FakeClock.advance` past the timeout.
+
+The same sleeper registry backs the *watchdog* side of the serving stack
+(``serve/replica.py``): the hung-dispatch watchdog parks on its own
+condition with ``wait(cond, budget_remaining)``, so a test can drive a
+"dispatch exceeded its wall-clock budget" expiry purely by advancing a
+``FakeClock`` — no real sleeps anywhere in the timeout path.
 """
 
 from __future__ import annotations
@@ -71,6 +77,13 @@ class FakeClock(Clock):
                 self._sleepers.append((cond, self._t + timeout))
         cond.wait()
 
+    def sleeper_count(self) -> int:
+        """Number of registered timed waits not yet expired — lets watchdog
+        tests assert that a budget timer really is armed before advancing
+        time past it."""
+        with self._mu:
+            return len(self._sleepers)
+
     def advance(self, dt: float) -> float:
         """Move time forward by ``dt`` seconds; wake expired sleepers.
         Returns the new time."""
@@ -85,3 +98,9 @@ class FakeClock(Clock):
             with cond:
                 cond.notify_all()
         return now
+
+    def advance_to(self, t: float) -> float:
+        """Advance to absolute time ``t`` (no-op if already past it)."""
+        with self._mu:
+            dt = t - self._t
+        return self.advance(max(0.0, dt))

@@ -45,6 +45,17 @@ def manual_dispatcher():
     return ManualDispatcher()
 
 
+@pytest.fixture
+def chaos_seed():
+    """Seed of the chaos-matrix fault schedules (tests/test_replica.py,
+    tests/test_serve_storm.py). The CI ``chaos`` lane randomizes it per run
+    via the CHAOS_SEED env var; on failure pytest shows the captured print,
+    so re-running with that CHAOS_SEED reproduces the exact storm."""
+    seed = int(os.environ.get("CHAOS_SEED", "1337"))
+    print(f"CHAOS_SEED={seed}")
+    return seed
+
+
 def pytest_configure(config):
     config.addinivalue_line(
         "markers",

@@ -48,7 +48,7 @@ def _manual_engine(clock, dispatch=None, **cfg):
 
 def _assert_conserved(stats):
     assert stats["submitted"] == (stats["admitted"] + stats["shed"]
-                                  + stats["rejected"])
+                                  + stats["rejected"] + stats["quarantined"])
     assert stats["admitted"] == (stats["delivered"] + stats["timeouts"]
                                  + stats["failed"] + stats["queue_depth"]
                                  + stats["in_flight"])
@@ -328,3 +328,85 @@ def test_kernel_bypass_surfaces_in_engine_stats(fake_clock):
     assert [w for w in rec if issubclass(w.category, RuntimeWarning)]
     assert eng.stats()["kernel_bypass"] == 1
     paralingam.reset_dispatch_stats()
+
+
+# -- AOT pre-warm -------------------------------------------------------------
+
+
+def test_prewarm_populates_cache_and_results_bit_identical(fake_clock):
+    """Pre-warming compiles the bucket grid ahead of traffic; the first
+    request served through a pre-warmed executable is bit-identical to a
+    cold dedicated fit (same padded lowering, stored Compiled object)."""
+    eng = _manual_engine(fake_clock)
+    x = _gen(7, 100, seed=41)
+    eng.prewarm([x.shape])
+    stats = eng.stats()
+    assert stats["prewarm"]["buckets"] >= 1
+    assert stats["prewarm"]["compile_seconds"] > 0.0
+    assert eng._compiled  # executables stored, keyed by (b_pad, p_pad, n_pad)
+    t = eng.submit(x)
+    fake_clock.advance(1.0)
+    eng.step()
+    assert t.result(0).order == _ref_order(x)
+    eng.close()
+
+
+def test_prewarm_shapes_dedupe_into_buckets(fake_clock):
+    eng = _manual_engine(fake_clock)
+    # three ragged shapes, one bucket: (8, 128) after pow-2 rounding
+    eng.prewarm([(7, 100), (8, 128), (5, 70)])
+    keys = {(p, n) for _, p, n in eng._compiled}
+    assert keys == {(8, 128)}
+    eng.close()
+
+
+# -- admission validation -----------------------------------------------------
+
+
+def test_invalid_dataset_rejected_at_submit(fake_clock):
+    from repro.core.validate import DatasetError
+
+    eng = _manual_engine(fake_clock)
+    bad = _gen(6, 80, seed=42)
+    bad[2, 5] = np.nan
+    with pytest.raises(DatasetError, match="non-finite"):
+        eng.submit(bad)
+    assert eng.stats()["invalid_datasets"] == 1
+    assert eng.stats()["submitted"] == 0  # never reached the queue
+    # validation is on by default but can be disabled per engine
+    eng2 = AsyncLingamEngine(
+        CFG, LingamServeConfig(min_p_bucket=8, min_n_bucket=64,
+                               validate=False),
+        batch_cfg=BatchingConfig(max_batch=4, flush_interval=1.0),
+        clock=fake_clock, start=False)
+    eng2.submit(bad)  # accepted: caller opted out of the guardrail
+    eng2.close(drain=False)
+    eng.close()
+
+
+# -- replicated dispatcher pool -----------------------------------------------
+
+
+def test_replicated_engine_bit_identical_with_pool_stats():
+    """replicas=2 with real threads: results identical to dedicated fits,
+    and the stats surface grows a pool section with per-replica health."""
+    datasets = [_gen(8, 128, seed=60 + i) for i in range(6)]
+    refs = [_ref_order(x) for x in datasets]
+    eng = AsyncLingamEngine(
+        CFG, SCFG,
+        batch_cfg=BatchingConfig(max_batch=2, max_queue=64,
+                                 flush_interval=0.005),
+        replicas=2)
+    try:
+        tickets = [eng.submit(x) for x in datasets]
+        for t, ref in zip(tickets, refs):
+            assert t.result(300).order == ref
+        stats = eng.stats()
+        pool = stats["pool"]
+        assert len(pool["replicas"]) == 2
+        assert all(r["state"] == "healthy" for r in pool["replicas"])
+        assert sum(r["dispatches"] for r in pool["replicas"]) \
+            == stats["dispatches"]
+        _assert_conserved(stats)
+    finally:
+        eng.close(timeout=10)

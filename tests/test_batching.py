@@ -14,6 +14,7 @@ import pytest
 from repro.serve.batching import (
     BatchingConfig,
     BatchingCore,
+    BucketQuarantined,
     DispatchFailed,
     EngineClosed,
     ManualDispatcher,
@@ -35,7 +36,7 @@ def _conserved(snap):
     """The delivery guarantee, as arithmetic: every submitted request is
     accounted for exactly once."""
     assert snap["submitted"] == (snap["admitted"] + snap["shed"]
-                                 + snap["rejected"])
+                                 + snap["rejected"] + snap["quarantined"])
     assert snap["admitted"] == (snap["delivered"] + snap["timeouts"]
                                 + snap["failed"] + snap["queue_depth"]
                                 + snap["in_flight"])
@@ -264,6 +265,206 @@ def test_requeue_may_exceed_admission_bound(fake_clock, manual_dispatcher):
     t1, t2 = core.submit(1, "b"), core.submit(2, "b")
     core.step()
     assert t1.result(0) == 1 and t2.result(0) == 2
+
+
+# -- per-bucket circuit breakers ---------------------------------------------
+
+
+def test_breaker_opens_after_threshold_and_fast_fails(fake_clock,
+                                                      manual_dispatcher):
+    """K consecutive dispatch failures on one bucket open its breaker:
+    queued retries fail typed, new submits fast-fail in microseconds, and
+    a *different* bucket is unaffected."""
+    for k in range(1, 4):
+        manual_dispatcher.fail_call(k, exc=RuntimeError(f"boom {k}"))
+    core = _core(manual_dispatcher, fake_clock, max_retries=3,
+                 breaker_threshold=2, breaker_cooldown=10.0)
+    t = core.submit(1, "sick")
+    core.step()  # fail 1 -> retry queued
+    fake_clock.advance(1.0)
+    core.step()  # fail 2 -> breaker opens; retry budget left, but quarantined
+    err = t.error()
+    assert isinstance(err, BucketQuarantined)
+    assert isinstance(err.__cause__, RuntimeError)
+    with pytest.raises(BucketQuarantined):
+        core.submit(2, "sick")  # fast-fail, no queueing, no dispatch
+    t3 = core.submit(3, "healthy")  # other buckets unaffected
+    fake_clock.advance(1.0)
+    core.step()
+    assert t3.result(0) == 3
+    snap = core.snapshot()
+    # the admitted request terminates under "failed" (with a typed
+    # BucketQuarantined); only the fast-failed submit counts as quarantined
+    assert snap["breaker_opens"] == 1 and snap["quarantined"] == 1
+    assert snap["failed"] == 1
+    assert snap["buckets"]["sick"]["breaker"] == "open"
+    _conserved(snap)
+
+
+def test_breaker_half_open_probe_success_closes(fake_clock, manual_dispatcher):
+    for k in (1, 2):
+        manual_dispatcher.fail_call(k, exc=RuntimeError("boom"))
+    core = _core(manual_dispatcher, fake_clock, max_retries=0,
+                 breaker_threshold=2, breaker_cooldown=5.0)
+    for i in (1, 2):
+        core.submit(i, "b")
+        fake_clock.advance(1.0)
+        core.step()
+    assert core.snapshot()["buckets"]["b"]["breaker"] == "open"
+    fake_clock.advance(3.0)  # still inside cooldown
+    with pytest.raises(BucketQuarantined):
+        core.submit(3, "b")
+    fake_clock.advance(2.1)  # cooldown over: next submit is the probe
+    t = core.submit(4, "b")
+    fake_clock.advance(1.0)
+    core.step()
+    assert t.result(0) == 4  # probe delivered
+    snap = core.snapshot()
+    assert snap["buckets"]["b"]["breaker"] == "closed"
+    t2 = core.submit(5, "b")  # breaker closed: normal service resumes
+    fake_clock.advance(1.0)
+    core.step()
+    assert t2.result(0) == 5
+    _conserved(snap)
+
+
+def test_breaker_half_open_probe_failure_reopens(fake_clock,
+                                                 manual_dispatcher):
+    for k in (1, 2, 3):
+        manual_dispatcher.fail_call(k, exc=RuntimeError("still down"))
+    core = _core(manual_dispatcher, fake_clock, max_retries=0,
+                 breaker_threshold=2, breaker_cooldown=5.0)
+    for i in (1, 2):
+        core.submit(i, "b")
+        fake_clock.advance(1.0)
+        core.step()
+    fake_clock.advance(6.0)
+    t = core.submit(3, "b")  # the half-open probe
+    fake_clock.advance(1.0)
+    core.step()  # probe fails -> straight back to open, one failure is enough
+    assert isinstance(t.error(), BucketQuarantined)
+    snap = core.snapshot()
+    assert snap["buckets"]["b"]["breaker"] == "open"
+    assert snap["breaker_opens"] == 2
+    with pytest.raises(BucketQuarantined):
+        core.submit(4, "b")
+    _conserved(core.snapshot())
+
+
+def test_breaker_disabled_by_default(fake_clock, manual_dispatcher):
+    for k in range(1, 6):
+        manual_dispatcher.fail_call(k, exc=RuntimeError("boom"))
+    core = _core(manual_dispatcher, fake_clock, max_retries=4)
+    t = core.submit(1, "b")
+    for _ in range(5):
+        fake_clock.advance(1.0)
+        core.step()
+    assert isinstance(t.error(), DispatchFailed)  # retries exhausted normally
+    assert core.snapshot()["breaker_opens"] == 0
+
+
+# -- public dispatch contract (take/complete/fail/requeue) --------------------
+
+
+def test_requeue_batch_failover_budget_is_typed(fake_clock, manual_dispatcher):
+    """Every taken batch may be handed back via ``requeue_batch`` (the
+    replica-failover path) — it burns failover budget, not retry budget, and
+    exhaustion fails typed instead of looping forever."""
+    core = _core(manual_dispatcher, fake_clock, max_retries=0, max_failovers=1)
+    t = core.submit(1, "b")
+    fake_clock.advance(1.0)
+    taken = core.take_batch()
+    assert taken == ("b", taken[1])
+    core.requeue_batch(*taken, RuntimeError("replica hung"))
+    assert not t.done()  # failed over, still owed an answer
+    taken = core.take_batch()
+    core.requeue_batch(*taken, RuntimeError("replica hung again"))
+    err = t.error()  # budget (1) exhausted
+    assert isinstance(err, DispatchFailed) and "failover budget" in str(err)
+    snap = core.snapshot()
+    assert snap["failovers"] == 1 and snap["retries"] == 0
+    _conserved(snap)
+
+
+def test_join_returns_after_final_failing_dispatch():
+    """Regression: a whole-batch failure with no retry budget must still wake
+    ``join()``/``close()`` waiters — the failure path notifies the idle
+    condition exactly like the delivery path."""
+    disp = ManualDispatcher()
+    for k in range(1, 4):
+        disp.fail_call(k, exc=RuntimeError("always down"))
+    core = BatchingCore(
+        disp, BatchingConfig(max_batch=4, max_queue=8, flush_interval=0.002,
+                             max_retries=0)
+    ).start()
+    t = core.submit(1, "b")
+    assert core.join(5)  # would hang forever before the _maybe_idle fix
+    assert isinstance(t.error(), DispatchFailed)
+    core.close(timeout=5)
+    _conserved(core.snapshot())
+
+
+# -- close(drain)-vs-failing-dispatch race ------------------------------------
+
+
+def test_close_drain_during_failing_inflight_dispatch(fake_clock,
+                                                      manual_dispatcher):
+    """The S2 race, deterministically: a batch is in flight, the owner calls
+    ``close(drain=True)``, then the dispatch fails. The ticket must resolve —
+    draining keeps the retry budget alive, so the retry runs and delivers."""
+    core = _core(manual_dispatcher, fake_clock, max_retries=1,
+                 flush_interval=0.0)
+    t = core.submit(1, "b")
+    taken = core.take_batch()  # batch is now in flight
+    core.shut_intake(drain=True)  # close begins while dispatch is running
+    core.fail_batch(*taken, RuntimeError("mid-close failure"))
+    assert not t.done()  # draining: retry is allowed, not summarily failed
+    while core.step():
+        pass
+    assert t.result(0) == 1  # delivered, exactly once
+    _conserved(core.snapshot())
+
+
+def test_close_nodrain_during_failing_inflight_dispatch(fake_clock,
+                                                        manual_dispatcher):
+    """Same race with ``drain=False``: the retry is forfeit and the ticket
+    resolves to a typed error immediately — never a hang."""
+    core = _core(manual_dispatcher, fake_clock, max_retries=3,
+                 flush_interval=0.0)
+    t = core.submit(1, "b")
+    taken = core.take_batch()
+    core.shut_intake(drain=False)
+    core.fail_batch(*taken, RuntimeError("mid-close failure"))
+    err = t.error()
+    assert isinstance(err, DispatchFailed)
+    assert str(err.__cause__) == "mid-close failure"
+    snap = core.snapshot()
+    assert snap["queue_depth"] == 0 and snap["in_flight"] == 0
+    _conserved(snap)
+
+
+def test_close_race_threaded_resolves_exactly_once():
+    """Threaded S2: close(drain=True) races a dispatch that fails with no
+    retry budget. Whatever interleaving the scheduler picks, the ticket
+    resolves to exactly one of delivered / DispatchFailed — bounded wait,
+    no hang, ledger balanced."""
+    entered = threading.Event()
+
+    def slow_fail(bucket, payloads):
+        entered.set()
+        raise RuntimeError("failing while close() runs")
+
+    core = BatchingCore(
+        slow_fail, BatchingConfig(max_batch=1, max_queue=4,
+                                  flush_interval=0.0, max_retries=0)
+    ).start()
+    t = core.submit(1, "b")
+    assert entered.wait(5)
+    core.close(drain=True, timeout=10)
+    assert t.done()
+    outcomes = int(t.error() is None) + isinstance(t.error(), DispatchFailed)
+    assert outcomes == 1
+    _conserved(core.snapshot())
 
 
 # -- lifecycle ---------------------------------------------------------------

@@ -247,3 +247,38 @@ def test_kernel_bypass_warns_once_and_counts():
                 and "use_kernel" in str(w.message)]
     assert paralingam.dispatch_stats["kernel_bypass"] == 2
     paralingam.reset_dispatch_stats()
+
+
+def test_dispatch_stats_concurrent_updates_are_exact():
+    """The counter is shared by every engine replica thread: 8 threads x 50
+    bumps must land exactly (lost updates under the GIL's bytecode-boundary
+    preemption were possible with the unlocked read-modify-write), and the
+    warn-once flag must fire exactly one RuntimeWarning across all threads."""
+    import threading
+    import warnings
+
+    from repro.core import paralingam
+
+    paralingam.reset_dispatch_stats()
+    kcfg = ParaLiNGAMConfig(min_bucket=8, fused=True, use_kernel=True)
+    nv = np.full((2,), 100, np.int32)
+
+    def bump():
+        for _ in range(50):
+            paralingam._note_kernel_bypass(kcfg, nv)
+
+    # the catcher lives in the main thread only (warnings filter state is
+    # global); worker threads just emit through it
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        threads = [threading.Thread(target=bump) for _ in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(30)
+        assert all(not t.is_alive() for t in threads)
+    assert paralingam.dispatch_stats_snapshot()["kernel_bypass"] == 8 * 50
+    warns = [w for w in rec if issubclass(w.category, RuntimeWarning)]
+    assert len(warns) == 1  # the warn-once flag is race-free too
+    paralingam.reset_dispatch_stats()
+    assert paralingam.dispatch_stats["kernel_bypass"] == 0

@@ -1,0 +1,394 @@
+"""Replica pool fault tolerance: health state machine, hung-dispatch
+watchdog, crash failover, circuit-breaker interplay, and the seeded
+chaos matrix.
+
+Everything timing-related runs on ``FakeClock`` — the watchdog budget, the
+quarantine cooldown and the breaker cooldown are all crossed by advancing
+the fake clock, never by sleeping. The manual-mode tests use zero threads
+(``start=False`` + ``run_once()``/``expire_hung()``); the threaded tests
+use real threads parked on fake-clock waits with bounded real-time joins.
+"""
+
+import random
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import sem
+from repro.core.paralingam import ParaLiNGAMConfig, fit
+from repro.serve.async_engine import AsyncLingamEngine
+from repro.serve.batching import (
+    BatchingConfig,
+    BatchingCore,
+    BucketQuarantined,
+    DispatchFailed,
+    EngineClosed,
+    ServeError,
+)
+from repro.serve.lingam_engine import LingamServeConfig, dispatch_bucket
+from repro.serve.replica import (
+    DEAD,
+    HEALTHY,
+    PROBATION,
+    QUARANTINED,
+    SUSPECT,
+    ChaosDispatcher,
+    HungDispatch,
+    ReplicaCrashed,
+    ReplicaPool,
+    ReplicaPoolConfig,
+)
+from repro.utils.clock import FakeClock
+
+CFG = ParaLiNGAMConfig(min_bucket=8)
+SCFG = LingamServeConfig(min_p_bucket=8, min_n_bucket=64)
+
+
+def _core(clock, **cfg):
+    defaults = dict(max_batch=4, max_queue=64, flush_interval=0.0,
+                    max_retries=0)
+    defaults.update(cfg)
+    return BatchingCore(None, BatchingConfig(**defaults), clock=clock)
+
+
+def _ok(bucket, payloads):
+    return [("fit", bucket, p) for p in payloads]
+
+
+def _conserved(snap):
+    assert snap["submitted"] == (snap["admitted"] + snap["shed"]
+                                 + snap["rejected"] + snap["quarantined"])
+    assert snap["admitted"] == (snap["delivered"] + snap["timeouts"]
+                                + snap["failed"] + snap["queue_depth"]
+                                + snap["in_flight"])
+
+
+# -- crash failover (manual mode, zero threads) -------------------------------
+
+
+def test_crash_fails_over_to_peer():
+    clk = FakeClock()
+    core = _core(clk)
+
+    def crash(bucket, payloads):
+        raise ReplicaCrashed("device lost")
+
+    pool = ReplicaPool(core, ReplicaPoolConfig(replicas=2, dispatch_budget=None),
+                       [crash, _ok], start=False)
+    t = core.submit(7, bucket="b")
+    assert pool.run_once(replica=0)  # crash: batch fails over, replica dies
+    assert pool.replicas[0].state == DEAD
+    assert pool.stats["crashes"] == 1
+    assert not t.done()  # failed over, not failed
+    assert pool.run_once()  # auto-picks the healthy peer
+    assert t.result(1) == ("fit", "b", 7)
+    assert core.stats["failovers"] == 1
+    assert core.stats["retries"] == 0  # replica failure burns NO retry budget
+    _conserved(core.snapshot())
+
+
+def test_all_replicas_dead_fails_queued_typed():
+    clk = FakeClock()
+    core = _core(clk)
+
+    def crash(bucket, payloads):
+        raise ReplicaCrashed("device lost")
+
+    pool = ReplicaPool(core, ReplicaPoolConfig(replicas=2, dispatch_budget=None),
+                       [crash, crash], start=False)
+    t1 = core.submit(1, bucket="b")
+    t2 = core.submit(2, bucket="b")
+    assert pool.run_once()
+    assert pool.run_once()
+    assert all(r.state == DEAD for r in pool.replicas)
+    # both tickets resolved with a typed error, never stranded
+    for t in (t1, t2):
+        assert t.done()
+        assert isinstance(t.error(), DispatchFailed)
+        assert isinstance(t.error().__cause__, ReplicaCrashed)
+    with pytest.raises(EngineClosed):
+        core.submit(3, bucket="b")
+    _conserved(core.snapshot())
+    assert core.snapshot()["queue_depth"] == 0
+
+
+def test_failover_budget_exhaustion_is_typed():
+    clk = FakeClock()
+    core = _core(clk, max_failovers=2)
+    pool = ReplicaPool(core, ReplicaPoolConfig(replicas=1, dispatch_budget=None),
+                       [_ok], start=False)
+    t = core.submit(1, bucket="b")
+    for i in range(3):  # budget 2: third requeue must fail, not loop forever
+        taken = core.take_batch()
+        assert taken is not None
+        core.requeue_batch(*taken, HungDispatch(f"hang {i}"))
+    assert t.done()
+    assert isinstance(t.error(), DispatchFailed)
+    assert "failover budget" in str(t.error())
+    assert core.stats["failovers"] == 2
+    _conserved(core.snapshot())
+    pool.close()
+
+
+# -- watchdog (manual arm/expire, FakeClock) ----------------------------------
+
+
+def test_watchdog_expiry_fails_over_and_discards_zombie(fake_clock):
+    core = _core(fake_clock)
+    pool = ReplicaPool(
+        core, ReplicaPoolConfig(replicas=2, dispatch_budget=2.0,
+                                suspect_threshold=1, quarantine_cooldown=5.0),
+        [_ok, _ok], start=False)
+    t = core.submit(3, bucket="b")
+    taken = core.take_batch()
+    rep0 = pool.replicas[0]
+    token = pool.arm_dispatch(rep0, *taken)  # dispatch "starts" and wedges
+    fake_clock.advance(1.0)
+    assert pool.expire_hung() == 0  # budget not yet crossed
+    fake_clock.advance(1.5)
+    assert pool.expire_hung() == 1  # crossed: batch failed over
+    assert rep0.state == QUARANTINED  # suspect_threshold=1
+    assert not t.done()
+    assert pool.run_once()  # healthy peer serves the failed-over batch
+    assert t.result(1) == ("fit", "b", 3)
+    # the wedged call finally returns: its entry is gone => zombie, discard
+    assert pool.disarm_dispatch(token) is False
+    assert pool.stats["watchdog_expiries"] == 1
+    _conserved(core.snapshot())
+
+
+def test_health_state_machine_full_cycle(fake_clock):
+    core = _core(fake_clock, max_retries=8)
+    fails = {"left": 2}
+
+    def flaky(bucket, payloads):
+        if fails["left"] > 0:
+            fails["left"] -= 1
+            raise RuntimeError("transient")
+        return _ok(bucket, payloads)
+
+    pool = ReplicaPool(
+        core, ReplicaPoolConfig(replicas=1, dispatch_budget=None,
+                                suspect_threshold=2, quarantine_cooldown=4.0),
+        [flaky], start=False)
+    rep = pool.replicas[0]
+    t = core.submit(1, bucket="b")
+    assert pool.run_once()  # failure 1
+    assert rep.state == SUSPECT
+    assert pool.run_once()  # failure 2 -> threshold
+    assert rep.state == QUARANTINED
+    assert not pool.run_once()  # benched: no serviceable replica
+    fake_clock.advance(4.0)
+    assert pool.run_once()  # healed to PROBATION, probe succeeds
+    assert rep.state == HEALTHY
+    assert pool.stats["heals"] == 1
+    assert t.result(1) == ("fit", "b", 1)
+    _conserved(core.snapshot())
+
+
+def test_probation_failure_requarantines(fake_clock):
+    core = _core(fake_clock, max_retries=8)
+    calls = {"n": 0}
+
+    def always_fail(bucket, payloads):
+        calls["n"] += 1
+        raise RuntimeError("still sick")
+
+    pool = ReplicaPool(
+        core, ReplicaPoolConfig(replicas=1, dispatch_budget=None,
+                                suspect_threshold=1, quarantine_cooldown=3.0),
+        [always_fail], start=False)
+    rep = pool.replicas[0]
+    core.submit(1, bucket="b")
+    assert pool.run_once()
+    assert rep.state == QUARANTINED
+    fake_clock.advance(3.0)
+    assert pool.run_once()  # PROBATION probe fails
+    assert rep.state == QUARANTINED  # straight back, no SUSPECT detour
+    assert pool.stats["quarantines"] == 2
+
+
+# -- threaded: hung dispatch expires on FakeClock, zero real sleeps ----------
+
+
+def test_threaded_hang_watchdog_failover(fake_clock):
+    release = threading.Event()
+    started = threading.Event()
+
+    def hang(bucket, payloads):
+        started.set()
+        release.wait(30)  # wedged until the test releases it
+        return _ok(bucket, payloads)
+
+    core = BatchingCore(None, BatchingConfig(max_batch=1, flush_interval=0.0,
+                                             max_retries=0),
+                        clock=fake_clock)
+    pool = ReplicaPool(
+        core, ReplicaPoolConfig(replicas=2, dispatch_budget=1.0,
+                                suspect_threshold=1,
+                                quarantine_cooldown=1000.0),
+        [hang, _ok], start=True)
+    try:
+        t = core.submit(5, bucket="b")
+        assert started.wait(5)  # replica 0 is now wedged inside dispatch
+        # the watchdog timer is armed before the seam is called; crossing it
+        # on the fake clock fails the batch over to replica 1 — the caller
+        # is never stranded behind the hang
+        deadline = time.monotonic() + 5
+        while time.monotonic() < deadline and not t.done():
+            fake_clock.advance(0.5)
+            time.sleep(0.01)  # scheduling yield only; timing is all fake
+        assert t.result(1) == ("fit", "b", 5)
+        assert pool.stats["watchdog_expiries"] == 1
+        assert pool.replicas[0].state == QUARANTINED
+    finally:
+        release.set()
+        pool.close(timeout=5)
+    assert pool.stats["zombie_results"] == 1  # late result discarded
+    _conserved(core.snapshot())
+
+
+# -- chaos matrix: seeded storm, manual mode, FakeClock ----------------------
+
+
+def test_chaos_matrix_core_conservation(chaos_seed):
+    """Seeded random fault schedule mixing dispatch exceptions, per-request
+    rejections, partial batches and replica crashes across 3 buckets and 2
+    replicas: every ticket resolves to its exact payload or a typed
+    ServeError, the ledger balances, and nothing is stranded."""
+    clk = FakeClock()
+    chaos = [ChaosDispatcher(_ok, chaos_seed + i,
+                             weights={"exc": 2, "reject": 2, "partial": 1,
+                                      "crash": 1},
+                             fault_rate=0.35, max_faults=10)
+             for i in range(2)]
+    core = BatchingCore(None, BatchingConfig(
+        max_batch=4, max_queue=64, flush_interval=0.2, max_retries=3,
+        max_failovers=4, breaker_threshold=4, breaker_cooldown=2.0),
+        clock=clk)
+    pool = ReplicaPool(core, ReplicaPoolConfig(
+        replicas=2, dispatch_budget=None, suspect_threshold=2,
+        quarantine_cooldown=1.0), chaos, start=False)
+
+    rng = random.Random(chaos_seed)
+    tickets = []
+    submit_errors = 0
+    for i in range(40):
+        bucket = rng.choice(["A", "B", "C"])
+        try:
+            tickets.append((i, bucket, core.submit(i, bucket=bucket)))
+        except (BucketQuarantined, EngineClosed):
+            submit_errors += 1
+        if rng.random() < 0.6:
+            pool.run_once()
+        clk.advance(rng.random() * 0.3)
+
+    # drain: advance through cooldowns until every budget path terminates
+    for _ in range(400):
+        progressed = pool.run_once()
+        snap = core.snapshot()
+        if (not progressed and snap["queue_depth"] == 0
+                and snap["in_flight"] == 0):
+            break
+        clk.advance(0.5)
+    snap = core.snapshot()
+    assert snap["queue_depth"] == 0 and snap["in_flight"] == 0
+
+    for i, bucket, t in tickets:  # zero stranded tickets
+        assert t.done(), f"request {i} stranded (CHAOS_SEED={chaos_seed})"
+        if t.error() is None:
+            assert t.result(0) == ("fit", bucket, i)  # exact, uncorrupted
+        else:
+            assert isinstance(t.error(), ServeError)
+    _conserved(snap)
+    assert snap["submitted"] == len(tickets) + submit_errors
+
+
+# -- engine-level chaos storm: all five faults, real fits, FakeClock ---------
+
+
+def _gen(p, n, seed):
+    return sem.generate(sem.SemSpec(p=p, n=n, seed=seed))["x"]
+
+
+def test_engine_chaos_storm_bit_identical(chaos_seed):
+    """One storm mixing every fault kind — dispatch exceptions, NaN-style
+    rejections, partial batches, hangs and a replica crash — against the
+    real AsyncLingamEngine with a 3-replica pool on FakeClock. Every
+    delivered fit is bit-identical to a dedicated fit; every other ticket
+    carries a typed error; the ledger balances."""
+    real = lambda bucket, payloads: dispatch_bucket(  # noqa: E731
+        payloads, bucket[0], bucket[1], CFG, SCFG)
+    chaos = [ChaosDispatcher(real, chaos_seed + 100 + i,
+                             weights={"exc": 2, "reject": 2, "partial": 1,
+                                      "hang": 1, "crash": 1},
+                             fault_rate=0.3, max_faults=6)
+             for i in range(3)]
+    clk = FakeClock()
+    eng = AsyncLingamEngine(
+        CFG, SCFG, batch_cfg=BatchingConfig(
+            max_batch=4, max_queue=64, flush_interval=0.05, max_retries=2,
+            max_failovers=4),
+        clock=clk, dispatch=chaos, start=True,
+        pool_cfg=ReplicaPoolConfig(replicas=3, dispatch_budget=1.0,
+                                   suspect_threshold=2,
+                                   quarantine_cooldown=0.5))
+    try:
+        datasets = [_gen(6 + (i % 3), 60 + 10 * (i % 2), seed=200 + i)
+                    for i in range(10)]
+        tickets = [eng.submit(x) for x in datasets]
+        # degenerate data never reaches the queue: typed reject at submit
+        bad = datasets[0].copy()
+        bad[0, 0] = np.nan
+        with pytest.raises(ValueError):
+            eng.submit(bad)
+
+        deadline = time.monotonic() + 120
+        while time.monotonic() < deadline:
+            if all(t.done() for t in tickets):
+                break
+            clk.advance(0.25)  # flush aging, watchdog budgets, cooldowns
+            time.sleep(0.01)  # scheduling yield; no timing depends on it
+        for ev in chaos:
+            ev.release_all()
+        assert all(t.done() for t in tickets), \
+            f"stranded tickets (CHAOS_SEED={chaos_seed})"
+
+        delivered = failed = 0
+        for x, t in zip(datasets, tickets):
+            if t.error() is None:
+                delivered += 1
+                assert t.result(0).order == fit(x, CFG)[0].order
+            else:
+                failed += 1
+                assert isinstance(t.error(), ServeError)
+        stats = eng.stats()
+        assert stats["invalid_datasets"] == 1
+        assert stats["delivered"] == delivered
+        assert stats["failed"] + stats["timeouts"] == failed
+        assert stats["submitted"] == (stats["admitted"] + stats["shed"]
+                                      + stats["rejected"]
+                                      + stats["quarantined"])
+        assert stats["admitted"] == (stats["delivered"] + stats["timeouts"]
+                                     + stats["failed"] + stats["queue_depth"]
+                                     + stats["in_flight"])
+    finally:
+        for ev in chaos:
+            ev.release_all()
+        eng.close(timeout=10)
+
+
+def test_chaos_schedule_is_reproducible(chaos_seed):
+    a = ChaosDispatcher(_ok, chaos_seed, weights={"exc": 1, "reject": 1},
+                        fault_rate=0.5)
+    b = ChaosDispatcher(_ok, chaos_seed, weights={"exc": 1, "reject": 1},
+                        fault_rate=0.5)
+    for d in (a, b):
+        for i in range(50):
+            try:
+                d("bkt", [i])
+            except RuntimeError:
+                pass
+    assert a.injected == b.injected and a.injected  # same seed, same storm

@@ -57,7 +57,7 @@ def _ref_order(i: int) -> tuple:
 
 def _assert_conserved(stats):
     assert stats["submitted"] == (stats["admitted"] + stats["shed"]
-                                  + stats["rejected"])
+                                  + stats["rejected"] + stats["quarantined"])
     assert stats["admitted"] == (stats["delivered"] + stats["timeouts"]
                                  + stats["failed"] + stats["queue_depth"]
                                  + stats["in_flight"])
@@ -192,3 +192,75 @@ def test_engine_storm_bit_identical_and_conserved(plan, priorities, max_queue,
     _assert_conserved(stats)
     assert sum(b["requests"] for b in stats["buckets"].values()) \
         == stats["admitted"]
+
+
+# ---------------------------------------------------------------------------
+# chaos storms: randomized fault schedules through the replica pool
+# ---------------------------------------------------------------------------
+
+
+@STORM_SETTINGS
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_reqs=st.integers(5, 40),
+    fault_rate=st.floats(0.1, 0.6),
+    replicas=st.integers(1, 3),
+    breaker_threshold=st.sampled_from([0, 3, 5]),
+)
+def test_chaos_storm_every_ticket_resolves(seed, n_reqs, fault_rate,
+                                           replicas, breaker_threshold):
+    """Hypothesis-drawn storms through a ``ReplicaPool``: arbitrary seeds,
+    fault rates, replica counts and breaker settings, mixing dispatch
+    exceptions, per-request rejections, partial batches and replica crashes
+    in one schedule. Invariants: every ticket resolves to its exact payload
+    or a typed ``ServeError``, the ledger balances, zero stranded work."""
+    import random
+
+    from repro.serve.batching import BucketQuarantined, EngineClosed
+    from repro.serve.replica import ChaosDispatcher, ReplicaPool, \
+        ReplicaPoolConfig
+
+    clk = FakeClock()
+    ident = lambda bucket, payloads: list(payloads)  # noqa: E731
+    chaos = [ChaosDispatcher(ident, seed + i,
+                             weights={"exc": 2, "reject": 2, "partial": 1,
+                                      "crash": 1},
+                             fault_rate=fault_rate, max_faults=12)
+             for i in range(replicas)]
+    core = BatchingCore(None, BatchingConfig(
+        max_batch=3, max_queue=64, flush_interval=0.2, max_retries=2,
+        max_failovers=3, breaker_threshold=breaker_threshold,
+        breaker_cooldown=1.5), clock=clk)
+    pool = ReplicaPool(core, ReplicaPoolConfig(
+        replicas=replicas, dispatch_budget=None, suspect_threshold=2,
+        quarantine_cooldown=1.0), chaos, start=False)
+
+    rng = random.Random(seed)
+    tickets, submit_errors = [], 0
+    for i in range(n_reqs):
+        bucket = rng.choice(["A", "B"])
+        try:
+            tickets.append((i, bucket, core.submit(i, bucket=bucket)))
+        except (BucketQuarantined, EngineClosed):
+            submit_errors += 1
+        if rng.random() < 0.6:
+            pool.run_once()
+        clk.advance(rng.random() * 0.3)
+    for _ in range(400):
+        progressed = pool.run_once()
+        snap = core.snapshot()
+        if (not progressed and snap["queue_depth"] == 0
+                and snap["in_flight"] == 0):
+            break
+        clk.advance(0.5)
+
+    snap = core.snapshot()
+    assert snap["queue_depth"] == 0 and snap["in_flight"] == 0
+    for i, bucket, t in tickets:
+        assert t.done(), f"request {i} stranded (seed={seed})"
+        if t.error() is None:
+            assert t.result(0) == i  # exact payload, never swapped
+        else:
+            assert isinstance(t.error(), ServeError)
+    _assert_conserved(snap)
+    assert snap["submitted"] == len(tickets) + submit_errors

@@ -1,0 +1,104 @@
+"""Admission guardrails (core/validate.py): every degenerate-input class is
+caught host-side with a typed error, clean data passes untouched, and the
+diagnostics survive through ``fit(validate=True)`` / engine submission."""
+
+import numpy as np
+import pytest
+
+from repro.core import sem
+from repro.core.paralingam import ParaLiNGAMConfig, fit
+from repro.core.validate import (
+    DatasetDiagnostics,
+    DatasetError,
+    require_valid,
+    validate_dataset,
+)
+
+CFG = ParaLiNGAMConfig(min_bucket=8)
+
+
+def _clean(p=6, n=80, seed=0):
+    return sem.generate(sem.SemSpec(p=p, n=n, seed=seed))["x"]
+
+
+def test_clean_dataset_passes():
+    x = _clean()
+    diag = validate_dataset(x)
+    assert diag.ok
+    assert (diag.p, diag.n) == x.shape
+    assert diag.nonfinite_cells == 0
+    assert diag.constant_rows == () and diag.duplicate_rows == ()
+    assert not diag.rank_deficient
+    assert diag.summary().endswith("ok")
+    assert require_valid(x) == diag  # no raise on clean data
+
+
+def test_nan_and_inf_cells_counted_with_rows():
+    x = _clean()
+    x[1, 3] = np.nan
+    x[4, 0] = np.inf
+    diag = validate_dataset(x)
+    assert diag.nonfinite_cells == 2
+    assert not diag.ok
+    assert "non-finite" in diag.summary()
+    assert "[1, 4]" in diag.summary()  # offending variables are named
+
+
+def test_constant_row_detected():
+    x = _clean()
+    x[2, :] = 7.5
+    diag = validate_dataset(x)
+    assert diag.constant_rows == (2,)
+    assert "zero-variance" in diag.summary()
+
+
+def test_duplicate_rows_detected_and_optional():
+    x = _clean()
+    x[5, :] = x[1, :]
+    diag = validate_dataset(x)
+    assert diag.duplicate_rows == (5,)  # the later copy, not the original
+    assert "unidentifiable" in diag.summary()
+    assert validate_dataset(x, check_duplicates=False).ok
+
+
+def test_rank_deficiency_p_greater_than_n():
+    diag = validate_dataset(_clean(p=8, n=80)[:, :5])
+    assert diag.rank_deficient
+    assert "rank-deficient" in diag.summary()
+
+
+def test_wrong_ndim_and_tiny_shapes():
+    assert not validate_dataset(np.zeros(5)).ok
+    assert not validate_dataset(np.zeros((2, 2, 2))).ok
+    assert not validate_dataset(np.zeros((3, 1))).ok  # n < 2
+
+
+def test_all_issues_reported_at_once():
+    x = _clean(p=4, n=3)[:, :3]  # rank-deficient
+    x[0, :] = 1.0  # constant
+    x[2, :] = x[1, :]  # duplicate
+    diag = validate_dataset(x)
+    assert len(diag.issues) == 3  # not just the first failure
+
+
+def test_require_valid_raises_typed_with_diagnostics():
+    x = _clean()
+    x[0, 0] = np.nan
+    with pytest.raises(DatasetError) as ei:
+        require_valid(x)
+    assert isinstance(ei.value, ValueError)  # typed subclass, still a VE
+    assert isinstance(ei.value.diagnostics, DatasetDiagnostics)
+    assert ei.value.diagnostics.nonfinite_cells == 1
+
+
+def test_fit_validate_flag_gates_and_records():
+    x = _clean(p=6, n=60, seed=3)
+    res, _ = fit(x, CFG, validate=True)
+    assert res.diagnostics is not None and res.diagnostics.ok
+    bad = x.copy()
+    bad[0, 0] = np.inf
+    with pytest.raises(DatasetError):
+        fit(bad, CFG, validate=True)
+    res2, _ = fit(x, CFG)  # default: no validation, no diagnostics
+    assert res2.diagnostics is None
+    assert res2.order == res.order  # validation never perturbs the fit
