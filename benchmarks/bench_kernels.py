@@ -111,6 +111,57 @@ def run(smoke: bool = False):
         f"vs_host={us_host / us_scan:.2f}x;dispatches_per_fit=1",
         p=pe, n=ne, path="device_scan")
 
+    # (e) batched one-dispatch scoring (the fit_batch hot loop): vmapped
+    # fused triangular path vs vmapped square path at batch sizes 8/32 —
+    # the XLA-native contenders of kernels.ops.score_batch (the Pallas
+    # route itself only times meaningfully on TPU).
+    pb, nb = (16, 512) if smoke else (64, 1024)
+    for bsz in (8, 32):
+        xb = jax.vmap(normalize)(
+            jnp.asarray(rng.standard_normal((bsz, pb, nb)), jnp.float32)
+        )
+        cb = jax.vmap(cov_matrix)(xb)
+        mb = jnp.ones((bsz, pb), bool)
+        bk = min(16, pb)
+        us_b = time_fns_interleaved(
+            {
+                "square": jax.jit(jax.vmap(
+                    lambda x, c, m: dense_scores(x, c, m, block_j=32)[0]
+                )),
+                "fused": jax.jit(jax.vmap(
+                    lambda x, c, m: fused_scores(x, c, m, block=bk)
+                )),
+            },
+            xb, cb, mb, iters=iters,
+        )
+        us_bsq, us_bfu = us_b["square"], us_b["fused"]
+        flops = bsz * _score_flops(pb, nb)
+        row(f"batchkern_square_b{bsz}_p{pb}_n{nb}", us_bsq,
+            f"cpu_gflops={flops / (us_bsq * 1e-6) / 1e9:.1f}",
+            batch=bsz, p=pb, n=nb, path="vmap_square")
+        row(f"batchkern_fused_vs_square_b{bsz}_p{pb}_n{nb}", us_bfu,
+            f"vs_square={us_bsq / us_bfu:.2f}x;"
+            f"cpu_gflops={flops / (us_bfu * 1e-6) / 1e9:.1f};block={bk}",
+            batch=bsz, p=pb, n=nb, block=bk, path="vmap_fused_tri")
+
+    # (e') batched Pallas grid accounting (TPU-side, analytic): the batch
+    # axis is a pure leading grid axis — per-tile VMEM and bytes are those
+    # of the single-dataset fused kernel, so arithmetic intensity is flat in
+    # batch while the grid (and HBM traffic amortization of the prefetched
+    # scalars/maps) scales linearly.
+    for bsz in (8, 32):
+        b, bn = 8, 512
+        tiles = bsz * tri_tile_count(pb, b)
+        bytes_tile = (2 * b * bn + b * b) * 4
+        flops_tile = 2 * b * b * bn * FLOPS_PER_ELEM
+        row(
+            f"batchkern_blockspec_b{bsz}_blk{b}_bn{bn}", 0.0,
+            f"grid_tiles={tiles};"
+            f"intensity_flops_per_byte={flops_tile / bytes_tile:.1f};"
+            f"hbm_out_bytes={bsz * pb * 4}",
+            batch=bsz, p=pb, block=b, block_n=bn, path="batched_fused_tri",
+        )
+
     # (d) Pallas BlockSpec accounting (TPU-side, analytic):
     for bi, bj, bn in ((8, 8, 512), (8, 16, 512), (16, 16, 256), (32, 8, 256)):
         vmem = (bi * bn + bj * bn + 3 * bi * bj + bi * bj * bn) * 4

@@ -68,6 +68,7 @@ import sys
 # name prefix -> ratio metric guarded for that row family (higher is better)
 GUARDED = {
     "score_fused_vs_square": "speedup",
+    "batchkern_": "vs_square",
     "e2e_scan": "vs_host",
     "scanthr_": "saved_vs_serial",
     "fig4_scanthr_": "vs_dense_host",

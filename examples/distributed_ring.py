@@ -51,6 +51,8 @@ from repro.dist.ring_order import causal_order_ring
 from jax.sharding import Mesh
 
 ring_mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("ring", "model"))
+# score_backend="pallas" would compute each shard's entropy moments with the
+# moments-emitting kernel; the raw sums feed the same cross-shard pmean.
 cfg = ParaLiNGAMConfig(ring=True, min_bucket=8)
 res_scan = causal_order_scan(data["x"], ParaLiNGAMConfig(min_bucket=8))
 res_ring = causal_order_ring(data["x"], cfg, mesh=ring_mesh)

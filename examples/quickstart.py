@@ -25,3 +25,14 @@ print(
 )
 err = np.abs(b_est - data["b_true"]).max()
 print(f"max |B_est - B_true| = {err:.3f}")
+
+# 3. Pick the scoring formulation with score_backend: "auto" (default)
+# resolves to the fused Pallas kernel on TPU and the XLA oracle elsewhere;
+# "xla" | "xla_fused" | "pallas" | "pallas_fused" force one. All four return
+# the same order — the kernels emit raw moment sums finalized by the same
+# jnp entropy epilogue (kernels/ops.py documents the contract).
+result_k, _ = fit(
+    data["x"],
+    ParaLiNGAMConfig(method="dense", score_backend="pallas_fused"),
+)
+print("pallas_fused order matches:", result_k.order == result.order)

@@ -23,6 +23,9 @@ shapes = [(8, 300), (7, 256), (10, 400), (12, 128), (9, 333), (16, 512)]
 datasets = [generate(SemSpec(p=p, n=n, seed=i))["x"]
             for i, (p, n) in enumerate(shapes)]
 
+# score_backend="auto" (the default) picks the fused Pallas kernel on TPU
+# and the XLA oracle elsewhere; engine.stats()["auto_downgrade"] reports
+# how many dispatches resolved off-kernel, and ["kernel_bypass"] must stay 0.
 engine = AsyncLingamEngine(
     ParaLiNGAMConfig(min_bucket=8),
     LingamServeConfig(min_p_bucket=8, min_n_bucket=64),

@@ -20,3 +20,22 @@ from repro.dist import compat as _compat
 
 _compat.install()
 del _compat
+
+# Stable public surface. These five names (plus __version__) are the
+# supported API; everything else is internal and may move between releases.
+from repro.core.paralingam import (  # noqa: E402
+    ParaLiNGAMConfig,
+    ParaLiNGAMResult,
+    fit,
+    fit_batch,
+)
+from repro.serve.async_engine import AsyncLingamEngine  # noqa: E402
+
+__all__ = [
+    "AsyncLingamEngine",
+    "ParaLiNGAMConfig",
+    "ParaLiNGAMResult",
+    "__version__",
+    "fit",
+    "fit_batch",
+]

@@ -28,14 +28,25 @@ from repro.core.entropy import entropy_from_moments, log_cosh, u_exp_moment
 
 
 def residual_entropy_block(xn, c_cols, xj, psum_axis: str | None = None,
-                           n_valid=None):
+                           n_valid=None, backend: str = "xla"):
     """HR block for all rows of ``xn: (p, n)`` against ``xj: (bj, n)`` with
     correlations ``c_cols: (p, bj)``. Returns (p, bj).
 
     ``psum_axis`` names a mesh axis the samples axis is sharded over (see
     :func:`stream_entropy`): the block math runs on the local n-shard and the
     moments are pmean'd before the entropy epilogue. ``n_valid`` as in
-    :func:`stream_moments` (zero-padded sample columns)."""
+    :func:`stream_moments` (zero-padded sample columns). ``backend``
+    ``"pallas"``/``"pallas_fused"`` computes the raw moment sums with the
+    moments-emitting Pallas kernel (``kernels.ops.pairwise_moments``) and
+    runs the same jnp finalize — because the kernel emits *sums*, not
+    entropies, both seams (``psum_axis`` and ``n_valid``) compose with it
+    unchanged (:func:`finalize_moments`)."""
+    if backend in ("pallas", "pallas_fused"):
+        from repro.kernels import ops as kops
+
+        m1_sum, m2_sum = kops.pairwise_moments(xn, xj, c_cols)
+        den = _sample_count(n_valid, xj.shape[-1])
+        return finalize_moments(m1_sum, m2_sum, den, psum_axis=psum_axis)
     denom = jnp.sqrt(jnp.maximum(1.0 - jnp.square(c_cols), VAR_EPS))
     # u: (p, bj, n) — the big intermediate the Pallas kernel avoids spilling.
     u = (xn[:, None, :] - c_cols[:, :, None] * xj[None, :, :]) / denom[:, :, None]
@@ -65,6 +76,28 @@ def stream_moments(u, n_valid=None):
         m1 = jnp.sum(log_cosh(u), axis=-1) / den
         m2 = jnp.sum(u_exp_moment(u), axis=-1) / den
     return m1, m2
+
+
+def finalize_moments(m1_sum, m2_sum, den, psum_axis: str | None = None):
+    """Entropy epilogue over raw moment *sums* — the finalize half of the
+    moments-emitting kernel contract (``kernels/ops.py``).
+
+    The Pallas kernels accumulate ``sum(log cosh u)`` / ``sum(u exp(-u^2/2))``
+    over their sample tiles and emit the raw sums; this helper turns them into
+    entropies: divide by the traced valid count ``den`` (the
+    :func:`~repro.core.covariance._sample_count` contract — padded sample
+    columns contribute zero to the sums, so the denominator alone carries the
+    ``n_valid`` seam), optionally ``pmean`` across a sample-sharded mesh axis
+    (each shard's sum/local-count is its local mean; equal shards make the
+    pmean the global mean), then apply the nonlinear Hyvarinen formula. The
+    nonlinearity stays out of the kernels precisely so this combine is legal.
+    """
+    m1 = m1_sum / den
+    m2 = m2_sum / den
+    if psum_axis is not None:
+        m1 = jax.lax.pmean(m1, psum_axis)
+        m2 = jax.lax.pmean(m2, psum_axis)
+    return entropy_from_moments(m1, m2)
 
 
 def stream_entropy(u, psum_axis: str | None = None, n_valid=None):

@@ -69,6 +69,34 @@ from repro.core.pairwise import residual_entropy_matrix as _hr_jnp
 from repro.utils.shapes import next_pow2
 
 
+def _legacy_backend(score_backend: str, use_kernel, fused, caller: str) -> str:
+    """One-release compatibility shim: map the retired ``use_kernel``/
+    ``fused`` flag pair onto the ``score_backend`` enum (the 2x2 is exactly
+    the four concrete backends). Mixing the old and new spellings is
+    ambiguous and refused rather than guessed."""
+    if use_kernel is None and fused is None:
+        return score_backend
+    warnings.warn(
+        f"{caller}(use_kernel=..., fused=...) is deprecated; use "
+        "score_backend='xla'|'xla_fused'|'pallas'|'pallas_fused' (or leave "
+        "'auto'). The legacy flags will be removed next release.",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+    if score_backend != "auto":
+        raise ValueError(
+            "pass either score_backend or the deprecated use_kernel/fused "
+            f"flags, not both (got score_backend={score_backend!r}, "
+            f"use_kernel={use_kernel}, fused={fused})"
+        )
+    return {
+        (False, False): "xla",
+        (False, True): "xla_fused",
+        (True, False): "pallas",
+        (True, True): "pallas_fused",
+    }[(bool(use_kernel), bool(fused))]
+
+
 @dataclass(frozen=True)
 class ParaLiNGAMConfig:
     method: str = "dense"  # "dense" | "threshold" | "scan"
@@ -80,8 +108,15 @@ class ParaLiNGAMConfig:
     #   takes precedence over ``method``. Incompatible with ``threshold``.
     # dense path
     block_j: int = 32  # j-block for the HR matrix (bounds the (p,bj,n) buffer)
-    use_kernel: bool = False  # route scoring through the Pallas kernels (interpret on CPU)
-    fused: bool = False  # fused triangular score path (no p x p HR round-trip)
+    score_backend: str = "auto"  # "xla" | "xla_fused" | "pallas" |
+    #   "pallas_fused" | "auto" — which formulation scores the comparison
+    #   matrix (``kernels.ops.SCORE_BACKENDS``). ``xla*`` are the jnp
+    #   oracles (square / fused triangular); ``pallas*`` the kernel routes
+    #   (interpret-mode on CPU); ``auto`` resolves once per dispatch in
+    #   ``kernels.ops.select_backend`` (fused kernel on TPU, square oracle
+    #   elsewhere). Unknown names raise ``kernels.ops.BackendUnavailable``.
+    use_kernel: bool | None = None  # DEPRECATED -> score_backend ("pallas*")
+    fused: bool | None = None  # DEPRECATED -> score_backend ("*_fused")
     # threshold path (paper Sections 3.2-3.3)
     threshold: bool = False  # method="scan": run the threshold state machine
     #   inside the device-resident outer loop (one dispatch, thresholded
@@ -95,6 +130,16 @@ class ParaLiNGAMConfig:
     bucket: bool = True
     min_bucket: int = 32
     dtype: jnp.dtype = jnp.float32
+
+    def __post_init__(self):
+        if self.use_kernel is None and self.fused is None:
+            return
+        object.__setattr__(
+            self,
+            "score_backend",
+            _legacy_backend(self.score_backend, self.use_kernel, self.fused,
+                            "ParaLiNGAMConfig"),
+        )
 
 
 @dataclass
@@ -124,41 +169,55 @@ class ParaLiNGAMResult:
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("block_j", "use_kernel", "fused"))
-def find_root_dense(xn, c, mask, block_j: int = 32, use_kernel: bool = False,
-                    fused: bool = False, n_valid=None):
-    """One-shot masked dense evaluation. Returns (root_idx, scores).
-
-    ``fused=True`` routes scoring through the fused triangular path (each
-    unordered block pair evaluated once, messaging credit applied in the same
-    pass, no p x p HR intermediate): the Pallas kernel when ``use_kernel``,
-    the blocked jnp formulation otherwise. Identical scores to the square
-    path up to f32 summation order.
-
-    ``n_valid`` (the batched-fit sample-padding seam, see
-    ``pairwise.stream_moments``) forces the jnp formulation even under
-    ``use_kernel`` — the Pallas kernels reduce over the static tile width and
-    have no masked-mean variant yet (``kernels/ops.py`` documents the seam)."""
-    use_kernel = use_kernel and n_valid is None
-    if fused:
-        if use_kernel:
-            from repro.kernels import ops as kops
-
-            s = kops.score_vector(xn, c, mask)
-        else:
-            s = fused_scores(xn, c, mask, block=min(block_j, xn.shape[0]),
-                             n_valid=n_valid)
-        return jnp.argmin(s), s
-    hx = row_entropies(xn, mask, n_valid=n_valid)
-    if use_kernel:
+@partial(jax.jit, static_argnames=("block_j", "backend"))
+def _find_root_dense_impl(xn, c, mask, block_j: int, backend: str,
+                          n_valid=None):
+    """Concrete-backend dense evaluation (``backend`` already resolved —
+    never ``"auto"`` here). All four backends honor both padding seams:
+    ``n_valid`` rides into the kernels as the scalar-prefetched finalize
+    denominator (raw moment sums are exact under zero-padded columns), into
+    the jnp oracles as the ``stream_moments`` denominator."""
+    if backend == "pallas_fused":
         from repro.kernels import ops as kops
 
-        hr = kops.residual_entropy_matrix(xn, c)
+        s = kops.score_vector(xn, c, mask, n_valid=n_valid)
+        return jnp.argmin(s), s
+    if backend == "xla_fused":
+        s = fused_scores(xn, c, mask, block=min(block_j, xn.shape[0]),
+                         n_valid=n_valid)
+        return jnp.argmin(s), s
+    hx = row_entropies(xn, mask, n_valid=n_valid)
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+
+        hr = kops.residual_entropy_matrix(xn, c, n_valid=n_valid)
     else:
         hr = _hr_jnp(xn, c, block_j, n_valid=n_valid)
     stat = pair_stat_matrix(hx, hr)
     s = scores_from_stats(stat, mask)
     return jnp.argmin(s), s
+
+
+def find_root_dense(xn, c, mask, block_j: int = 32, use_kernel=None,
+                    fused=None, n_valid=None, *, score_backend: str = "auto"):
+    """One-shot masked dense evaluation. Returns (root_idx, scores).
+
+    ``score_backend`` selects the formulation (``kernels.ops.SCORE_BACKENDS``):
+    the square jnp oracle (``"xla"``), the fused triangular jnp path
+    (``"xla_fused"`` — each unordered block pair evaluated once, messaging
+    credit applied in the same pass, no p x p HR intermediate), or the Pallas
+    kernel routes (``"pallas"``/``"pallas_fused"``; interpret mode off-TPU).
+    All produce identical scores up to f32 summation order, on padded
+    (``n_valid``, the ``pairwise.stream_moments`` seam) and unpadded data
+    alike — the old silent kernel->jnp downgrade on ``n_valid`` dispatches is
+    gone. ``use_kernel``/``fused`` are the deprecated flag spellings."""
+    backend = _legacy_backend(score_backend, use_kernel, fused,
+                              "find_root_dense")
+    from repro.kernels import ops as kops
+
+    backend = kops.select_backend(backend, n_valid=n_valid)
+    return _find_root_dense_impl(xn, c, mask, block_j=block_j,
+                                 backend=backend, n_valid=n_valid)
 
 
 # ---------------------------------------------------------------------------
@@ -339,7 +398,7 @@ def _scan_stages(p: int, min_bucket: int) -> list[tuple[int, int]]:
 
 
 def _scan_order_impl(xn, c, gamma0, gamma_growth, block_j: int = 32,
-                     use_kernel: bool = False, fused: bool = False,
+                     backend: str = "xla",
                      min_bucket: int = 32, threshold: bool = False,
                      chunk: int = 16, max_rounds: int = 100_000,
                      mask0=None, n_valid=None):
@@ -414,9 +473,9 @@ def _scan_order_impl(xn, c, gamma0, gamma_growth, block_j: int = 32,
                     chunk=min(chunk, m), max_rounds=max_rounds, n_valid=n_valid,
                 )
             else:
-                root_l, _ = find_root_dense(
+                root_l, _ = _find_root_dense_impl(
                     xb, cb, ml, block_j=min(block_j, m),
-                    use_kernel=use_kernel, fused=fused, n_valid=n_valid,
+                    backend=backend, n_valid=n_valid,
                 )
                 r = jnp.sum(ml).astype(cdtype)  # live rows this iteration
                 comps = r * (r - 1) // 2
@@ -459,7 +518,7 @@ def _scan_order(xn, c, gamma0, gamma_growth, **kw):
         _scan_order_jit = jax.jit(
             _scan_order_impl,
             static_argnames=(
-                "block_j", "use_kernel", "fused", "min_bucket",
+                "block_j", "backend", "min_bucket",
                 "threshold", "chunk", "max_rounds",
             ),
             donate_argnums=(0, 1) if jax.default_backend() != "cpu" else (),
@@ -518,6 +577,9 @@ def causal_order_scan(x, config: ParaLiNGAMConfig | None = None) -> ParaLiNGAMRe
     ``comparisons``/``rounds``/``per_iteration`` come from device-side
     counters measured inside the dispatch."""
     cfg = config or ParaLiNGAMConfig()
+    from repro.kernels import ops as kops
+
+    backend = kops.select_backend(cfg)
     x = jnp.asarray(x, cfg.dtype)
     p = x.shape[0]
     xn = normalize(x)
@@ -525,8 +587,8 @@ def causal_order_scan(x, config: ParaLiNGAMConfig | None = None) -> ParaLiNGAMRe
     order, comps_it, rounds_it, conv_it = _scan_order(
         xn, c,
         jnp.asarray(cfg.gamma0, cfg.dtype), jnp.asarray(cfg.gamma_growth, cfg.dtype),
-        block_j=min(cfg.block_j, p), use_kernel=cfg.use_kernel,
-        fused=cfg.fused, min_bucket=cfg.min_bucket,
+        block_j=min(cfg.block_j, p), backend=backend,
+        min_bucket=cfg.min_bucket,
         threshold=cfg.threshold, chunk=cfg.chunk, max_rounds=cfg.max_rounds,
     )
     return _result_from_counters(order, comps_it, rounds_it, conv_it, p,
@@ -542,6 +604,9 @@ def causal_order(x, config: ParaLiNGAMConfig | None = None) -> ParaLiNGAMResult:
         return causal_order_ring(x, cfg)
     if cfg.method == "scan":
         return causal_order_scan(x, cfg)
+    from repro.kernels import ops as kops
+
+    backend = kops.select_backend(cfg)
     x = jnp.asarray(x, cfg.dtype)
     p = x.shape[0]
 
@@ -583,9 +648,9 @@ def causal_order(x, config: ParaLiNGAMConfig | None = None) -> ParaLiNGAMResult:
             xb, cb, mb = xn, c, mask
 
         if cfg.method == "dense":
-            root_local, _ = find_root_dense(
+            root_local, _ = _find_root_dense_impl(
                 xb, cb, mb, block_j=min(cfg.block_j, xb.shape[0]),
-                use_kernel=cfg.use_kernel, fused=cfg.fused,
+                backend=backend,
             )
             iter_comps = r * (r - 1) // 2
             iter_rounds = 0
@@ -640,7 +705,7 @@ def causal_order(x, config: ParaLiNGAMConfig | None = None) -> ParaLiNGAMResult:
 
 def _pipeline_impl(x, gamma0, gamma_growth, n_valid, mask0, *,
                    adjacency: bool, threshold: bool, block_j: int,
-                   use_kernel: bool, fused: bool, min_bucket: int,
+                   backend: str, min_bucket: int,
                    chunk: int, max_rounds: int, prune_below: float):
     """The whole estimator as ONE traced pipeline over raw samples
     ``x: (p, n)``: normalize -> covariance -> staged causal-order scan ->
@@ -658,8 +723,8 @@ def _pipeline_impl(x, gamma0, gamma_growth, n_valid, mask0, *,
         xn = jnp.where(mask0[:, None], xn, 0.0)  # dead rows exactly zero
     c = cov_matrix(xn, n_valid=n_valid)
     order, comps_it, rounds_it, conv_it = _scan_order_impl(
-        xn, c, gamma0, gamma_growth, block_j=block_j, use_kernel=use_kernel,
-        fused=fused, min_bucket=min_bucket, threshold=threshold, chunk=chunk,
+        xn, c, gamma0, gamma_growth, block_j=block_j, backend=backend,
+        min_bucket=min_bucket, threshold=threshold, chunk=chunk,
         max_rounds=max_rounds, mask0=mask0, n_valid=n_valid,
     )
     if not adjacency:
@@ -693,25 +758,32 @@ def _pipeline_fn(batched: bool, rules, **static):
 
 
 # Host-side estimator dispatch counters, threaded up into the serving stats
-# surface (``serve.async_engine.AsyncLingamEngine.stats``). "kernel_bypass"
-# counts dispatches where ``use_kernel=True`` was silently dropped because
-# the ``n_valid``/mask padding contract forces the jnp formulation (the
-# Pallas kernels reduce over their static tile width — see kernels/ops.py).
-dispatch_stats: dict = {"kernel_bypass": 0}
-_kernel_bypass_warned = False
-# N submitter + dispatcher-replica threads all funnel through
-# _note_kernel_bypass; the += and the warn-once latch race without this
-# (lost increments under the GIL's bytecode-level interleaving).
+# surface (``serve.async_engine.AsyncLingamEngine.stats``).
+#
+#   "kernel_bypass"  — dispatches where a kernel backend was requested but a
+#     jnp formulation ran instead. Since the moments redesign every backend
+#     serves every seam (``n_valid``, masks, batching), so a bypass is a BUG,
+#     not a capability gap: nothing increments it anymore, and the engine
+#     suites assert it stays 0. The counter survives as the tripwire.
+#   "auto_downgrade" — dispatches where ``score_backend="auto"`` resolved to
+#     a jnp backend (off-TPU platform policy; see
+#     ``kernels.ops.select_backend``). Expected off accelerators; surfaced
+#     in ``AsyncLingamEngine.stats()`` so a deployment can tell "kernels
+#     were never requested" from "kernels silently unavailable". Replaces
+#     the old warn-once RuntimeWarning.
+dispatch_stats: dict = {"kernel_bypass": 0, "auto_downgrade": 0}
+# N submitter + dispatcher-replica threads all funnel through _bump_stat;
+# the += races without this (lost increments under the GIL's bytecode-level
+# interleaving).
 _dispatch_stats_mu = threading.Lock()
 
 
 def reset_dispatch_stats() -> None:
-    """Zero ``dispatch_stats`` and re-arm the warn-once latch (tests).
-    Thread-safe against concurrent dispatches."""
-    global _kernel_bypass_warned
+    """Zero ``dispatch_stats`` (tests). Thread-safe against concurrent
+    dispatches."""
     with _dispatch_stats_mu:
-        dispatch_stats["kernel_bypass"] = 0
-        _kernel_bypass_warned = False
+        for k in dispatch_stats:
+            dispatch_stats[k] = 0
 
 
 def dispatch_stats_snapshot() -> dict:
@@ -721,37 +793,28 @@ def dispatch_stats_snapshot() -> dict:
         return dict(dispatch_stats)
 
 
-def _note_kernel_bypass(cfg: ParaLiNGAMConfig, n_valid) -> None:
-    """Count (and warn once about) the silent kernel bypass: a config asking
-    for the Pallas route (``use_kernel=True``, typically with ``fused=True``)
-    is dispatched with ``n_valid`` sample padding, which ``find_root_dense``
-    silently downgrades to the jnp formulation. Before this counter the
-    bypass was invisible — a padded serving deployment could believe it was
-    benchmarking the kernel path."""
-    global _kernel_bypass_warned
-    if not cfg.use_kernel or n_valid is None:
-        return
+def _bump_stat(key: str, delta: int = 1) -> None:
+    """Thread-safe ``dispatch_stats`` increment."""
     with _dispatch_stats_mu:
-        dispatch_stats["kernel_bypass"] += 1
-        first = not _kernel_bypass_warned
-        _kernel_bypass_warned = True
-    if first:
-        warnings.warn(
-            "use_kernel=True (fused Pallas route) is bypassed for this "
-            "dispatch: n_valid/mask sample padding forces the jnp "
-            "formulation (kernels have no masked-mean variant yet — see "
-            "kernels/ops.py). fused=True still runs the jnp fused path. "
-            "Counted in paralingam.dispatch_stats['kernel_bypass']; this "
-            "warning fires once per process.",
-            RuntimeWarning,
-            stacklevel=3,
-        )
+        dispatch_stats[key] += delta
+
+
+def _note_backend(cfg: ParaLiNGAMConfig, backend: str) -> None:
+    """Record dispatch-routing telemetry for a resolved backend choice:
+    an ``"auto"`` request landing on a jnp formulation counts as an
+    auto-downgrade (platform policy, not an error — see
+    ``dispatch_stats``)."""
+    if cfg.score_backend == "auto" and backend.startswith("xla"):
+        _bump_stat("auto_downgrade")
 
 
 def _run_pipeline(x, cfg: ParaLiNGAMConfig, *, adjacency: bool, batched: bool,
                   n_valid=None, mask0=None, rules=None,
                   prune_below: float = 0.0):
-    _note_kernel_bypass(cfg, n_valid)
+    from repro.kernels import ops as kops
+
+    backend = kops.select_backend(cfg, n_valid=n_valid, batched=batched)
+    _note_backend(cfg, backend)
     # Same selection contract as the order drivers: the threshold state
     # machine runs for method="threshold", or method="scan" + cfg.threshold;
     # cfg.threshold stays ignored under method="dense" (ParaLiNGAMConfig).
@@ -762,7 +825,7 @@ def _run_pipeline(x, cfg: ParaLiNGAMConfig, *, adjacency: bool, batched: bool,
         batched, rules if batched else None,
         adjacency=adjacency,
         threshold=threshold,
-        block_j=cfg.block_j, use_kernel=cfg.use_kernel, fused=cfg.fused,
+        block_j=cfg.block_j, backend=backend,
         min_bucket=cfg.min_bucket, chunk=cfg.chunk, max_rounds=cfg.max_rounds,
         prune_below=prune_below,
     )
@@ -906,11 +969,13 @@ class CompiledFitBatch:
     n: int
     padded: bool  # compiled with the n_valid/mask seams (the serve path)
     cfg: ParaLiNGAMConfig
+    backend: str  # concrete score backend the executable was compiled with
     compiled: object  # jax.stages.Compiled
     compile_seconds: float  # what the pre-warm saved the first request
 
     def __call__(self, xs, n_valid=None, mask=None) -> BatchFitResult:
         cfg = self.cfg
+        _note_backend(cfg, self.backend)
         xs = jnp.asarray(xs, cfg.dtype)
         if xs.shape != (self.batch, self.p, self.n):
             raise ValueError(
@@ -925,7 +990,6 @@ class CompiledFitBatch:
                 nv = jnp.broadcast_to(nv, (self.batch,))
             mk = (jnp.ones((self.batch, self.p), bool)
                   if mask is None else jnp.asarray(mask, bool))
-            _note_kernel_bypass(cfg, nv)
             out = self.compiled(xs, g0, gg, nv, mk)
         else:
             if n_valid is not None or mask is not None:
@@ -958,6 +1022,9 @@ def aot_fit_batch(batch: int, p: int, n: int,
     if cfg.ring:
         raise ValueError("aot_fit_batch compiles the vmapped scan pipeline; "
                          "the ring driver has no batched form")
+    from repro.kernels import ops as kops
+
+    backend = kops.select_backend(cfg, batched=True)
     threshold = cfg.method == "threshold" or (
         cfg.method == "scan" and cfg.threshold
     )
@@ -965,7 +1032,7 @@ def aot_fit_batch(batch: int, p: int, n: int,
         True, rules,
         adjacency=True,
         threshold=threshold,
-        block_j=cfg.block_j, use_kernel=cfg.use_kernel, fused=cfg.fused,
+        block_j=cfg.block_j, backend=backend,
         min_bucket=cfg.min_bucket, chunk=cfg.chunk, max_rounds=cfg.max_rounds,
         prune_below=prune_below,
     )
@@ -978,7 +1045,8 @@ def aot_fit_batch(batch: int, p: int, n: int,
     compiled = fn.lower(x_s, g_s, g_s, nv_s, mk_s).compile()
     dt = time.perf_counter() - t0
     return CompiledFitBatch(batch=batch, p=p, n=n, padded=padded, cfg=cfg,
-                            compiled=compiled, compile_seconds=dt)
+                            backend=backend, compiled=compiled,
+                            compile_seconds=dt)
 
 
 def causal_order_batch(xs, config: ParaLiNGAMConfig | None = None, *,

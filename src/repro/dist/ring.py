@@ -117,21 +117,27 @@ def _flat_index(axes: tuple, sizes: tuple):
 
 
 def _block_stat(x_own, x_vis, c_block, hx_own, hx_vis,
-                sample_axis: str | None = None):
+                sample_axis: str | None = None, backend: str = "xla"):
     """I block between own rows (rows of the result) and visiting rows.
 
     ``c_block[i, j] = c[own_i, vis_j]``. Both residual entropies of each pair
     are computed here — HR[i, j] and HR[j, i] — which is what lets one
     evaluation credit both endpoints (messaging). With ``sample_axis`` the
     rows carry only this device's n-shard and the entropy moments pmean over
-    that axis (pairwise.stream_entropy)."""
-    hr_fwd = residual_entropy_block(x_own, c_block, x_vis, sample_axis)
-    hr_rev = residual_entropy_block(x_vis, c_block.T, x_own, sample_axis)
+    that axis. ``backend`` ``"pallas"``/``"pallas_fused"`` swaps the local
+    moment reduction for the moments-emitting Pallas kernel — because the
+    kernel exports raw (m1, m2) *sums*, the cross-shard pmean stays the same
+    plain moment mean (``pairwise.finalize_moments``), so kernel-fed rings
+    produce the same orders as the jnp-fed ones."""
+    hr_fwd = residual_entropy_block(x_own, c_block, x_vis, sample_axis,
+                                    backend=backend)
+    hr_rev = residual_entropy_block(x_vis, c_block.T, x_own, sample_axis,
+                                    backend=backend)
     return (hx_vis[None, :] - hx_own[:, None]) + (hr_fwd - hr_rev.T)
 
 
 def _ring_body(x_loc, c_loc, mask_loc, *, ring_axes: tuple, ring_sizes: tuple,
-               sample_axis: str | None = None):
+               sample_axis: str | None = None, backend: str = "xla"):
     """Per-device ring schedule. x_loc: (m, n_loc); c_loc: (m, p); mask: (m,).
 
     Returns the (m,) score shard (inf on dead rows). ``sample_axis`` names
@@ -155,7 +161,8 @@ def _ring_body(x_loc, c_loc, mask_loc, *, ring_axes: tuple, ring_sizes: tuple,
     # the antisymmetric stat is hr - hr.T (as in the dense path), so the
     # row-sum alone credits every ordered pair.
     c_intra = jax.lax.dynamic_slice_in_dim(c_loc, r_idx * m, m, axis=1)
-    hr = residual_entropy_block(x_loc, c_intra, x_loc, sample_axis)
+    hr = residual_entropy_block(x_loc, c_intra, x_loc, sample_axis,
+                                backend=backend)
     stat = pair_stat_matrix(hx_loc, hr)
     pm = mask_loc[:, None] & mask_loc[None, :] & ~jnp.eye(m, dtype=bool)
     score, _ = credit(stat, pm, jnp.asarray(True))
@@ -180,7 +187,7 @@ def _ring_body(x_loc, c_loc, mask_loc, *, ring_axes: tuple, ring_sizes: tuple,
         keep = jnp.asarray(process_pair(big_r, t, r_idx, src))
         c_vis = jax.lax.dynamic_slice_in_dim(c_loc, src * m, m, axis=1)
         stat = _block_stat(x_loc, pkt["x"], c_vis, hx_loc, pkt["hx"],
-                           sample_axis)
+                           sample_axis, backend=backend)
         pm = mask_loc[:, None] & pkt["mask"][None, :]
         fwd, rev = credit(stat, pm, keep)
         score = score + fwd
@@ -202,7 +209,8 @@ def _ring_body(x_loc, c_loc, mask_loc, *, ring_axes: tuple, ring_sizes: tuple,
 
 
 def ring_find_root(xn, c, mask, mesh, row_axes: tuple | None = None,
-                   unroll: bool = False, sample_axis: str | None = None):
+                   unroll: bool = False, sample_axis: str | None = None,
+                   score_backend: str = "auto"):
     """Distributed find-root. Returns ``(root_idx, scores)`` == dense.
 
     ``row_axes`` names the mesh axes the p rows shard over (ring axes);
@@ -216,9 +224,16 @@ def ring_find_root(xn, c, mask, mesh, row_axes: tuple | None = None,
     the shard count); ``sample_axis`` is dropped when n doesn't divide.
     ``unroll`` is accepted for signature parity with the dense path: the ring
     schedule is always a statically unrolled python loop (R is a mesh
-    constant).
+    constant). ``score_backend`` selects the per-shard moment reduction
+    (``kernels.ops.SCORE_BACKENDS``); both ``pallas*`` names map to the
+    moments-emitting square kernel — the fused triangular kernel finalizes
+    its scores in-kernel and therefore has nothing to psum, so the ring's
+    kernel route is always the raw-sum emitter + ``finalize_moments``.
     """
     del unroll
+    from repro.kernels import ops as kops
+
+    backend = kops.select_backend(score_backend)
     sizes = dict(mesh.shape)
     if row_axes is None:
         row_axes = tuple(a for a in ("pod", "data") if a in sizes)
@@ -248,7 +263,7 @@ def ring_find_root(xn, c, mask, mesh, row_axes: tuple | None = None,
     body = jax.shard_map(
         lambda x, cm, mk: _ring_body(
             x, cm, mk, ring_axes=row_axes, ring_sizes=ring_sizes,
-            sample_axis=sample_axis,
+            sample_axis=sample_axis, backend=backend,
         ),
         mesh=mesh,
         in_specs=(x_spec, P(row_axes, None), P(row_axes)),
@@ -259,7 +274,7 @@ def ring_find_root(xn, c, mask, mesh, row_axes: tuple | None = None,
     return jnp.argmin(scores), scores
 
 
-def ring_find_root_jit(mesh):
+def ring_find_root_jit(mesh, score_backend: str = "auto"):
     """jit-compiled ring find-root over *all* devices of ``mesh``.
 
     The (possibly multi-dim) mesh is flattened to a single ``ring`` axis so
@@ -270,6 +285,7 @@ def ring_find_root_jit(mesh):
 
     @jax.jit
     def fn(xn, c, mask):
-        return ring_find_root(xn, c, mask, flat, row_axes=("ring",))
+        return ring_find_root(xn, c, mask, flat, row_axes=("ring",),
+                              score_backend=score_backend)
 
     return fn

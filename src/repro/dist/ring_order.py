@@ -81,11 +81,15 @@ def ring_order_stages(p: int, min_bucket: int, r: int) -> list[tuple[int, int]]:
 
 @lru_cache(maxsize=None)
 def _make_ring_order_fn(mesh: Mesh, sample_axis: str | None, p: int, n: int,
-                        min_bucket: int):
+                        min_bucket: int, backend: str = "xla"):
     """Build the jitted staged ring driver for one (mesh, problem) shape.
 
-    Cached on the canonical mesh + static shape so repeated fits reuse the
-    compiled executable (jax Mesh hashes by device ids + axis names)."""
+    Cached on the canonical mesh + static shape (+ concrete score backend)
+    so repeated fits reuse the compiled executable (jax Mesh hashes by
+    device ids + axis names). ``backend`` ``"pallas"``/``"pallas_fused"``
+    feeds the ring bodies' entropy reductions from the moments-emitting
+    kernel; the psum seam is unchanged because the kernel exports raw
+    (m1, m2) sums (see ``dist/ring._block_stat``)."""
     big_r = mesh.shape["ring"]
     stages = ring_order_stages(p, min_bucket, big_r)
 
@@ -97,7 +101,7 @@ def _make_ring_order_fn(mesh: Mesh, sample_axis: str | None, p: int, n: int,
             # --- find root: messaging ring over the live blocks ---
             scores = _ring_body(
                 x_loc, c_loc, mk, ring_axes=("ring",), ring_sizes=(big_r,),
-                sample_axis=sample_axis,
+                sample_axis=sample_axis, backend=backend,
             )
             s_all = jax.lax.all_gather(scores, "ring", tiled=True)  # (m,)
             mk_all = jax.lax.all_gather(mk, "ring", tiled=True)
@@ -278,10 +282,14 @@ def causal_order_ring(x, config=None, mesh=None):
     if big_r & (big_r - 1):
         return causal_order_scan(x, cfg)
 
+    from repro.kernels import ops as kops
+
+    backend = kops.select_backend(cfg)
     xn = normalize(x)
     c = cov_matrix(xn)
     run = _make_ring_order_fn(
-        canon, sample_axis, p, n, next_pow2(max(cfg.min_bucket, 1))
+        canon, sample_axis, p, n, next_pow2(max(cfg.min_bucket, 1)),
+        backend=backend,
     )
     order = run(xn, c)
 

@@ -1,10 +1,10 @@
 """Pallas TPU kernel: fused triangular score pipeline.
 
-The square kernel (``pairwise_score.py``) computes HR[i, j] and HR[j, i] in
-*separate* grid tiles — every (x_i, x_j) block pair is loaded from HBM twice —
-and materializes the (p, p) HR intermediate in HBM before the antisymmetric
-stat and the messaging credit are formed by separate XLA ops. This kernel
-fuses the whole score pipeline:
+The square kernel (``pairwise_score.py``) emits the raw (m1, m2) moment sums
+of HR[i, j] and HR[j, i] in *separate* grid tiles — every (x_i, x_j) block
+pair is loaded from HBM twice — and leaves the antisymmetric stat and the
+messaging credit to the jnp epilogue. This kernel fuses the whole score
+pipeline:
 
   * **Triangular grid.** Tile t covers one unordered off-diagonal block pair
     (i < j) from static maps delivered by scalar prefetch; each (BI, BJ)
@@ -13,13 +13,26 @@ fuses the whole score pipeline:
     diagonal tiles are a vectorized jnp epilogue — O(p B n) work, a 1/nt
     fraction).
   * **Both directions per pass.** The same xi/xj/c loads feed the forward
-    and reverse residual-entropy moments (4 VMEM accumulators), halving HBM
-    read traffic relative to the square grid.
-  * **In-kernel scoring.** On the last sample block the entropy formula, the
-    antisymmetric stat I and the messaging credit min(0, ±I)^2 are applied in
-    VMEM, and both endpoints' partial scores are accumulated into a single
-    resident (nt, B) output — the kernel's HBM output shrinks from p^2 HR
-    entries to the p score entries.
+    and reverse residual-entropy moments (4 VMEM raw-sum accumulators),
+    halving HBM read traffic relative to the square grid.
+  * **In-kernel scoring with a prefetched denominator.** The accumulators
+    hold raw moment *sums* for the whole sample sweep; on the last sample
+    block they are divided by a **scalar-prefetched valid count** (the
+    ``n_valid`` seam — zero-padded samples contribute 0 to the sums, so the
+    traced denominator alone corrects the statistics), then the entropy
+    formula, the antisymmetric stat I and the messaging credit min(0, ±I)^2
+    are applied in VMEM. Both endpoints' partial scores accumulate into a
+    single resident (nt, B) output — the kernel's HBM output shrinks from
+    p^2 HR entries to the p score entries. This per-tile score contraction
+    is why the fused kernel finalizes in-kernel (its output is p-sized, not
+    p^2-sized); the square moments kernel is the one that exports raw sums
+    for cross-device combining.
+  * **Batched grid.** ``fused_score_batch`` prepends a dataset grid axis —
+    grid (B, T, nk), every BlockSpec gains a leading batch index, and the
+    prefetched valid-count vector is read at ``program_id(0)`` so each
+    dataset in the bucket uses its own denominator. ``jax.vmap`` of the
+    single-dataset entry lowers to the same leading-axis grid growth; both
+    routes are parity-tested against each other and the oracle.
 
 TPU considerations are as for the square kernel (BN multiple of 128, B
 multiple of 8, transcendental-bound -> VPU); the score output lives in one
@@ -37,7 +50,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.covariance import VAR_EPS
+from repro.core.covariance import VAR_EPS, _sample_count
 from repro.core.entropy import entropy_from_moments, log_cosh, u_exp_moment
 from repro.core.pairwise import fused_layout, tri_block_maps
 
@@ -54,11 +67,17 @@ def square_tile_count(p: int, block: int) -> int:
     return nt * nt
 
 
-def _fused_tri_kernel(n_true: int, nk: int, imap_ref, jmap_ref,
+def _fused_tri_kernel(nk: int, batched: bool, imap_ref, jmap_ref, den_ref,
                       xi_ref, xj_ref, c_ref, hxi_ref, hxj_ref, mi_ref, mj_ref,
                       s_ref, elc_f, exe_f, elc_r, exe_r):
-    t = pl.program_id(0)
-    k = pl.program_id(1)
+    if batched:
+        t = pl.program_id(1)
+        k = pl.program_id(2)
+        den = den_ref[pl.program_id(0)]
+    else:
+        t = pl.program_id(0)
+        k = pl.program_id(1)
+        den = den_ref[0]
 
     @pl.when(jnp.logical_and(t == 0, k == 0))
     def _init_scores():
@@ -71,14 +90,17 @@ def _fused_tri_kernel(n_true: int, nk: int, imap_ref, jmap_ref,
         elc_r[...] = jnp.zeros_like(elc_r)
         exe_r[...] = jnp.zeros_like(exe_r)
 
-    xi = xi_ref[...]  # (BI, BN)
-    xj = xj_ref[...]  # (BJ, BN)
-    cij = c_ref[...]  # (BI, BJ)
+    xi = xi_ref[...]  # (BI, BN); batched: (1, BI, BN)
+    xj = xj_ref[...]
+    cij = c_ref[...]
+    if batched:
+        xi, xj, cij = xi[0], xj[0], cij[0]
     inv = jax.lax.rsqrt(jnp.maximum(1.0 - cij * cij, VAR_EPS))[:, :, None]
     # Shared loads, both directions: u_f regresses x_i on x_j, u_r the
     # reverse — this is the half of the square kernel's HBM traffic.
     u_f = (xi[:, None, :] - cij[:, :, None] * xj[None, :, :]) * inv
     u_r = (xj[None, :, :] - cij[:, :, None] * xi[:, None, :]) * inv
+    # Raw sums only; the prefetched denominator is applied at finalize.
     elc_f[...] += jnp.sum(log_cosh(u_f), axis=-1)
     exe_f[...] += jnp.sum(u_exp_moment(u_f), axis=-1)
     elc_r[...] += jnp.sum(log_cosh(u_r), axis=-1)
@@ -86,21 +108,31 @@ def _fused_tri_kernel(n_true: int, nk: int, imap_ref, jmap_ref,
 
     @pl.when(k == nk - 1)
     def _finalize():
-        hr_f = entropy_from_moments(elc_f[...] / n_true, exe_f[...] / n_true)
-        hr_r = entropy_from_moments(elc_r[...] / n_true, exe_r[...] / n_true)
-        hxi = hxi_ref[...]  # (1, BI)
-        hxj = hxj_ref[...]  # (1, BJ)
+        hr_f = entropy_from_moments(elc_f[...] / den, exe_f[...] / den)
+        hr_r = entropy_from_moments(elc_r[...] / den, exe_r[...] / den)
+        hxi = hxi_ref[...]  # (1, BI); batched: (1, 1, BI)
+        hxj = hxj_ref[...]
+        mi = mi_ref[...]
+        mj = mj_ref[...]
+        if batched:
+            hxi, hxj, mi, mj = hxi[0], hxj[0], mi[0], mj[0]
         stat = (hxj - hxi.T) + (hr_f - hr_r)  # I[a, b], antisymmetric pairing
         # Select, not multiply: masked (dead/padded) rows may carry
         # non-finite garbage and 0 * NaN would leak it into live scores.
-        pm = (mi_ref[...].T * mj_ref[...]) > 0.5  # (BI, BJ)
-        fwd = jnp.where(pm, jnp.square(jnp.minimum(0.0, stat)), 0.0)
-        rev = jnp.where(pm, jnp.square(jnp.minimum(0.0, -stat)), 0.0)
+        pm = (mi.T * mj) > 0.5  # (BI, BJ)
+        fwd = jnp.sum(jnp.where(pm, jnp.square(jnp.minimum(0.0, stat)), 0.0),
+                      axis=1)
+        rev = jnp.sum(jnp.where(pm, jnp.square(jnp.minimum(0.0, -stat)), 0.0),
+                      axis=0)
         iv = imap_ref[t]
         jv = jmap_ref[t]
         # Messaging: one evaluation credits both endpoints of the block pair.
-        s_ref[pl.ds(iv, 1), :] += jnp.sum(fwd, axis=1)[None, :]
-        s_ref[pl.ds(jv, 1), :] += jnp.sum(rev, axis=0)[None, :]
+        if batched:
+            s = s_ref[...]  # (1, nt, b) resident tile
+            s_ref[...] = s.at[0, iv, :].add(fwd).at[0, jv, :].add(rev)
+        else:
+            s_ref[pl.ds(iv, 1), :] += fwd[None, :]
+            s_ref[pl.ds(jv, 1), :] += rev[None, :]
 
 
 @functools.partial(
@@ -114,53 +146,144 @@ def fused_score_vector(
     block: int = 8,
     block_n: int = 512,
     interpret: bool = False,
+    n_valid=None,
 ):
     """Messaging-folded score vector S via the fused triangular kernel.
 
     ``xn: (p, n)`` normalized rows, ``c: (p, p)`` correlations, ``mask: (p,)``
     live rows. Returns (p,) float32 scores (+inf on dead rows) — identical
-    math to ``dense_scores(...)[0]`` with no HR materialization."""
+    math to ``dense_scores(...)[0]`` with no HR materialization. ``n_valid``
+    (traced) is the batched-fit sample-padding seam: it rides into the kernel
+    as a scalar-prefetch operand and only changes the finalize denominator."""
     from jax.experimental.pallas import tpu as pltpu
 
     p, n = xn.shape
     # Shared prologue with the jnp oracle: p-padding, (nt, b) tiling, row
     # entropies and the diagonal-tile epilogue (in-block pairs — tiny
     # relative to the off-diagonal sweep the kernel does).
-    xpad, cp, _, hx2, mb, s2 = fused_layout(xn, c, mask, block)
+    xpad, cp, _, hx2, mb, s2 = fused_layout(xn, c, mask, block, n_valid=n_valid)
     nt, b = mb.shape
     p_pad = nt * b
     n_pad = n + (-n) % block_n
     nk = n_pad // block_n
     xp = jnp.pad(xpad, ((0, 0), (0, n_pad - n)))
     m2 = mb.astype(jnp.float32)
+    den = jnp.asarray(_sample_count(n_valid, n), jnp.float32).reshape(1)
 
     imap_np, jmap_np = tri_block_maps(nt)
     if len(imap_np):
         grid_spec = pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=3,
             grid=(len(imap_np), nk),
             in_specs=[
-                pl.BlockSpec((b, block_n), lambda t, k, im, jm: (im[t], k)),
-                pl.BlockSpec((b, block_n), lambda t, k, im, jm: (jm[t], k)),
-                pl.BlockSpec((b, b), lambda t, k, im, jm: (im[t], jm[t])),
-                pl.BlockSpec((1, b), lambda t, k, im, jm: (im[t], 0)),
-                pl.BlockSpec((1, b), lambda t, k, im, jm: (jm[t], 0)),
-                pl.BlockSpec((1, b), lambda t, k, im, jm: (im[t], 0)),
-                pl.BlockSpec((1, b), lambda t, k, im, jm: (jm[t], 0)),
+                pl.BlockSpec((b, block_n), lambda t, k, im, jm, dn: (im[t], k)),
+                pl.BlockSpec((b, block_n), lambda t, k, im, jm, dn: (jm[t], k)),
+                pl.BlockSpec((b, b), lambda t, k, im, jm, dn: (im[t], jm[t])),
+                pl.BlockSpec((1, b), lambda t, k, im, jm, dn: (im[t], 0)),
+                pl.BlockSpec((1, b), lambda t, k, im, jm, dn: (jm[t], 0)),
+                pl.BlockSpec((1, b), lambda t, k, im, jm, dn: (im[t], 0)),
+                pl.BlockSpec((1, b), lambda t, k, im, jm, dn: (jm[t], 0)),
             ],
-            out_specs=pl.BlockSpec((nt, b), lambda t, k, im, jm: (0, 0)),
+            out_specs=pl.BlockSpec((nt, b), lambda t, k, im, jm, dn: (0, 0)),
             scratch_shapes=[pltpu.VMEM((b, b), jnp.float32)] * 4,
         )
         s_tri = pl.pallas_call(
-            functools.partial(_fused_tri_kernel, n, nk),
+            functools.partial(_fused_tri_kernel, nk, False),
             grid_spec=grid_spec,
             out_shape=jax.ShapeDtypeStruct((nt, b), jnp.float32),
             interpret=interpret,
         )(
-            jnp.asarray(imap_np), jnp.asarray(jmap_np),
+            jnp.asarray(imap_np), jnp.asarray(jmap_np), den,
             xp, xp, cp, hx2, hx2, m2, m2,
         )
         s2 = s2 + s_tri
 
     s = s2.reshape(p_pad)[:p]
     return jnp.where(mask, s, jnp.inf)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block", "block_n", "interpret")
+)
+def fused_score_batch(
+    xb,
+    cb,
+    maskb,
+    *,
+    block: int = 8,
+    block_n: int = 512,
+    interpret: bool = False,
+    n_valid=None,
+):
+    """Batched fused score sweep on an explicit (B, T, nk) grid.
+
+    ``xb: (B, p, n)`` normalized rows, ``cb: (B, p, p)``, ``maskb: (B, p)``,
+    ``n_valid: (B,)`` per-dataset valid sample counts (or ``None`` when no
+    dataset in the bucket is padded). Returns (B, p) float32 scores. The
+    batch axis is the *leading grid axis*: one pallas_call covers the whole
+    bucket, each dataset reading its own prefetched denominator at
+    ``program_id(0)``. Semantically identical to ``jax.vmap`` of
+    ``fused_score_vector`` (which lowers to the same leading-axis grid); the
+    explicit form exists so the batched BlockSpec contract is concrete,
+    benchmarkable (``bench_kernels.py`` ``batchkern_*`` lanes) and testable
+    against both the vmap route and the jnp oracle."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    bsz, p, n = xb.shape
+    if n_valid is None:
+        layout = jax.vmap(
+            lambda x, c, m: fused_layout(x, c, m, block)
+        )(xb, cb, maskb)
+    else:
+        layout = jax.vmap(
+            lambda x, c, m, nv: fused_layout(x, c, m, block, n_valid=nv)
+        )(xb, cb, maskb, n_valid)
+    xpad, cp, _, hx2, mb, s2 = layout
+    nt, b = mb.shape[1:]
+    p_pad = nt * b
+    n_pad = n + (-n) % block_n
+    nk = n_pad // block_n
+    xp = jnp.pad(xpad, ((0, 0), (0, 0), (0, n_pad - n)))
+    m2 = mb.astype(jnp.float32)
+    den = jnp.broadcast_to(
+        jnp.asarray(_sample_count(n_valid, n), jnp.float32), (bsz,)
+    )
+
+    imap_np, jmap_np = tri_block_maps(nt)
+    if len(imap_np):
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(bsz, len(imap_np), nk),
+            in_specs=[
+                pl.BlockSpec((1, b, block_n),
+                             lambda bi, t, k, im, jm, dn: (bi, im[t], k)),
+                pl.BlockSpec((1, b, block_n),
+                             lambda bi, t, k, im, jm, dn: (bi, jm[t], k)),
+                pl.BlockSpec((1, b, b),
+                             lambda bi, t, k, im, jm, dn: (bi, im[t], jm[t])),
+                pl.BlockSpec((1, 1, b),
+                             lambda bi, t, k, im, jm, dn: (bi, im[t], 0)),
+                pl.BlockSpec((1, 1, b),
+                             lambda bi, t, k, im, jm, dn: (bi, jm[t], 0)),
+                pl.BlockSpec((1, 1, b),
+                             lambda bi, t, k, im, jm, dn: (bi, im[t], 0)),
+                pl.BlockSpec((1, 1, b),
+                             lambda bi, t, k, im, jm, dn: (bi, jm[t], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, nt, b),
+                                   lambda bi, t, k, im, jm, dn: (bi, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((b, b), jnp.float32)] * 4,
+        )
+        s_tri = pl.pallas_call(
+            functools.partial(_fused_tri_kernel, nk, True),
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((bsz, nt, b), jnp.float32),
+            interpret=interpret,
+        )(
+            jnp.asarray(imap_np), jnp.asarray(jmap_np), den,
+            xp, xp, cp, hx2, hx2, m2, m2,
+        )
+        s2 = s2 + s_tri
+
+    s = s2.reshape(bsz, p_pad)[:, :p]
+    return jnp.where(maskb, s, jnp.inf)

@@ -14,13 +14,12 @@ from repro.serve.batching import (
     bucket_dims,
     pad_to,
 )
+from repro.serve.buckets import bucket_shape, pad_dataset
 from repro.serve.lingam_engine import (
     LingamEngine,
     LingamFit,
     LingamServeConfig,
-    bucket_shape,
     dispatch_bucket,
-    pad_dataset,
 )
 from repro.serve.async_engine import AsyncLingamEngine
 from repro.serve.replica import (

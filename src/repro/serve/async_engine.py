@@ -262,11 +262,20 @@ class AsyncLingamEngine:
 
     def stats(self) -> dict:
         """Core stats snapshot plus the estimator-level counters threaded up
-        from ``core.paralingam`` (kernel-bypass dispatches), the admission
-        guardrail rejections, pre-warm totals, and — with a replica pool —
-        per-replica health and watchdog counters."""
+        from ``core.paralingam``, the admission guardrail rejections,
+        pre-warm totals, and — with a replica pool — per-replica health and
+        watchdog counters.
+
+        ``kernel_bypass`` is the requested-kernel-but-ran-jnp tripwire: since
+        the moments kernel redesign every backend serves the padded batched
+        route, so it must read 0 (asserted by the engine suites).
+        ``auto_downgrade`` counts dispatches where ``score_backend="auto"``
+        resolved to a jnp formulation — the off-accelerator platform policy
+        report that replaced the old bypass RuntimeWarning."""
         out = self.core.snapshot()
-        out["kernel_bypass"] = dispatch_stats_snapshot()["kernel_bypass"]
+        est = dispatch_stats_snapshot()
+        out["kernel_bypass"] = est["kernel_bypass"]
+        out["auto_downgrade"] = est["auto_downgrade"]
         with self._inv_mu:
             out["invalid_datasets"] = self._invalid
         out["prewarm"] = dict(self.prewarm_stats)

@@ -75,35 +75,11 @@ import threading
 from collections import deque
 from dataclasses import dataclass
 
-import numpy as np
-
 from repro.utils.clock import Clock, MonotonicClock
-from repro.utils.shapes import next_pow2
 
-
-# ---------------------------------------------------------------------------
-# shared shape-bucketing helpers (the LM and LiNGAM engines' common grid)
-# ---------------------------------------------------------------------------
-
-
-def bucket_dim(v: int, floor: int = 1) -> int:
-    """One dimension of the pow-2 bucket grid: ``next_pow2`` with a floor so
-    tiny requests share one executable instead of one each."""
-    return max(floor, next_pow2(v))
-
-
-def bucket_dims(shape, floors) -> tuple[int, ...]:
-    """Pow-2 bucket for a whole shape (elementwise ``bucket_dim``)."""
-    return tuple(bucket_dim(v, f) for v, f in zip(shape, floors))
-
-
-def pad_to(x: np.ndarray, shape, dtype=None) -> np.ndarray:
-    """Zero-pad ``x`` up to ``shape`` (leading corner). Zeros are the padding
-    contract of the mask/``n_valid`` seams: dead rows and padded sample
-    columns must be exactly zero."""
-    out = np.zeros(shape, dtype or x.dtype)
-    out[tuple(slice(0, s) for s in x.shape)] = x
-    return out
+# Re-export shims: the shape-bucketing grid moved to its canonical home in
+# ``serve.buckets`` (one family instead of the batching/lingam_engine split).
+from repro.serve.buckets import bucket_dim, bucket_dims, pad_to  # noqa: F401
 
 
 # ---------------------------------------------------------------------------

@@ -36,7 +36,11 @@ import numpy as np
 
 from repro.core.paralingam import ParaLiNGAMConfig, fit_batch
 from repro.core.validate import require_valid
-from repro.serve.batching import bucket_dims, pad_to
+
+# Re-export shims: the bucket-grid family's canonical home is serve.buckets
+# (bucket_shape/pad_dataset used to be defined here, bucket_dims/pad_to in
+# serve.batching — one module now owns all of them).
+from repro.serve.buckets import bucket_shape, pad_dataset  # noqa: F401
 from repro.utils.shapes import next_pow2
 
 
@@ -70,19 +74,6 @@ class LingamFit:
 class _Pending:
     req_id: int
     x: np.ndarray  # (p, n) raw observations
-
-
-def bucket_shape(p: int, n: int, cfg: LingamServeConfig) -> tuple[int, int]:
-    """The padded (p, n) executable bucket a request shape lands in (the
-    shared pow-2 grid of ``serve.batching``, floored per dimension)."""
-    return bucket_dims((p, n), (cfg.min_p_bucket, cfg.min_n_bucket))
-
-
-def pad_dataset(x: np.ndarray, p_pad: int, n_pad: int) -> np.ndarray:
-    """Zero-pad ``x: (p, n)`` to (p_pad, n_pad) — zeros are the padding
-    contract of the mask/n_valid seams (dead rows and padded sample columns
-    must be exactly zero)."""
-    return pad_to(x, (p_pad, n_pad), np.float64)
 
 
 def check_engine_config(config: ParaLiNGAMConfig | None) -> ParaLiNGAMConfig:

@@ -213,72 +213,86 @@ def test_fit_batch_sharded_padded_ragged():
 
 
 # ---------------------------------------------------------------------------
-# kernel-bypass accounting: the n_valid/mask contract silently drops the
-# Pallas route (kernels/ops.py reduces over the static tile width) — that
-# bypass must be visible, not silent
+# dispatch accounting: the moments contract serves n_valid/mask padding from
+# inside every kernel backend, so kernel_bypass is now a tripwire that must
+# read 0; "auto" resolving to an xla backend off-TPU is counted per dispatch
 # ---------------------------------------------------------------------------
 
 
-def test_kernel_bypass_warns_once_and_counts():
+def test_padded_kernel_dispatch_keeps_kernel_no_bypass():
+    """score_backend="pallas_fused" with n_valid set stays on the kernel:
+    no RuntimeWarning, kernel_bypass stays 0, and the orders match the xla
+    oracle exactly (the valid-count epilogue reproduces the unpadded
+    statistics)."""
+    import warnings
+
     from repro.core import paralingam
 
     paralingam.reset_dispatch_stats()
-    cfg = ParaLiNGAMConfig(min_bucket=8, fused=True, use_kernel=True)
+    cfg = ParaLiNGAMConfig(min_bucket=8, score_backend="pallas_fused")
     xs = np.zeros((2, 8, 128))
     nv = np.full((2,), 100, np.int32)
     for i in range(2):
         xs[i, :, :100] = _gen(8, 100, seed=90 + i)
-    import warnings
 
     with warnings.catch_warnings(record=True) as rec:
         warnings.simplefilter("always")
-        fit_batch(xs, cfg, n_valid=nv)
-        fit_batch(xs, cfg, n_valid=nv)
-    warns = [w for w in rec if issubclass(w.category, RuntimeWarning)
-             and "use_kernel" in str(w.message)]
-    assert len(warns) == 1  # warn once, not per dispatch
-    assert paralingam.dispatch_stats["kernel_bypass"] == 2  # count every one
+        res = fit_batch(xs, cfg, n_valid=nv)
+    assert not [w for w in rec if issubclass(w.category, RuntimeWarning)]
+    snap = paralingam.dispatch_stats_snapshot()
+    assert snap["kernel_bypass"] == 0
+    assert snap["auto_downgrade"] == 0  # explicit request, nothing resolved
 
-    # the unpadded route keeps the kernel: no bypass, no warning
-    with warnings.catch_warnings(record=True) as rec2:
-        warnings.simplefilter("always")
-        fit(np.asarray(xs[0]), cfg)
-    assert not [w for w in rec2 if issubclass(w.category, RuntimeWarning)
-                and "use_kernel" in str(w.message)]
-    assert paralingam.dispatch_stats["kernel_bypass"] == 2
+    ref = fit_batch(xs, ParaLiNGAMConfig(min_bucket=8, score_backend="xla"),
+                    n_valid=nv)
+    assert np.asarray(res.orders).tolist() == np.asarray(ref.orders).tolist()
     paralingam.reset_dispatch_stats()
 
 
-def test_dispatch_stats_concurrent_updates_are_exact():
-    """The counter is shared by every engine replica thread: 8 threads x 50
-    bumps must land exactly (lost updates under the GIL's bytecode-boundary
-    preemption were possible with the unlocked read-modify-write), and the
-    warn-once flag must fire exactly one RuntimeWarning across all threads."""
-    import threading
-    import warnings
+def test_auto_downgrade_counted_per_dispatch():
+    """Off-TPU, score_backend="auto" resolves to the xla oracle; every such
+    dispatch bumps auto_downgrade (the stats() report replaced the old
+    warn-once RuntimeWarning) and never touches kernel_bypass."""
+    import jax as _jax
 
     from repro.core import paralingam
 
     paralingam.reset_dispatch_stats()
-    kcfg = ParaLiNGAMConfig(min_bucket=8, fused=True, use_kernel=True)
-    nv = np.full((2,), 100, np.int32)
+    cfg = ParaLiNGAMConfig(min_bucket=8)  # score_backend="auto"
+    xs = np.stack([_gen(8, 128, seed=94 + i) for i in range(2)])
+    fit_batch(xs, cfg)
+    fit_batch(xs, cfg)
+    snap = paralingam.dispatch_stats_snapshot()
+    if _jax.default_backend() == "tpu":
+        assert snap["auto_downgrade"] == 0  # auto keeps the kernel on TPU
+    else:
+        assert snap["auto_downgrade"] == 2  # one per dispatch, not warn-once
+    assert snap["kernel_bypass"] == 0
+    paralingam.reset_dispatch_stats()
+
+
+def test_dispatch_stats_concurrent_updates_are_exact():
+    """The counters are shared by every engine replica thread: 8 threads x 50
+    bumps must land exactly (lost updates under the GIL's bytecode-boundary
+    preemption were possible with an unlocked read-modify-write)."""
+    import threading
+
+    from repro.core import paralingam
+
+    paralingam.reset_dispatch_stats()
 
     def bump():
         for _ in range(50):
-            paralingam._note_kernel_bypass(kcfg, nv)
+            paralingam._bump_stat("auto_downgrade")
 
-    # the catcher lives in the main thread only (warnings filter state is
-    # global); worker threads just emit through it
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        threads = [threading.Thread(target=bump) for _ in range(8)]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join(30)
-        assert all(not t.is_alive() for t in threads)
-    assert paralingam.dispatch_stats_snapshot()["kernel_bypass"] == 8 * 50
-    warns = [w for w in rec if issubclass(w.category, RuntimeWarning)]
-    assert len(warns) == 1  # the warn-once flag is race-free too
+    threads = [threading.Thread(target=bump) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(30)
+    assert all(not t.is_alive() for t in threads)
+    snap = paralingam.dispatch_stats_snapshot()
+    assert snap["auto_downgrade"] == 8 * 50
+    assert snap["kernel_bypass"] == 0
     paralingam.reset_dispatch_stats()
-    assert paralingam.dispatch_stats["kernel_bypass"] == 0
+    assert paralingam.dispatch_stats["auto_downgrade"] == 0

@@ -100,7 +100,7 @@ def test_fused_respects_mask():
     np.testing.assert_allclose(np.asarray(s_o), np.asarray(s_ref),
                                rtol=1e-5, atol=1e-6)
     root_d, _ = find_root_dense(xn, c, mask, block_j=16)
-    root_f, _ = find_root_dense(xn, c, mask, block_j=16, fused=True)
+    root_f, _ = find_root_dense(xn, c, mask, block_j=16, score_backend="xla_fused")
     assert int(root_d) == int(root_f)
 
 
@@ -142,7 +142,7 @@ def test_fused_order_matches_serial_oracle(seed):
     data = sem.generate(sem.SemSpec(p=8, n=2500, density="sparse", seed=seed))
     serial = direct_lingam.causal_order(data["x"])
     res = causal_order(
-        data["x"], ParaLiNGAMConfig(method="dense", fused=True, min_bucket=8)
+        data["x"], ParaLiNGAMConfig(method="dense", score_backend="xla_fused", min_bucket=8)
     )
     assert res.order == serial
 
@@ -154,7 +154,7 @@ def test_scan_order_matches_serial_oracle(seed):
     res = causal_order_scan(data["x"], ParaLiNGAMConfig(min_bucket=8))
     assert res.order == serial
     res_f = causal_order_scan(
-        data["x"], ParaLiNGAMConfig(fused=True, min_bucket=8)
+        data["x"], ParaLiNGAMConfig(score_backend="xla_fused", min_bucket=8)
     )
     assert res_f.order == serial
 
@@ -166,7 +166,7 @@ def test_fused_and_scan_match_dense_driver(p):
     the serial numpy oracle)."""
     data = sem.generate(sem.SemSpec(p=p, n=1500, density="sparse", seed=13))
     r_dense = causal_order(data["x"], ParaLiNGAMConfig(method="dense"))
-    r_fused = causal_order(data["x"], ParaLiNGAMConfig(method="dense", fused=True))
+    r_fused = causal_order(data["x"], ParaLiNGAMConfig(method="dense", score_backend="xla_fused"))
     r_scan = causal_order(data["x"], ParaLiNGAMConfig(method="scan"))
     assert r_fused.order == r_dense.order
     assert r_scan.order == r_dense.order
@@ -176,7 +176,7 @@ def test_scan_kernel_backed_matches():
     data = sem.generate(sem.SemSpec(p=8, n=1024, density="sparse", seed=6))
     r_dense = causal_order(data["x"], ParaLiNGAMConfig(method="dense"))
     r_scan_k = causal_order_scan(
-        data["x"], ParaLiNGAMConfig(fused=True, use_kernel=True, min_bucket=8)
+        data["x"], ParaLiNGAMConfig(score_backend="pallas_fused", min_bucket=8)
     )
     assert r_scan_k.order == r_dense.order
 

@@ -1,0 +1,388 @@
+"""Moments-emitting kernel family (kernels/ops.py contract): kernel-vs-oracle
+parity for the raw (m1, m2) sums across odd p, masked columns, ``n_valid``
+padding and a (B, p, n) batch axis (interpret mode), shard-linearity of the
+sums (the psum seam), ring-order parity on 1/2/4/8 shards with kernel moments
+feeding the pmean, and the ``score_backend`` resolution API
+(``select_backend`` / ``BackendUnavailable`` / the legacy-flag shim).
+
+Multi-shard cases carry ``requires_multidevice(n)`` and auto-skip below n
+devices; the CI ``multidevice`` lane forces 8 host devices so every shard
+count runs on every PR.
+"""
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import direct_lingam, sem
+from repro.core.covariance import VAR_EPS, _sample_count, cov_matrix, normalize
+from repro.core.entropy import entropy_from_moments, log_cosh, u_exp_moment
+from repro.core.pairwise import (
+    finalize_moments,
+    fused_scores,
+    residual_entropy_block,
+)
+from repro.core.pairwise import residual_entropy_matrix as hr_oracle
+from repro.core.paralingam import (
+    ParaLiNGAMConfig,
+    causal_order,
+    find_root_dense,
+    fit,
+)
+from repro.dist.ring import ring_find_root
+from repro.dist.ring_order import causal_order_ring
+from repro.kernels import ops as kops
+from repro.kernels.fused_score import fused_score_batch, fused_score_vector
+from repro.kernels.ops import BackendUnavailable, select_backend
+from repro.kernels.pairwise_score import pairwise_moments
+
+ON_TPU = jax.default_backend() == "tpu"
+
+
+def _setup(p, n, seed=0):
+    rng = np.random.default_rng(seed)
+    xn = normalize(jnp.asarray(rng.standard_normal((p, n)), jnp.float32))
+    c = cov_matrix(xn)
+    return xn, c
+
+
+def _moment_sums_oracle(xi, xj, c):
+    """Raw-sum oracle straight off the HR definition (the big (pi, pj, n)
+    intermediate the kernel exists to avoid)."""
+    inv = jax.lax.rsqrt(jnp.maximum(1.0 - c * c, VAR_EPS))
+    u = (xi[:, None, :] - c[:, :, None] * xj[None, :, :]) * inv[:, :, None]
+    return jnp.sum(log_cosh(u), axis=-1), jnp.sum(u_exp_moment(u), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# square moments kernel: raw sums vs oracle (odd p, odd n -> both axes pad)
+# ---------------------------------------------------------------------------
+
+
+def test_pairwise_moments_raw_sums_match_oracle():
+    xn, c = _setup(13, 700, seed=1)  # 13 % 8 != 0, 700 % 512 != 0
+    m1_k, m2_k = pairwise_moments(xn, xn, c, interpret=not ON_TPU)
+    m1_o, m2_o = _moment_sums_oracle(xn, xn, c)
+    # raw sums accumulate in different f32 orders (block_n chunks vs one
+    # pass), and the m2 integrand is sign-alternating so a few sums sit in
+    # near-total cancellation — absolute bounds here catch structural errors
+    # (wrong pairing would be O(sqrt(n))); the finalized-entropy tests below
+    # pin the tight precision bound
+    np.testing.assert_allclose(np.asarray(m1_k), np.asarray(m1_o),
+                               rtol=1e-3, atol=0.2)
+    np.testing.assert_allclose(np.asarray(m2_k), np.asarray(m2_o),
+                               rtol=1e-3, atol=2.0)
+
+
+def test_entropy_epilogue_matches_hr_oracle():
+    """kernel sums -> finalize_moments == the jnp HR matrix, and the packaged
+    kops.residual_entropy_matrix route agrees with both."""
+    xn, c = _setup(11, 900, seed=2)
+    h_o = hr_oracle(xn, c, block_j=8)
+    m1, m2 = pairwise_moments(xn, xn, c, interpret=not ON_TPU)
+    h_fin = finalize_moments(m1, m2, _sample_count(None, xn.shape[-1]))
+    h_k = kops.residual_entropy_matrix(xn, c)
+    np.testing.assert_allclose(np.asarray(h_fin), np.asarray(h_o),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_o),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_moment_sums_invariant_to_zero_padding():
+    """The n_valid contract at the kernel level: zero sample columns add
+    exactly 0.0 to both sums, so the padded kernel reproduces the unpadded
+    sums and the traced denominator alone recovers the statistics."""
+    p, nv, n_pad = 9, 300, 512
+    xn, _ = _setup(p, nv, seed=3)
+    xp = jnp.pad(xn, ((0, 0), (0, n_pad - nv)))
+    c = cov_matrix(xn)  # correlations of the *valid* samples
+    m1_u, m2_u = pairwise_moments(xn, xn, c, interpret=not ON_TPU)
+    m1_p, m2_p = pairwise_moments(xp, xp, c, interpret=not ON_TPU)
+    np.testing.assert_array_equal(np.asarray(m1_u), np.asarray(m1_p))
+    np.testing.assert_array_equal(np.asarray(m2_u), np.asarray(m2_p))
+    # finalize against n_valid == unpadded entropies
+    h_pad = finalize_moments(m1_p, m2_p, _sample_count(jnp.int32(nv), n_pad))
+    h_ref = hr_oracle(xn, c, block_j=8)
+    np.testing.assert_allclose(np.asarray(h_pad), np.asarray(h_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_batched_moments_vmap_grows_grid_axis():
+    """vmap of the moments kernel over a (B, p, n) stack == the per-dataset
+    loop: the batch axis becomes a leading grid axis, nothing leaks across
+    datasets."""
+    B, p, n = 3, 8, 600
+    xs = jnp.stack([_setup(p, n, seed=20 + i)[0] for i in range(B)])
+    cs = jax.vmap(cov_matrix)(xs)
+    kern = functools.partial(pairwise_moments, interpret=not ON_TPU)
+    m1_b, m2_b = jax.vmap(lambda x, c: kern(x, x, c))(xs, cs)
+    for i in range(B):
+        m1_i, m2_i = kern(xs[i], xs[i], cs[i])
+        np.testing.assert_array_equal(np.asarray(m1_b[i]), np.asarray(m1_i))
+        np.testing.assert_array_equal(np.asarray(m2_b[i]), np.asarray(m2_i))
+
+
+# ---------------------------------------------------------------------------
+# fused triangular kernel: masked columns, n_valid, batch grid axis
+# ---------------------------------------------------------------------------
+
+
+def test_fused_vector_masked_and_padded_matches_oracle():
+    p, nv, n_pad = 13, 300, 512
+    xn, _ = _setup(p, nv, seed=4)
+    c = cov_matrix(xn)
+    mask = jnp.asarray(np.arange(p) % 3 != 0)  # masked columns (dead rows)
+    xp = jnp.pad(xn, ((0, 0), (0, n_pad - nv)))
+    s_k = fused_score_vector(xp, c, mask, block=8, interpret=not ON_TPU,
+                             n_valid=jnp.int32(nv))
+    s_o = fused_scores(xn, c, mask, block=8)
+    live = np.asarray(mask)
+    np.testing.assert_allclose(np.asarray(s_k)[live], np.asarray(s_o)[live],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_batch_matches_vmap_and_oracle():
+    """The explicit (B, T, nk) batched grid with per-dataset prefetched
+    denominators == vmap of the single-dataset kernel (the leading-grid-axis
+    lowering) == the jnp oracle per dataset."""
+    B, p, n_pad = 4, 8, 512
+    nvs = np.array([512, 400, 300, 512], np.int32)
+    xs = np.zeros((B, p, n_pad), np.float32)
+    raw = []
+    for i, nv in enumerate(nvs):
+        x, _ = _setup(p, int(nv), seed=30 + i)
+        raw.append(x)
+        xs[i, :, :nv] = np.asarray(x)
+    xs = jnp.asarray(xs)
+    cs = jnp.stack([cov_matrix(x) for x in raw])
+    masks = jnp.ones((B, p), bool)
+    nv_j = jnp.asarray(nvs)
+
+    s_batch = fused_score_batch(xs, cs, masks, block=8,
+                                interpret=not ON_TPU, n_valid=nv_j)
+    s_vmap = jax.vmap(
+        lambda x, c, m, nv: fused_score_vector(
+            x, c, m, block=8, interpret=not ON_TPU, n_valid=nv)
+    )(xs, cs, masks, nv_j)
+    np.testing.assert_array_equal(np.asarray(s_batch), np.asarray(s_vmap))
+    for i, x in enumerate(raw):
+        s_o = fused_scores(x, cs[i], masks[i], block=8)
+        np.testing.assert_allclose(np.asarray(s_batch[i]), np.asarray(s_o),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_masked_find_root_parity_across_backends():
+    """Same root and (live-entry) scores from all four concrete backends
+    under a partial variable mask."""
+    xn, c = _setup(13, 700, seed=5)
+    mask = jnp.asarray(np.arange(13) % 4 != 1)
+    live = np.asarray(mask)
+    root_ref, s_ref = find_root_dense(xn, c, mask, score_backend="xla")
+    for be in ("xla_fused", "pallas", "pallas_fused"):
+        root_b, s_b = find_root_dense(xn, c, mask, score_backend=be)
+        assert int(root_b) == int(root_ref), be
+        np.testing.assert_allclose(np.asarray(s_b)[live],
+                                   np.asarray(s_ref)[live],
+                                   rtol=1e-4, atol=1e-4, err_msg=be)
+
+
+# ---------------------------------------------------------------------------
+# the psum seam: kernel sums are linear in the sample shards
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_moment_sums_are_shard_linear():
+    """Equal sample shards: per-shard kernel sums add up to the full-sample
+    kernel sums, and the pmean-of-local-means finalize reproduces the full
+    entropies — the exact combine the ring's sample sharding performs."""
+    xn, c = _setup(8, 2048, seed=6)
+    kern = functools.partial(pairwise_moments, interpret=not ON_TPU)
+    m1_full, m2_full = kern(xn, xn, c)
+    h_full = finalize_moments(m1_full, m2_full,
+                              _sample_count(None, xn.shape[-1]))
+    for shards in (2, 4, 8):
+        parts = jnp.split(xn, shards, axis=-1)
+        sums = [kern(pt, pt, c) for pt in parts]
+        m1 = sum(s[0] for s in sums)
+        m2 = sum(s[1] for s in sums)
+        np.testing.assert_allclose(np.asarray(m1), np.asarray(m1_full),
+                                   rtol=1e-5, atol=1e-3)
+        # pmean of per-shard local means == global mean (equal shards)
+        nloc = xn.shape[-1] // shards
+        m1m = sum(s[0] / nloc for s in sums) / shards
+        m2m = sum(s[1] / nloc for s in sums) / shards
+        h = entropy_from_moments(m1m, m2m)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(h_full),
+                                   rtol=1e-5, atol=1e-6)
+        del m2
+    del h
+
+
+@pytest.mark.requires_multidevice(2)
+def test_kernel_moments_psum_under_shard_map():
+    """residual_entropy_block(backend="pallas") inside shard_map over a
+    2-way sample shard: kernel moments pmean'd before the epilogue reproduce
+    the replicated xla entropies."""
+    xn, c = _setup(16, 2048, seed=7)
+    h_rep = residual_entropy_block(xn, c, xn, backend="xla")
+    mesh = Mesh(np.array(jax.devices()[:2]), ("model",))
+    h_psum = jax.shard_map(
+        lambda xl: residual_entropy_block(xl, c, xl, psum_axis="model",
+                                          backend="pallas"),
+        mesh=mesh,
+        in_specs=P(None, "model"),
+        out_specs=P(),
+        check_vma=False,
+    )(xn)
+    # off-diagonal only: the i==j residual is the VAR_EPS-amplified zero
+    # stream (garbage by construction, masked out by every scorer)
+    off = ~np.eye(xn.shape[0], dtype=bool)
+    np.testing.assert_allclose(np.asarray(h_rep)[off], np.asarray(h_psum)[off],
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ring order with kernel moments: 1/2/4/8 shards, bit-identical orders
+# ---------------------------------------------------------------------------
+
+# p -> (n, min_bucket); p=9 odd exercises row-block padding.
+RING_CASES = {8: (2500, 8), 9: (2000, 8)}
+
+
+@functools.lru_cache(maxsize=None)
+def _ring_problem(p):
+    n, min_bucket = RING_CASES[p]
+    x = sem.generate(sem.SemSpec(p=p, n=n, density="sparse", seed=p))["x"]
+    return x, tuple(direct_lingam.causal_order(x)), min_bucket
+
+
+def _ring_mesh(r, msize=1):
+    devs = np.array(jax.devices()[: r * msize])
+    return Mesh(devs.reshape(r, msize), ("ring", "model"))
+
+
+def _assert_ring_kernel_parity(p, mesh):
+    x, serial, min_bucket = _ring_problem(p)
+    cfg = ParaLiNGAMConfig(ring=True, min_bucket=min_bucket,
+                           score_backend="pallas")
+    res = causal_order_ring(x, cfg, mesh=mesh)
+    assert res.order == list(serial)
+
+
+@pytest.mark.parametrize("p", sorted(RING_CASES))
+def test_ring_order_kernel_moments_single_shard(p):
+    _assert_ring_kernel_parity(p, _ring_mesh(1))
+
+
+@pytest.mark.requires_multidevice(2)
+@pytest.mark.parametrize("p", sorted(RING_CASES))
+def test_ring_order_kernel_moments_two_shards(p):
+    _assert_ring_kernel_parity(p, _ring_mesh(2))
+
+
+@pytest.mark.requires_multidevice(4)
+@pytest.mark.parametrize("p", sorted(RING_CASES))
+def test_ring_order_kernel_moments_four_shards(p):
+    _assert_ring_kernel_parity(p, _ring_mesh(4))
+
+
+@pytest.mark.requires_multidevice(8)
+@pytest.mark.parametrize("p", sorted(RING_CASES))
+def test_ring_order_kernel_moments_eight_shards(p):
+    _assert_ring_kernel_parity(p, _ring_mesh(8))
+
+
+@pytest.mark.requires_multidevice(4)
+def test_ring_order_kernel_moments_sample_sharded(p=8):
+    """2x2 ("ring", "model") mesh: rows ring-shard AND samples model-shard —
+    the kernel's raw sums feed the pmean seam; order still exact."""
+    _assert_ring_kernel_parity(p, _ring_mesh(2, msize=2))
+
+
+@pytest.mark.requires_multidevice(4)
+def test_ring_find_root_kernel_moments_sample_sharded():
+    """ring_find_root with sample_axis="model" and the kernel backend: same
+    root, scores to f32 roundoff vs the single-device xla evaluation."""
+    rng = np.random.default_rng(8)
+    p, n = 32, 2048
+    xn = normalize(jnp.asarray(rng.standard_normal((p, n)), jnp.float32))
+    c = cov_matrix(xn)
+    mask = jnp.ones((p,), bool)
+    root_d, s_d = find_root_dense(xn, c, mask, score_backend="xla")
+    root_r, s_r = ring_find_root(
+        xn, c, mask, _ring_mesh(2, msize=2), row_axes=("ring",),
+        sample_axis="model", score_backend="pallas",
+    )
+    assert int(root_d) == int(root_r)
+    np.testing.assert_allclose(np.asarray(s_d), np.asarray(s_r),
+                               rtol=2e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# backend resolution API: select_backend / BackendUnavailable / legacy shim
+# ---------------------------------------------------------------------------
+
+
+def test_select_backend_resolves_names_and_configs():
+    assert select_backend("pallas") == "pallas"
+    assert select_backend("xla_fused") == "xla_fused"
+    cfg = ParaLiNGAMConfig(score_backend="pallas_fused")
+    assert select_backend(cfg) == "pallas_fused"
+    want = "pallas_fused" if ON_TPU else "xla"
+    assert select_backend("auto") == want
+    assert select_backend(ParaLiNGAMConfig()) == want
+
+
+def test_unknown_backend_raises_typed_error():
+    assert issubclass(BackendUnavailable, ValueError)
+    with pytest.raises(BackendUnavailable):
+        select_backend("cuda")
+    x = sem.generate(sem.SemSpec(p=6, n=256, density="sparse", seed=0))["x"]
+    with pytest.raises(BackendUnavailable):
+        causal_order(x, ParaLiNGAMConfig(score_backend="triton"))
+
+
+def test_legacy_flags_map_onto_backends_with_deprecation():
+    mapping = {
+        (False, False): "xla",
+        (False, True): "xla_fused",
+        (True, False): "pallas",
+        (True, True): "pallas_fused",
+    }
+    for (uk, fu), want in mapping.items():
+        with pytest.warns(DeprecationWarning, match="score_backend"):
+            cfg = ParaLiNGAMConfig(use_kernel=uk, fused=fu)
+        assert cfg.score_backend == want
+
+
+def test_legacy_flags_mixed_with_backend_rejected():
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="not both"):
+            ParaLiNGAMConfig(score_backend="xla", use_kernel=True)
+
+
+def test_find_root_dense_legacy_kwargs_warn_and_match():
+    xn, c = _setup(8, 512, seed=9)
+    mask = jnp.ones((8,), bool)
+    with pytest.warns(DeprecationWarning):
+        root_l, s_l = find_root_dense(xn, c, mask, fused=True)
+    root_n, s_n = find_root_dense(xn, c, mask, score_backend="xla_fused")
+    assert int(root_l) == int(root_n)
+    np.testing.assert_array_equal(np.asarray(s_l), np.asarray(s_n))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: kernel backends reproduce the serial oracle's order
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["pallas", "pallas_fused"])
+def test_fit_kernel_backend_order_matches_serial(backend):
+    x = sem.generate(sem.SemSpec(p=9, n=2000, density="sparse", seed=3))["x"]
+    serial = direct_lingam.causal_order(x)
+    res, _ = fit(x, ParaLiNGAMConfig(min_bucket=8, score_backend=backend))
+    assert res.order == serial

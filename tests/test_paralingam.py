@@ -146,6 +146,6 @@ def test_bucketing_equivalence():
 
 def test_kernel_backed_dense_matches():
     data = _data(p=8, n=1024, seed=6)
-    r1 = causal_order(data["x"], ParaLiNGAMConfig(method="dense", use_kernel=False))
-    r2 = causal_order(data["x"], ParaLiNGAMConfig(method="dense", use_kernel=True))
+    r1 = causal_order(data["x"], ParaLiNGAMConfig(method="dense", score_backend="xla"))
+    r2 = causal_order(data["x"], ParaLiNGAMConfig(method="dense", score_backend="pallas"))
     assert r1.order == r2.order

@@ -92,7 +92,7 @@ def test_scan_threshold_truncation_warns():
 
 def test_scan_threshold_fused_config_independent():
     """threshold=True replaces the dense evaluation entirely, so the
-    dense-path toggles (fused, use_kernel) must not perturb the thresholded
+    dense-path score_backend choice must not perturb the thresholded
     scan — same order, same device-counted comparisons."""
     x = _x(10, 1200, seed=7)
     base = causal_order(
@@ -101,7 +101,7 @@ def test_scan_threshold_fused_config_independent():
     via_kernel = causal_order(
         x,
         ParaLiNGAMConfig(method="scan", threshold=True, min_bucket=8,
-                         use_kernel=True, fused=True),
+                         score_backend="pallas_fused"),
     )
     assert base.order == via_kernel.order
     assert base.comparisons == via_kernel.comparisons
