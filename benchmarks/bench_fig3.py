@@ -22,6 +22,11 @@ the full sweep (forced host "devices" share one CPU, so ``vs_scan`` there
 measures ring overhead, not speedup — the scaling argument is HBM/wire, see
 EXPERIMENTS.md). The guarded trend metric is ``match`` (order parity with
 the scan path), which must stay 1.
+
+The ``ringthr_*`` lanes run the threshold state machine *inside* the ring at
+the same shard counts; their guarded metric is the device-measured
+comparison saving vs serial, zeroed on any order mismatch (benchmarks/
+trend.py ``ringthr_``).
 """
 
 from __future__ import annotations
@@ -138,7 +143,7 @@ def _ring_lanes(smoke: bool):
 
     p, n = (32, 512) if smoke else (64, 2048)
     x = sem.generate(sem.SemSpec(p=p, n=n, density="sparse", seed=0))["x"]
-    cfg_scan = ParaLiNGAMConfig(method="scan", min_bucket=8)
+    cfg_scan = ParaLiNGAMConfig(order_backend="scan", min_bucket=8)
     res_scan = causal_order_scan(x, cfg_scan)
     t_scan = time_fn(
         lambda x: causal_order_scan(x, cfg_scan).order, x,
@@ -146,7 +151,7 @@ def _ring_lanes(smoke: bool):
     )
 
     devs = jax.devices()
-    cfg_ring = ParaLiNGAMConfig(ring=True, min_bucket=8)
+    cfg_ring = ParaLiNGAMConfig(order_backend="ring", min_bucket=8)
     for r in (1, 2, 4, 8):
         if r > len(devs):
             continue
@@ -162,4 +167,36 @@ def _ring_lanes(smoke: bool):
             f"match={int(res.order == res_scan.order)};"
             f"shards={r};dispatches_per_fit=1",
             p=p, n=n, shards=r, path="ring_order",
+        )
+
+    # Threshold-inside-ring: the comparison-saving state machine per shard,
+    # credits/done-masks riding the ring packet. Guarded metric is
+    # saved_vs_serial *zeroed on any order mismatch* — a parity break trips
+    # the 2x trend gate harder than any savings drift could; the raw match
+    # bit is also emitted for the human reader. Compared against the dense
+    # ring (same topology, no savings) and the thresholded scan (same
+    # savings machine, one shard).
+    cfg_thr = ParaLiNGAMConfig(order_backend="ring", threshold=True,
+                               chunk=16, gamma0=1e-6, min_bucket=8)
+    res_scanthr = causal_order_scan(
+        x, ParaLiNGAMConfig(order_backend="scan", threshold=True, chunk=16,
+                            gamma0=1e-6, min_bucket=8))
+    for r in (1, 2, 4, 8):
+        if r > len(devs):
+            continue
+        mesh = Mesh(np.array(devs[:r]).reshape(r, 1), ("ring", "model"))
+        res = causal_order_ring(x, cfg_thr, mesh=mesh)
+        us = time_fn(
+            lambda x: causal_order_ring(x, cfg_thr, mesh=mesh).order, x,
+            iters=2 if smoke else 3,
+        )
+        match = int(res.order == res_scan.order
+                    and res.order == res_scanthr.order)
+        row(
+            f"ringthr_r{r}_p{p}", us,
+            f"saved_vs_serial={100.0 * res.saving_vs_serial * match:.1f}%;"
+            f"match={match};converged={int(res.converged)};"
+            f"comparisons={res.comparisons};rounds={res.rounds};"
+            f"shards={r};dispatches_per_fit=1",
+            p=p, n=n, shards=r, path="ring_threshold",
         )

@@ -5,7 +5,7 @@ measured at the smallest cell and extrapolated cubically elsewhere (the
 paper's own observation: serial runtime depends only on p and n).
 
 The ``fig4_scanthr_*`` lane runs the same recovery through the thresholded
-device-resident scan (``method="scan"`` + ``threshold=True``) — the paper's
+device-resident scan (``order_backend="scan"`` + ``threshold=True``) — the paper's
 headline combination of ~93% comparison savings *and* zero host round-trips
 in one dispatch — head-to-head against the host dense driver of the base
 lane."""
@@ -27,7 +27,7 @@ def run(smoke: bool = False):
     for density in ("sparse", "dense"):
         for p, n in cells:
             x = sem.generate(sem.SemSpec(p=p, n=n, density=density, seed=3))["x"]
-            cfg_dense = ParaLiNGAMConfig(method="dense")
+            cfg_dense = ParaLiNGAMConfig(order_backend="host")
             causal_order(x, cfg_dense)  # compile outside the timed call
             t0 = time.time()
             res = causal_order(x, cfg_dense)
@@ -46,7 +46,7 @@ def run(smoke: bool = False):
             row(f"fig4_{density}_p{p}_n{n}", t_para * 1e6, derived,
                 p=p, n=n, density=density)
 
-            cfg_st = ParaLiNGAMConfig(method="scan", threshold=True,
+            cfg_st = ParaLiNGAMConfig(order_backend="scan", threshold=True,
                                       chunk=16, gamma0=1e-6)
             causal_order(x, cfg_st)  # compile outside the timed call
             t0 = time.time()

@@ -96,7 +96,7 @@ def run(smoke: bool = False):
     xe = jnp.asarray(rng.standard_normal((pe, ne)), jnp.float32)
 
     def host_driver(x):
-        return causal_order(x, ParaLiNGAMConfig(method="dense")).order
+        return causal_order(x, ParaLiNGAMConfig(order_backend="host")).order
 
     def scan_driver(x):
         return causal_order_scan(x, ParaLiNGAMConfig()).order

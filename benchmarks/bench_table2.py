@@ -31,7 +31,7 @@ def run(smoke: bool = False):
     data = sem.generate(sem.SemSpec(p=p_core, n=n_core, density="sparse", seed=0))
     x = data["x"]
     t0 = time.time()
-    res = causal_order(x, ParaLiNGAMConfig(method="threshold", chunk=32))
+    res = causal_order(x, ParaLiNGAMConfig(order_backend="host", threshold=True, chunk=32))
     t_para = time.time() - t0
     t0 = time.time()
     serial_order = direct_lingam.causal_order(x)
@@ -53,7 +53,7 @@ def run(smoke: bool = False):
     p_big = 64 if smoke else 512
     x770 = _gen(p_big, 500 if smoke else 2000, seed=1)
     t0 = time.time()
-    res770 = causal_order(x770, ParaLiNGAMConfig(method="dense"))
+    res770 = causal_order(x770, ParaLiNGAMConfig(order_backend="host"))
     t_para770 = time.time() - t0
     sub = p_big // 4
     x_sub = x770[:sub]

@@ -11,7 +11,7 @@ Two lanes per cell:
     iteration; ``us`` column holds the *round* count, the savings live in
     the derived metrics);
   * ``scanthr_*``   — the device-resident thresholded scan
-    (``method="scan"`` + ``threshold=True``): the whole recovery in ONE
+    (``order_backend="scan"`` + ``threshold=True``): the whole recovery in ONE
     dispatch with the threshold state machine inside, comparison/round
     counters measured on device. ``us`` is measured wall time, so this lane
     captures the comparison-savings x one-dispatch *product*, not just the
@@ -35,7 +35,7 @@ def run(smoke: bool = False):
                 res = causal_order(
                     x,
                     ParaLiNGAMConfig(
-                        method="threshold", chunk=16, gamma0=1e-6,
+                        order_backend="host", threshold=True, chunk=16, gamma0=1e-6,
                         gamma_growth=growth,
                     ),
                 )
@@ -50,7 +50,7 @@ def run(smoke: bool = False):
                 )
 
                 cfg_scan = ParaLiNGAMConfig(
-                    method="scan", threshold=True, chunk=16, gamma0=1e-6,
+                    order_backend="scan", threshold=True, chunk=16, gamma0=1e-6,
                     gamma_growth=growth,
                 )
                 res_s = causal_order(x, cfg_scan)  # warm compile + counters

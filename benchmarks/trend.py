@@ -18,6 +18,11 @@ run's artifacts) against committed baselines and fails on a >``--factor``
     trend — any mismatch drops it to 0 and trips the gate. Wall-clock for
     these lanes is forced-host-device overhead on CPU runners, so speed is
     deliberately not guarded;
+  * ``ringthr_`` — threshold-inside-ring comparison savings vs the serial
+    baseline (``metrics.saved_vs_serial``, %), *multiplied by the order
+    parity bit*: a mismatch zeroes the metric and trips the gate, a
+    savings collapse below half the baseline trips it too — the PR-9
+    threshold-in-ring win;
   * ``batch_`` — batched one-dispatch ``fit_batch`` (and the mixed-shape
     serving engine) throughput vs the serial per-dataset ``fit`` loop
     (``metrics.vs_serial_loop``), the PR-5 dispatch-amortization win;
@@ -73,6 +78,7 @@ GUARDED = {
     "scanthr_": "saved_vs_serial",
     "fig4_scanthr_": "vs_dense_host",
     "ring_": "match",
+    "ringthr_": "saved_vs_serial",
     "batch_": "vs_serial_loop",
     "serve_": "vs_serial_loop",
     "serve_prewarm": "cold_vs_prewarmed",

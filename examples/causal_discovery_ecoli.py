@@ -5,7 +5,7 @@ The paper's serial DirectLiNGAM needs 485 s on this dataset (Table 2); the
 ParaLiNGAM formulation solves it here on CPU in a few seconds, and the same
 code path is what the dry-run lowers for the 256/512-chip meshes.
 
-    PYTHONPATH=src python examples/causal_discovery_ecoli.py [--method dense]
+    PYTHONPATH=src python examples/causal_discovery_ecoli.py [--no-threshold]
 """
 
 import argparse
@@ -17,7 +17,10 @@ from repro.core import direct_lingam, sem
 from repro.core.paralingam import ParaLiNGAMConfig, causal_order, fit
 
 ap = argparse.ArgumentParser()
-ap.add_argument("--method", default="threshold", choices=("dense", "threshold"))
+ap.add_argument("--order-backend", default="host",
+                choices=("host", "scan", "ring"))
+ap.add_argument("--no-threshold", dest="threshold", action="store_false",
+                help="run the dense sweep instead of the threshold machine")
 ap.add_argument("--p", type=int, default=85)
 ap.add_argument("--n", type=int, default=10_000)
 ap.add_argument("--serial-check", action="store_true",
@@ -29,10 +32,13 @@ print(f"E.coli-core-sized problem: p={args.p}, n={args.n}")
 
 t0 = time.time()
 result, b_est = fit(
-    data["x"], ParaLiNGAMConfig(method=args.method, chunk=16)
+    data["x"],
+    ParaLiNGAMConfig(order_backend=args.order_backend,
+                     threshold=args.threshold, chunk=16),
 )
 dt = time.time() - t0
-print(f"ParaLiNGAM ({args.method}): {dt:.2f}s "
+label = args.order_backend + ("+threshold" if args.threshold else "")
+print(f"ParaLiNGAM ({label}): {dt:.2f}s "
       f"({result.comparisons} comparisons, "
       f"{100 * result.saving_vs_serial:.1f}% saved vs serial)")
 print("order valid:", sem.is_valid_causal_order(result.order, data["b_true"]))

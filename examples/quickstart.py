@@ -13,8 +13,12 @@ spec = sem.SemSpec(p=12, n=5000, density="sparse", seed=42)
 data = sem.generate(spec)
 print(f"generated p={spec.p} variables, n={spec.n} samples")
 
-# 2. Recover the causal order (step 1) and strengths B (step 2).
-result, b_est = fit(data["x"], ParaLiNGAMConfig(method="threshold", chunk=4))
+# 2. Recover the causal order (step 1) and strengths B (step 2). The order
+# driver is picked by order_backend ("host" | "scan" | "ring"); threshold=True
+# turns on the comparison-saving threshold machine on any of them.
+result, b_est = fit(
+    data["x"], ParaLiNGAMConfig(order_backend="host", threshold=True, chunk=4)
+)
 
 print("causal order:", result.order)
 print("order valid:", sem.is_valid_causal_order(result.order, data["b_true"]))
@@ -33,6 +37,6 @@ print(f"max |B_est - B_true| = {err:.3f}")
 # jnp entropy epilogue (kernels/ops.py documents the contract).
 result_k, _ = fit(
     data["x"],
-    ParaLiNGAMConfig(method="dense", score_backend="pallas_fused"),
+    ParaLiNGAMConfig(order_backend="host", score_backend="pallas_fused"),
 )
 print("pallas_fused order matches:", result_k.order == result.order)

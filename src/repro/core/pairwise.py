@@ -135,7 +135,7 @@ def residual_entropy_block_pair(xi, c_blk, xj, n_valid=None):
     return stream_entropy(u_f, n_valid=n_valid), stream_entropy(u_r, n_valid=n_valid)
 
 
-def pair_moments(xn, c_vals, xj, n_valid=None):
+def pair_moments(xn, c_vals, xj, n_valid=None, psum_axis: str | None = None):
     """Both-direction residual entropies for *gathered* comparison chunks.
 
     The threshold scheduler's per-round evaluation: worker rows ``xn: (m, n)``
@@ -144,12 +144,19 @@ def pair_moments(xn, c_vals, xj, n_valid=None):
     ``hr_fwd[w, b] = H(r_{x_w}^{(x_jb)})`` — like
     :func:`residual_entropy_block_pair` both directions come from one load of
     each stream (the messaging reuse), but the target axis is a gather, not a
-    tile, so the layout stays XLA-native (see ``repro.kernels.ops``)."""
+    tile, so the layout stays XLA-native (see ``repro.kernels.ops``).
+
+    ``psum_axis`` as in :func:`stream_entropy`: inside ``shard_map`` with the
+    samples axis sharded over that mesh axis, each device's chunk holds only
+    its n-shard and the Hyvarinen moments are pmean'd before the entropy
+    epilogue — the seam that lets the threshold-in-ring state machine run on
+    sample-sharded meshes."""
     inv = jax.lax.rsqrt(jnp.maximum(1.0 - jnp.square(c_vals), VAR_EPS))[..., None]
     xi = xn[:, None, :]
     u_f = (xi - c_vals[..., None] * xj) * inv
     u_r = (xj - c_vals[..., None] * xi) * inv
-    return stream_entropy(u_f, n_valid=n_valid), stream_entropy(u_r, n_valid=n_valid)
+    return (stream_entropy(u_f, psum_axis=psum_axis, n_valid=n_valid),
+            stream_entropy(u_r, psum_axis=psum_axis, n_valid=n_valid))
 
 
 def diag_block_scores(xb, c_diag, hxb, mb, n_valid=None):

@@ -1,33 +1,42 @@
 """ParaLiNGAM (Algorithms 3-6, 9-10 of the paper), adapted to SPMD/TPU.
 
-The paper's CUDA worker/scheduler design maps onto three interchangeable
-find-root strategies (see DESIGN.md Section 2 for the mechanism mapping):
+The paper's CUDA worker/scheduler design maps onto a 2-axis config surface
+(see DESIGN.md Section 2 for the mechanism mapping):
 
-  * ``dense``     — the TPU-natural one-shot evaluation of the whole
-                    comparison matrix with messaging folded in (each residual
-                    entropy computed exactly once, both workers credited).
-                    This is the analogue of the paper's "Block Compare"
-                    baseline *plus* the messaging optimization.
-  * ``threshold`` — the paper's threshold mechanism (Sections 3.2-3.3):
-                    workers process comparison targets in fixed-size chunks
-                    inside a ``lax.while_loop``; a worker pauses when its
-                    partial score exceeds the adaptive bound gamma; gamma
-                    grows by factor ``gamma_growth`` when everyone is paused;
-                    the iteration terminates when every below-threshold worker
-                    has finished (paper Algorithm 6's condition). Comparison
-                    counts are tracked to validate the paper's ~93% savings.
-  * ``scan``      — the *outer* loop also folded on-device: all p find-root
-                    -> update iterations run in a single dispatch over
-                    fixed-size masked buffers (``causal_order_scan``),
-                    eliminating the p host round-trips and bucket re-gathers
-                    of the host driver. With ``config.threshold`` the inner
-                    evaluation is the threshold state machine rather than the
-                    dense one, so one dispatch delivers *both* the paper's
-                    comparison savings and the dispatch amortization —
-                    per-iteration comparison/round counters come back as
-                    device arrays, not host-side bookkeeping.
-  * messaging is inherent to all: pair (i, j) is evaluated once and both
-    S[i] += min(0, I)^2 and S[j] += min(0, -I)^2 are applied (Section 3.1).
+``order_backend`` — which loop drives the p find-root -> update iterations:
+
+  * ``host`` — the python outer loop: one find-root dispatch + ``int(root)``
+               sync per iteration, numpy bucket re-gathers between them.
+  * ``scan`` — the outer loop folded on-device: all p iterations in ONE
+               dispatch over fixed-size masked buffers
+               (``causal_order_scan``), stage compactions via device-side
+               gathers — eliminating the host round-trips.
+  * ``ring`` — the multi-device messaging ring
+               (``dist.ring_order.causal_order_ring``): row blocks shard
+               over the mesh's ring axis and circulate by ppermute, the
+               samples axis shards over ``model`` with psum'd entropy
+               moments, all p iterations device-resident.
+
+``threshold`` — which evaluation each iteration runs (orthogonal):
+
+  * ``False`` — the TPU-natural one-shot dense evaluation of the whole
+                comparison matrix with messaging folded in (each residual
+                entropy computed exactly once, both workers credited): the
+                paper's "Block Compare" baseline *plus* messaging.
+  * ``True``  — the paper's threshold mechanism (Sections 3.2-3.3): workers
+                process comparison targets in fixed-size chunks inside a
+                ``lax.while_loop``; a worker pauses when its partial score
+                exceeds the adaptive bound gamma; gamma grows by factor
+                ``gamma_growth`` when everyone is paused; the iteration
+                terminates when every below-threshold worker has finished
+                (Algorithm 6's condition). Device-measured comparison
+                counts validate the paper's ~93% savings — uniformly
+                reported across all three backends (the ring runs the state
+                machine per shard with psum'd convergence).
+
+Messaging is inherent to every combination: pair (i, j) is evaluated once
+and both S[i] += min(0, I)^2 and S[j] += min(0, -I)^2 are applied
+(Section 3.1).
 
 Across outer iterations, the remaining set U shrinks; rows are compacted into
 power-of-two *buckets* so each bucket size compiles once (<= log2 p
@@ -66,7 +75,98 @@ from repro.core.pairwise import (
     scores_from_stats,
 )
 from repro.core.pairwise import residual_entropy_matrix as _hr_jnp
+from repro.utils.schedule import make_schedule
 from repro.utils.shapes import next_pow2
+
+
+class ConfigError(ValueError):
+    """A ``ParaLiNGAMConfig`` combination is contradictory or unknown.
+
+    Raised at construction (and by :func:`resolve_order_backend`) instead of
+    silently preferring one flag over another — the pre-redesign tangle where
+    ``ring=True`` *overrode* ``method`` while ``method="threshold"`` +
+    ``ring=True`` raised from deep inside the ring driver is exactly the bug
+    class this type exists to kill."""
+
+
+#: The order-driver enum: which loop recovers the causal order.
+#:   ``host`` — the python outer loop (one find-root dispatch + ``int(root)``
+#:              sync per iteration);
+#:   ``scan`` — the device-resident staged scan (whole order in ONE jit);
+#:   ``ring`` — the multi-device messaging ring driving all p iterations
+#:              (``dist.ring_order.causal_order_ring``).
+#: Orthogonal to ``threshold``: every backend runs either the dense
+#: messaging evaluation (``threshold=False``) or the paper's threshold
+#: state machine (``threshold=True``) per iteration.
+ORDER_BACKENDS = ("host", "scan", "ring")
+
+# The legacy method/ring spellings warn once per process, not once per
+# config (configs are built per request on the serve path).
+_legacy_order_warned = False
+
+
+def _reset_legacy_order_warning() -> None:
+    """Re-arm the one-shot legacy-spelling DeprecationWarning (tests)."""
+    global _legacy_order_warned
+    _legacy_order_warned = False
+
+
+def _legacy_order_backend(order_backend: str, method, ring, threshold: bool):
+    """One-release compatibility shim: map the retired ``method`` /
+    ``ring`` flag pair onto the ``order_backend`` enum + orthogonal
+    ``threshold`` bool. Returns ``(order_backend, threshold)``.
+
+    The legacy semantics are preserved exactly: ``ring=True`` routed to the
+    ring driver regardless of ``method`` (with ``method="threshold"`` now
+    mapping to the implemented threshold-in-ring instead of raising);
+    ``method="dense"`` *ignored* ``threshold``, so it maps to
+    ``threshold=False``. Mixing the old and new spellings is ambiguous and
+    refused."""
+    global _legacy_order_warned
+    if not _legacy_order_warned:
+        warnings.warn(
+            "ParaLiNGAMConfig(method=..., ring=...) is deprecated; use "
+            "order_backend='host'|'scan'|'ring' with the orthogonal "
+            "threshold flag (method='dense' -> order_backend='host', "
+            "method='threshold' -> order_backend='host' + threshold=True, "
+            "method='scan' -> order_backend='scan', ring=True -> "
+            "order_backend='ring'). The legacy flags will be removed next "
+            "release.",
+            DeprecationWarning,
+            stacklevel=4,
+        )
+        _legacy_order_warned = True
+    if order_backend != "host":
+        raise ConfigError(
+            "pass either order_backend or the deprecated method/ring flags, "
+            f"not both (got order_backend={order_backend!r}, "
+            f"method={method!r}, ring={ring})"
+        )
+    if method not in (None, "dense", "threshold", "scan"):
+        raise ConfigError(f"unknown method {method!r}")
+    if ring:
+        # ring=True took precedence over method; method="threshold" selects
+        # the (now implemented) threshold-in-ring state machine.
+        return "ring", threshold or method == "threshold"
+    if method == "threshold":
+        return "host", True
+    if method == "scan":
+        return "scan", threshold
+    # method="dense" (or bare ring=False): the dense host driver, which
+    # always ignored cfg.threshold.
+    return "host", False
+
+
+def resolve_order_backend(cfg) -> str:
+    """Resolve a config's order driver to a concrete backend name, once per
+    dispatch (mirrors ``kernels.ops.select_backend`` for score backends).
+    Raises :class:`ConfigError` for names outside ``ORDER_BACKENDS``."""
+    backend = getattr(cfg, "order_backend", "host")
+    if backend not in ORDER_BACKENDS:
+        raise ConfigError(
+            f"order_backend={backend!r} is not one of {ORDER_BACKENDS}"
+        )
+    return backend
 
 
 def _legacy_backend(score_backend: str, use_kernel, fused, caller: str) -> str:
@@ -99,13 +199,20 @@ def _legacy_backend(score_backend: str, use_kernel, fused, caller: str) -> str:
 
 @dataclass(frozen=True)
 class ParaLiNGAMConfig:
-    method: str = "dense"  # "dense" | "threshold" | "scan"
-    ring: bool = False  # drive the FULL outer loop through the multi-device
-    #   messaging ring (dist/ring_order.causal_order_ring): row blocks shard
-    #   over the mesh's ring axis, the samples axis shards over ``model``
-    #   (entropy moments psum), and all p iterations stay device-resident.
-    #   Uses the active ``jax.set_mesh`` mesh (else all devices, flat ring);
-    #   takes precedence over ``method``. Incompatible with ``threshold``.
+    order_backend: str = "host"  # "host" | "scan" | "ring" — which loop
+    #   drives the causal-order recovery (``ORDER_BACKENDS``): the python
+    #   host loop (one find-root dispatch per iteration), the device-resident
+    #   staged scan (whole order in ONE jit), or the multi-device messaging
+    #   ring (``dist/ring_order.causal_order_ring``: row blocks shard over
+    #   the mesh's ring axis, the samples axis over ``model`` with psum'd
+    #   entropy moments; uses the active ``jax.set_mesh`` mesh, else all
+    #   devices as a flat ring). Orthogonal to ``threshold`` — every backend
+    #   supports both the dense and the thresholded per-iteration
+    #   evaluation. Resolved once per dispatch by
+    #   ``resolve_order_backend``; unknown names raise ``ConfigError``.
+    method: str | None = None  # DEPRECATED -> order_backend ("dense" ->
+    #   "host", "threshold" -> "host"+threshold, "scan" -> "scan")
+    ring: bool | None = None  # DEPRECATED -> order_backend="ring"
     # dense path
     block_j: int = 32  # j-block for the HR matrix (bounds the (p,bj,n) buffer)
     score_backend: str = "auto"  # "xla" | "xla_fused" | "pallas" |
@@ -117,11 +224,12 @@ class ParaLiNGAMConfig:
     #   elsewhere). Unknown names raise ``kernels.ops.BackendUnavailable``.
     use_kernel: bool | None = None  # DEPRECATED -> score_backend ("pallas*")
     fused: bool | None = None  # DEPRECATED -> score_backend ("*_fused")
-    # threshold path (paper Sections 3.2-3.3)
-    threshold: bool = False  # method="scan": run the threshold state machine
-    #   inside the device-resident outer loop (one dispatch, thresholded
-    #   find-root per iteration). Ignored by method="dense"/"threshold",
-    #   which select the evaluation via ``method`` directly.
+    # threshold mechanism (paper Sections 3.2-3.3), orthogonal to the
+    # order backend: run the comparison-saving threshold state machine
+    # (gamma-growth, chunked pending comparisons, messaging credits) per
+    # iteration instead of the dense evaluation — in the host loop, inside
+    # the one-dispatch scan, or per ring shard with psum'd convergence.
+    threshold: bool = False
     chunk: int = 16  # comparison targets processed per worker per round
     gamma0: float = 1e-5  # initial threshold (paper: "a small value")
     gamma_growth: float = 2.0  # the constant c of Algorithm 6 line 16
@@ -132,6 +240,17 @@ class ParaLiNGAMConfig:
     dtype: jnp.dtype = jnp.float32
 
     def __post_init__(self):
+        if self.method is not None or self.ring is not None:
+            backend, thr = _legacy_order_backend(
+                self.order_backend, self.method, self.ring, self.threshold
+            )
+            object.__setattr__(self, "order_backend", backend)
+            object.__setattr__(self, "threshold", thr)
+        if self.order_backend not in ORDER_BACKENDS:
+            raise ConfigError(
+                f"order_backend={self.order_backend!r} is not one of "
+                f"{ORDER_BACKENDS}"
+            )
         if self.use_kernel is None and self.fused is None:
             return
         object.__setattr__(
@@ -388,13 +507,12 @@ def _update_iteration(xn, c, root, mask, n_valid=None):
 
 
 def _scan_stages(p: int, min_bucket: int) -> list[tuple[int, int]]:
-    """Static stage plan: (buffer size m, iteration count) pairs mirroring
-    the host driver's power-of-two bucket schedule for r = p .. 2."""
-    import itertools
-
-    cap = next_pow2(p)
-    ms = [min(cap, max(min_bucket, next_pow2(r))) for r in range(p, 1, -1)]
-    return [(m, len(list(g))) for m, g in itertools.groupby(ms)]
+    """Static stage plan: (buffer size m, iteration count) pairs for the
+    single-shard scan driver — now just the R=1 slice of the unified
+    topology-aware :func:`repro.utils.schedule.make_schedule` (the ring
+    driver consumes the same object with its ring size, so the two plans
+    cannot drift)."""
+    return list(make_schedule(p, min_bucket).stages)
 
 
 def _scan_order_impl(xn, c, gamma0, gamma_growth, block_j: int = 32,
@@ -598,11 +716,12 @@ def causal_order_scan(x, config: ParaLiNGAMConfig | None = None) -> ParaLiNGAMRe
 def causal_order(x, config: ParaLiNGAMConfig | None = None) -> ParaLiNGAMResult:
     """ParaLiNGAM step 1: full causal order over ``x: (p, n)`` raw samples."""
     cfg = config or ParaLiNGAMConfig()
-    if cfg.ring:
+    driver = resolve_order_backend(cfg)
+    if driver == "ring":
         from repro.dist.ring_order import causal_order_ring
 
         return causal_order_ring(x, cfg)
-    if cfg.method == "scan":
+    if driver == "scan":
         return causal_order_scan(x, cfg)
     from repro.kernels import ops as kops
 
@@ -647,7 +766,7 @@ def causal_order(x, config: ParaLiNGAMConfig | None = None) -> ParaLiNGAMResult:
             idx_pad = np.arange(p, dtype=np.int32)
             xb, cb, mb = xn, c, mask
 
-        if cfg.method == "dense":
+        if not cfg.threshold:
             root_local, _ = _find_root_dense_impl(
                 xb, cb, mb, block_j=min(cfg.block_j, xb.shape[0]),
                 backend=backend,
@@ -655,7 +774,7 @@ def causal_order(x, config: ParaLiNGAMConfig | None = None) -> ParaLiNGAMResult:
             iter_comps = r * (r - 1) // 2
             iter_rounds = 0
             iter_conv = True
-        elif cfg.method == "threshold":
+        else:
             chunk = min(cfg.chunk, xb.shape[0])
             root_local, _, comps, rounds, conv = find_root_threshold(
                 xb, cb, mb, cfg.gamma0, cfg.gamma_growth,
@@ -671,8 +790,6 @@ def causal_order(x, config: ParaLiNGAMConfig | None = None) -> ParaLiNGAMResult:
                     "(raise max_rounds or gamma_growth)",
                     stacklevel=2,
                 )
-        else:
-            raise ValueError(f"unknown method {cfg.method!r}")
 
         root = int(idx_pad[int(root_local)])
         order.append(root)
@@ -815,16 +932,10 @@ def _run_pipeline(x, cfg: ParaLiNGAMConfig, *, adjacency: bool, batched: bool,
 
     backend = kops.select_backend(cfg, n_valid=n_valid, batched=batched)
     _note_backend(cfg, backend)
-    # Same selection contract as the order drivers: the threshold state
-    # machine runs for method="threshold", or method="scan" + cfg.threshold;
-    # cfg.threshold stays ignored under method="dense" (ParaLiNGAMConfig).
-    threshold = cfg.method == "threshold" or (
-        cfg.method == "scan" and cfg.threshold
-    )
     fn = _pipeline_fn(
         batched, rules if batched else None,
         adjacency=adjacency,
-        threshold=threshold,
+        threshold=cfg.threshold,
         block_j=cfg.block_j, backend=backend,
         min_bucket=cfg.min_bucket, chunk=cfg.chunk, max_rounds=cfg.max_rounds,
         prune_below=prune_below,
@@ -844,14 +955,12 @@ def fit(x, config: ParaLiNGAMConfig | None = None, prune_below: float = 0.0,
 
     Both phases run device-resident in ONE jit dispatch (normalize ->
     covariance -> staged order scan -> Cholesky adjacency) — the host sees
-    nothing until the final result readback. The order scan uses the
-    device-resident driver with the dense or threshold inner evaluation,
-    selected exactly as in :func:`causal_order`: ``method="threshold"``, or
-    ``method="scan"`` with ``config.threshold`` (``config.threshold`` stays
-    ignored under ``method="dense"``). The host drivers remain available via
-    :func:`causal_order` + ``core.adjacency.estimate_adjacency``. With
-    ``config.ring`` the order comes from the multi-device ring driver and
-    phase 2 is a second (still device-side) dispatch.
+    nothing until the final result readback. The order scan runs the dense
+    or threshold inner evaluation per ``config.threshold``; the host drivers
+    remain available via :func:`causal_order` +
+    ``core.adjacency.estimate_adjacency``. With ``order_backend="ring"`` the
+    order comes from the multi-device ring driver and phase 2 is a second
+    (still device-side) dispatch.
 
     ``validate=True`` runs the :mod:`repro.core.validate` admission checks
     first — NaN/Inf cells, constant or duplicate variables, p > n rank
@@ -863,7 +972,7 @@ def fit(x, config: ParaLiNGAMConfig | None = None, prune_below: float = 0.0,
         from repro.core.validate import require_valid
 
         diag = require_valid(x)
-    if cfg.ring:
+    if resolve_order_backend(cfg) == "ring":
         from repro.core.adjacency import adjacency_from_order_jit
 
         result = causal_order(x, cfg)
@@ -910,11 +1019,12 @@ def _coerce_batch(xs, cfg: ParaLiNGAMConfig, n_valid, mask, caller: str):
     """Shared frontend validation of the batched entry points: reject ring
     configs (no batched ring form — the batch axis shards via ``rules``),
     coerce the (B, p, n) stack and the per-dataset padding aux arrays."""
-    if cfg.ring:
-        raise ValueError(
+    if resolve_order_backend(cfg) == "ring":
+        raise ConfigError(
             f"{caller} runs the vmapped scan pipeline; the ring driver has "
-            "no batched form yet — use config.ring=False (shard the batch "
-            "axis via `rules` instead) or per-dataset fit() for the ring"
+            "no batched form yet — use order_backend='host'|'scan' (shard "
+            "the batch axis via `rules` instead) or per-dataset fit() for "
+            "the ring"
         )
     xs = jnp.asarray(xs, cfg.dtype)
     if xs.ndim != 3:
@@ -1019,19 +1129,16 @@ def aot_fit_batch(batch: int, p: int, n: int,
     the ``n_valid``/mask variant (what bucketed serving dispatches);
     ``padded=False`` matches the exact-shape fast path."""
     cfg = config or ParaLiNGAMConfig()
-    if cfg.ring:
-        raise ValueError("aot_fit_batch compiles the vmapped scan pipeline; "
-                         "the ring driver has no batched form")
+    if resolve_order_backend(cfg) == "ring":
+        raise ConfigError("aot_fit_batch compiles the vmapped scan pipeline; "
+                          "the ring driver has no batched form")
     from repro.kernels import ops as kops
 
     backend = kops.select_backend(cfg, batched=True)
-    threshold = cfg.method == "threshold" or (
-        cfg.method == "scan" and cfg.threshold
-    )
     fn = _pipeline_fn(
         True, rules,
         adjacency=True,
-        threshold=threshold,
+        threshold=cfg.threshold,
         block_j=cfg.block_j, backend=backend,
         min_bucket=cfg.min_bucket, chunk=cfg.chunk, max_rounds=cfg.max_rounds,
         prune_below=prune_below,
@@ -1053,7 +1160,8 @@ def causal_order_batch(xs, config: ParaLiNGAMConfig | None = None, *,
                        n_valid=None, mask=None, rules=None) -> BatchFitResult:
     """Batched causal order only (phase 1): :func:`fit_batch` without the
     adjacency epilogue. Same padding/sharding contracts (and like it, no
-    ring form — ``config.ring`` raises rather than being silently ignored)."""
+    ring form — ``order_backend="ring"`` raises rather than being silently
+    ignored)."""
     cfg = config or ParaLiNGAMConfig()
     xs, nv, mk = _coerce_batch(xs, cfg, n_valid, mask, "causal_order_batch")
     order, comps, rounds, conv = _run_pipeline(

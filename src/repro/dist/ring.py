@@ -38,6 +38,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.pairwise import (
+    pair_moments,
     pair_stat_matrix,
     residual_entropy_block,
     row_entropies,
@@ -201,6 +202,242 @@ def _ring_body(x_loc, c_loc, mask_loc, *, ring_axes: tuple, ring_sizes: tuple,
     acc = _shift_by(acc, big_r - n_steps, ring_axes, ring_sizes)
     score = score + acc
     return jnp.where(mask_loc, score, jnp.inf)
+
+
+def _ring_threshold_body(x_loc, c_loc, mask_loc, *, ring_axes: tuple,
+                         ring_sizes: tuple, sample_axis: str | None = None,
+                         gamma0: float = 1e-5, gamma_growth: float = 2.0,
+                         chunk: int = 16, max_rounds: int = 100_000):
+    """The paper's threshold state machine (Algorithms 4-6) run per ring
+    shard — the comparison-saving evaluation composed with the messaging
+    ring, replacing one dense ``_ring_body`` sweep.
+
+    Per-device state mirrors the host machine restricted to the resident
+    rows: an ``(m_l,)`` score shard, an ``(m_l, m)`` done matrix over all
+    global columns, and the globally consistent gamma/round/terminal
+    scalars. One ``lax.while_loop`` *cycle* is a full ring pass:
+
+      * hop 0 processes intra-block pending pairs (mutual simultaneous
+        comparisons dedup'd by the lower-index rule, exactly as the host
+        machine's Alg. 6 line 22);
+      * hops 1..R//2 process the visiting block's columns — each *active*
+        own row (below gamma, unfinished, live) evaluates its first pending
+        chunk of the visitor, with the antipodal ``process_pair`` dedup
+        assigning every unordered block pair to exactly one hosting
+        endpoint per cycle. The *visiting* rows initiate too, from their
+        cycle-start activity riding the packet: a below-gamma visitor's
+        pending pairs against the host's rows are processed at the same
+        hop (dedup'd against the host-initiated picks), so every active
+        worker makes chunk progress each cycle no matter which side of
+        the block-pair assignment it sits on — without this, a pair whose
+        statically assigned host row is paused would stall until gamma
+        inflated past the partner, burning the comparison savings;
+      * messaging credits to the visiting rows and their symmetric done
+        marks ride the packet as riders (an ``(m_l,)`` credit vector and an
+        ``(m_l, m)`` done update), shifted home with the block after the
+        last processed hop — total hops == R, so every rider lands back at
+        its owner before the cycle's bookkeeping.
+
+    The cycle epilogue is where the distributed machine re-joins the
+    paper's scheduler: the cycle's kept-comparison count is psum'd (zero
+    processed -> grow gamma by ``gamma_growth``, Alg. 6 lines 15-17 — this
+    also covers the ring-only stall where every pending pair's initiating
+    endpoint is paused), and Algorithm 6's termination condition is
+    evaluated on psum'd below-gamma finished/unfinished counts so every
+    shard agrees on the same terminal cycle. Correctness then follows the
+    paper's Section 3.2 argument unchanged: at termination every
+    below-gamma worker is finished with a *complete* score, every paused
+    worker's partial score only grows, so ``argmin`` over the gathered
+    scores is the true root no matter how the chunks were scheduled across
+    shards.
+
+    Returns ``(scores, comparisons, rounds, converged)``: the ``(m_l,)``
+    score shard (inf on dead rows; partial above gamma — fine for the
+    argmin) plus replicated device-measured counters. ``converged`` is
+    False iff ``max_rounds`` cut the loop before termination held.
+    """
+    m_l = x_loc.shape[0]
+    big_r = math.prod(ring_sizes)
+    m = m_l * big_r
+    r_idx = _flat_index(ring_axes, ring_sizes)
+    n_steps = ring_steps(big_r)
+
+    hx_loc = row_entropies(x_loc, mask_loc, psum_axis=sample_axis)
+    mask_all = jax.lax.all_gather(mask_loc, ring_axes, tiled=True)  # (m,)
+    own_gid = r_idx * m_l + jnp.arange(m_l, dtype=jnp.int32)  # global row ids
+    pv = (mask_loc[:, None] & mask_all[None, :]
+          & (own_gid[:, None] != jnp.arange(m, dtype=jnp.int32)[None, :]))
+    has_pairs = jnp.sum(mask_all) >= 2
+
+    # Chunk rounded to a divisor of the block width so the visiting columns
+    # reshape into whole chunks (worst case 1 == the paper's one-at-a-time
+    # worker); the host machine applies the same rounding to its row count.
+    b = max(1, min(chunk, m_l))
+    while m_l % b:
+        b -= 1
+    nc = m_l // b
+    rows = jnp.broadcast_to(jnp.arange(m_l)[:, None], (m_l, b))
+
+    def hop(s, d, gamma, comps, credit, done, x_vis, hx_vis, mask_vis,
+            s_vis, fin_vis, src, t: int):
+        """Process one visiting block (t=0: own block). Returns the updated
+        own state and the visitor's riders."""
+        col0 = src * m_l
+        vis_gid = col0 + jnp.arange(m_l, dtype=jnp.int32)
+        d_vis = jax.lax.dynamic_slice(d, (0, col0), (m_l, m_l))
+        pv_vis = (mask_loc[:, None] & mask_vis[None, :]
+                  & (own_gid[:, None] != vis_gid[None, :]))
+        pending = ~d_vis & pv_vis  # (m_l, m_l)
+
+        fin = jnp.all(d, axis=1)
+        active = (s < gamma) & ~fin & mask_loc
+        keep_flag = (jnp.asarray(True) if t == 0
+                     else process_pair(big_r, t, r_idx, src))
+
+        # --- host-initiated: each active own row's first pending chunk of
+        # the visiting columns.
+        pend_chunk = jnp.any(pending.reshape(m_l, nc, b), axis=2)
+        ci = jnp.argmax(pend_chunk, axis=1)  # first pending chunk per row
+        cols = ci[:, None] * b + jnp.arange(b)[None, :]  # (m_l, b) vis-local
+        cols_g = col0 + cols
+        xj = x_vis[cols.reshape(-1)].reshape(m_l, b, -1)
+        c_vals = jnp.take_along_axis(c_loc, cols_g, axis=1)
+        hr_fwd, hr_rev = pair_moments(x_loc, c_vals, xj,
+                                      psum_axis=sample_axis)
+        stat = (hx_vis[cols] - hx_loc[:, None]) + (hr_fwd - hr_rev)
+
+        proc = active[:, None] & jnp.take_along_axis(pending, cols, axis=1)
+        if t == 0:
+            # Intra-block: both endpoints resident, so simultaneous mutual
+            # proposals are possible — lower index keeps (host dedup rule).
+            prop = jnp.zeros((m_l, m_l), bool).at[rows, cols].max(proc)
+            partner_also = jnp.take_along_axis(prop.T, cols, axis=1)
+            keep = proc & (~partner_also | (rows < cols))
+        else:
+            # Cross-block: the antipodal schedule assigns each unordered
+            # block pair to exactly one hosting endpoint per cycle (even R,
+            # t == R/2: the lower-indexed device keeps both directions).
+            keep = proc & keep_flag
+
+        fwd = jnp.where(keep, jnp.square(jnp.minimum(0.0, stat)), 0.0)
+        rev = jnp.where(keep, jnp.square(jnp.minimum(0.0, -stat)), 0.0)
+        s2 = s + jnp.sum(fwd, axis=1)
+        d2 = d.at[rows, cols_g].max(keep)
+        comps2 = comps + jnp.sum(keep).astype(comps.dtype)
+        if t == 0:
+            # Both endpoints are own rows: credit + symmetric done locally.
+            # Intra-block is already bidirectional (every active own row
+            # initiates), so there is no visitor-initiated pass.
+            s2 = s2.at[cols.reshape(-1)].add(rev.reshape(-1))
+            d2 = d2.at[cols, own_gid[rows]].max(keep)
+            return s2, d2, comps2, credit, done
+        credit2 = credit.at[cols.reshape(-1)].add(rev.reshape(-1))
+        done2 = done.at[cols, own_gid[rows]].max(keep)
+
+        # --- visitor-initiated: each *active* visiting row processes its
+        # first pending chunk of the HOST's columns, dedup'd against this
+        # hop's host-initiated picks. Without this pass a pair's progress
+        # would be chained to its statically assigned host row's activity,
+        # stalling below-gamma visitors. The visitor's partial score is its
+        # departure-time score riding the packet PLUS the credits earned so
+        # far this cycle (the credit rider) — an underestimate only by the
+        # visitor's home-side accrual, so a visitor crossing gamma in
+        # flight pauses at the very next host, like the host machine's
+        # per-round re-check.
+        pm_hop = jnp.zeros((m_l, m_l), bool).at[rows, cols].max(keep)
+        pending2 = pending.T & ~pm_hop.T  # (vis rows, own cols)
+        pend_chunk2 = jnp.any(pending2.reshape(m_l, nc, b), axis=2)
+        ci2 = jnp.argmax(pend_chunk2, axis=1)
+        cols2 = ci2[:, None] * b + jnp.arange(b)[None, :]  # (m_l, b) own-local
+        xj2 = x_loc[cols2.reshape(-1)].reshape(m_l, b, -1)
+        c_vals2 = c_loc[cols2, vis_gid[:, None]]  # c[own i, vis j] == c[j, i]
+        hr_fwd2, hr_rev2 = pair_moments(x_vis, c_vals2, xj2,
+                                        psum_axis=sample_axis)
+        stat2 = (hx_loc[cols2] - hx_vis[:, None]) + (hr_fwd2 - hr_rev2)
+
+        act_vis = (s_vis + credit < gamma) & ~fin_vis & mask_vis
+        keep2 = (act_vis[:, None]
+                 & jnp.take_along_axis(pending2, cols2, axis=1)
+                 & keep_flag)
+        fwd2 = jnp.where(keep2, jnp.square(jnp.minimum(0.0, stat2)), 0.0)
+        rev2 = jnp.where(keep2, jnp.square(jnp.minimum(0.0, -stat2)), 0.0)
+        s2 = s2.at[cols2.reshape(-1)].add(rev2.reshape(-1))
+        d2 = d2.at[cols2, vis_gid[rows]].max(keep2)
+        credit2 = credit2 + jnp.sum(fwd2, axis=1)
+        done2 = done2.at[rows, own_gid[cols2]].max(keep2)
+        comps2 = comps2 + jnp.sum(keep2).astype(comps.dtype)
+        return s2, d2, comps2, credit2, done2
+
+    cdtype = jnp.int32
+    state0 = dict(
+        s=jnp.where(mask_loc, 0.0, jnp.inf).astype(x_loc.dtype),
+        d=~pv,
+        gamma=jnp.asarray(gamma0, x_loc.dtype),
+        comparisons=jnp.asarray(0, cdtype),
+        rounds=jnp.asarray(0, jnp.int32),
+        terminal=jnp.asarray(False),
+    )
+
+    def cycle(st):
+        s, d, gamma = st["s"], st["d"], st["gamma"]
+        comps = jnp.asarray(0, cdtype)
+        zero_credit = jnp.zeros((m_l,), x_loc.dtype)
+        zero_done = jnp.zeros((m_l, m), bool)
+
+        # Hop 0: intra-block pairs (no packet, no riders; the visitor
+        # arguments are unused at t=0).
+        s, d, comps, _, _ = hop(s, d, gamma, comps, zero_credit, zero_done,
+                                x_loc, hx_loc, mask_loc, s, jnp.all(d, axis=1),
+                                r_idx, 0)
+
+        # Hops 1..R//2: the block packet circulates with its riders. The
+        # departure-time score + finished snapshot ride along so remote
+        # hosts can gate visitor-initiated work on (stale score + in-flight
+        # credits) < gamma.
+        pkt = {"x": x_loc, "hx": hx_loc, "mask": mask_loc,
+               "s0": s, "fin": jnp.all(d, axis=1),
+               "credit": zero_credit, "done": zero_done}
+        if n_steps:
+            pkt = _shift_by(pkt, 1, ring_axes, ring_sizes)
+        for t in range(1, n_steps + 1):
+            src = (r_idx - t) % big_r
+            s, d, comps, cr, dn = hop(
+                s, d, gamma, comps, pkt["credit"], pkt["done"],
+                pkt["x"], pkt["hx"], pkt["mask"], pkt["s0"], pkt["fin"],
+                src, t,
+            )
+            pkt = {**pkt, "credit": cr, "done": dn}
+            if t < n_steps:
+                pkt = _shift_by(pkt, 1, ring_axes, ring_sizes)
+        if n_steps:
+            # Ride the riders the rest of the way home (total hops == R).
+            home = _shift_by({"credit": pkt["credit"], "done": pkt["done"]},
+                             big_r - n_steps, ring_axes, ring_sizes)
+            s = s + home["credit"]
+            d = d | home["done"]
+
+        # Cycle epilogue: globally consistent gamma/termination bookkeeping.
+        processed = jax.lax.psum(comps, ring_axes)
+        gamma2 = jnp.where(processed > 0, gamma,
+                           gamma * jnp.asarray(gamma_growth, gamma.dtype))
+        fin = jnp.all(d, axis=1)
+        below = (s < gamma2) & mask_loc
+        n_bf = jax.lax.psum(jnp.sum(below & fin), ring_axes)
+        n_bu = jax.lax.psum(jnp.sum(below & ~fin), ring_axes)
+        return dict(
+            s=s, d=d, gamma=gamma2,
+            comparisons=st["comparisons"] + processed,
+            rounds=st["rounds"] + 1,
+            terminal=(n_bf > 0) & (n_bu == 0),
+        )
+
+    def cond(st):
+        return ~st["terminal"] & (st["rounds"] < max_rounds) & has_pairs
+
+    final = jax.lax.while_loop(cond, cycle, state0)
+    scores = jnp.where(mask_loc, final["s"], jnp.inf)
+    return (scores, final["comparisons"], final["rounds"],
+            final["terminal"] | ~has_pairs)
 
 
 # ---------------------------------------------------------------------------

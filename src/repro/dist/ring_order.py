@@ -22,18 +22,26 @@ credit accumulators device-resident across the whole recovery on a 2-axis
     buffer per device — and the circulating block packets — by the model
     shard count.
 
-The outer loop reuses the host/scan drivers' power-of-two bucket schedule
-(``ring_order_stages``): block sizes stay static within a stage, so the ring
-schedule compiles once per stage (<= log2 p specializations), and the <=
-log2 p stage transitions compact live rows with a device-side
+Each iteration evaluates either the dense messaging ring (``_ring_body``)
+or — with ``threshold=True`` — the paper's comparison-saving threshold state
+machine run *per shard* (``_ring_threshold_body``: pending chunks processed
+per hop for resident AND visiting rows, credits/done-masks riding the
+packet, gamma growth and termination psum'd ring-wide; see dist/ring.py).
+
+The outer loop consumes the topology-aware power-of-two bucket plan shared
+with the scan driver (``repro.utils.schedule.make_schedule`` with
+``ring=R``): block sizes stay static within a stage, so the ring schedule
+compiles once per stage (<= log2 p specializations), and the <= log2 p
+stage transitions compact live rows with a device-side
 ``jnp.nonzero(size=m)`` gather — the only points where rows move between
 shards. Everything runs in ONE jit dispatch, like ``causal_order_scan``.
 
 Exactness: identical causal orders to ``causal_order`` (host driver),
-``causal_order_scan`` and the serial numpy oracle; scores match the dense
-evaluation to f32 summation order (asserted across 1/2/4/8-shard rings in
-tests/test_ring_order.py, which the CI ``multidevice`` lane runs on 8 forced
-host devices).
+``causal_order_scan`` and the serial numpy oracle, dense AND thresholded;
+scores match the dense evaluation to f32 summation order (asserted across
+1/2/4/8-shard rings in tests/test_ring_order.py and
+tests/test_ring_threshold.py, which the CI ``multidevice`` lane runs on 8
+forced host devices).
 """
 
 from __future__ import annotations
@@ -46,8 +54,8 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.covariance import VAR_EPS, cov_matrix, normalize, rank1_gates
-from repro.core.paralingam import _scan_stages
-from repro.dist.ring import _ring_body
+from repro.dist.ring import _ring_body, _ring_threshold_body
+from repro.utils.schedule import make_schedule
 from repro.utils.shapes import next_pow2
 
 
@@ -59,19 +67,14 @@ from repro.utils.shapes import next_pow2
 def ring_order_stages(p: int, min_bucket: int, r: int) -> list[tuple[int, int]]:
     """Static stage plan ``[(buffer size m, iteration count), ...]``.
 
-    The scan driver's power-of-two bucket schedule (``_scan_stages``) with
-    the bucket floor raised to the (power-of-two) ring size ``r``: each
-    stage's m is pow-2, >= r (so the m/r-row blocks stay non-empty and
-    equal, hence divisible), and >= the live-row count of every iteration it
-    covers. Total iterations sum to p - 1 (the last live row needs no
-    find-root). With r=1 this IS the scan schedule."""
-    if r & (r - 1):
-        raise ValueError(f"ring size must be a power of two, got {r}")
-    if r > next_pow2(p):
-        # Ring wider than the padded problem: one stage, one row block of
-        # size r/r = 1 per device, the excess rows dead from the start.
-        return [(r, p - 1)] if p > 1 else []
-    return _scan_stages(p, next_pow2(max(min_bucket, r)))
+    Now just the topology-aware :func:`repro.utils.schedule.make_schedule`
+    with ring size ``r``: each stage's m is pow-2, a multiple of ``r`` (so
+    the m/r-row blocks stay non-empty and equal, hence divisible), and >=
+    the live-row count of every iteration it covers. Total iterations sum
+    to p - 1 (the last live row needs no find-root). With r=1 this IS the
+    scan schedule (``core.paralingam._scan_stages``) — the two drivers
+    consume the same ``Schedule`` object and cannot drift."""
+    return list(make_schedule(p, min_bucket, ring=r).stages)
 
 
 # ---------------------------------------------------------------------------
@@ -81,32 +84,59 @@ def ring_order_stages(p: int, min_bucket: int, r: int) -> list[tuple[int, int]]:
 
 @lru_cache(maxsize=None)
 def _make_ring_order_fn(mesh: Mesh, sample_axis: str | None, p: int, n: int,
-                        min_bucket: int, backend: str = "xla"):
+                        min_bucket: int, backend: str = "xla",
+                        threshold: bool = False, chunk: int = 16,
+                        gamma0: float = 1e-5, gamma_growth: float = 2.0,
+                        max_rounds: int = 100_000):
     """Build the jitted staged ring driver for one (mesh, problem) shape.
 
-    Cached on the canonical mesh + static shape (+ concrete score backend)
-    so repeated fits reuse the compiled executable (jax Mesh hashes by
-    device ids + axis names). ``backend`` ``"pallas"``/``"pallas_fused"``
-    feeds the ring bodies' entropy reductions from the moments-emitting
-    kernel; the psum seam is unchanged because the kernel exports raw
-    (m1, m2) sums (see ``dist/ring._block_stat``)."""
+    Cached on the canonical mesh + static shape (+ concrete score backend
+    + the threshold machine's static knobs) so repeated fits reuse the
+    compiled executable (jax Mesh hashes by device ids + axis names).
+    ``backend`` ``"pallas"``/``"pallas_fused"`` feeds the ring bodies'
+    entropy reductions from the moments-emitting kernel; the psum seam is
+    unchanged because the kernel exports raw (m1, m2) sums (see
+    ``dist/ring._block_stat``). ``threshold=True`` swaps each iteration's
+    dense ring sweep for the per-shard threshold state machine
+    (``dist.ring._ring_threshold_body``) — same argmin-root contract, with
+    device-measured comparison/round/convergence counters instead of the
+    dense path's analytic ones."""
     big_r = mesh.shape["ring"]
-    stages = ring_order_stages(p, min_bucket, big_r)
+    sched = make_schedule(p, min_bucket, ring=big_r,
+                          sample_shards=int(dict(mesh.shape).get("model", 1)))
+    stages = list(sched.stages)
+    cdtype = jnp.int32
 
     def make_stage(m: int, cnt: int, pos: int):
         m_l = m // big_r
 
         def iteration(k, st, ig_all):
-            x_loc, c_loc, mk, ig, order = st
-            # --- find root: messaging ring over the live blocks ---
-            scores = _ring_body(
-                x_loc, c_loc, mk, ring_axes=("ring",), ring_sizes=(big_r,),
-                sample_axis=sample_axis, backend=backend,
-            )
-            s_all = jax.lax.all_gather(scores, "ring", tiled=True)  # (m,)
+            x_loc, c_loc, mk, ig, order, comps_it, rounds_it, conv_it = st
             mk_all = jax.lax.all_gather(mk, "ring", tiled=True)
+            # --- find root: messaging ring over the live blocks ---
+            if threshold:
+                scores, comps, rounds, conv = _ring_threshold_body(
+                    x_loc, c_loc, mk, ring_axes=("ring",),
+                    ring_sizes=(big_r,), sample_axis=sample_axis,
+                    gamma0=gamma0, gamma_growth=gamma_growth,
+                    chunk=chunk, max_rounds=max_rounds,
+                )
+            else:
+                scores = _ring_body(
+                    x_loc, c_loc, mk, ring_axes=("ring",),
+                    ring_sizes=(big_r,),
+                    sample_axis=sample_axis, backend=backend,
+                )
+                r = jnp.sum(mk_all).astype(cdtype)  # live rows this iteration
+                comps = r * (r - 1) // 2
+                rounds = jnp.asarray(0, jnp.int32)
+                conv = jnp.asarray(True)
+            s_all = jax.lax.all_gather(scores, "ring", tiled=True)  # (m,)
             root = jnp.argmin(s_all).astype(jnp.int32)  # stage-buffer index
             order = order.at[pos + k].set(ig_all[root])
+            comps_it = comps_it.at[pos + k].set(comps)
+            rounds_it = rounds_it.at[pos + k].set(rounds.astype(jnp.int32))
+            conv_it = conv_it.at[pos + k].set(conv)
 
             # --- broadcast the root's rows: the only per-iteration wire
             # traffic besides the (m,) score/mask gathers. x_root is the
@@ -161,15 +191,17 @@ def _make_ring_order_fn(mesh: Mesh, sample_axis: str | None, p: int, n: int,
 
             # --- retire the root: re-mask, don't re-shard.
             mk2 = mk & (row_ids != root)
-            return x2, c2, mk2, ig, order
+            return x2, c2, mk2, ig, order, comps_it, rounds_it, conv_it
 
-        def body(x_loc, c_loc, mk_loc, ig_loc, order):
+        def body(x_loc, c_loc, mk_loc, ig_loc, order, comps_it, rounds_it,
+                 conv_it):
             # The row-id -> variable-id map only changes at compactions, so
             # its gather runs once per stage, not once per iteration.
             ig_all = jax.lax.all_gather(ig_loc, "ring", tiled=True)
             return jax.lax.fori_loop(
                 0, cnt, lambda k, st: iteration(k, st, ig_all),
-                (x_loc, c_loc, mk_loc, ig_loc, order),
+                (x_loc, c_loc, mk_loc, ig_loc, order, comps_it, rounds_it,
+                 conv_it),
             )
 
         return jax.shard_map(
@@ -177,11 +209,11 @@ def _make_ring_order_fn(mesh: Mesh, sample_axis: str | None, p: int, n: int,
             mesh=mesh,
             in_specs=(
                 P("ring", sample_axis), P("ring", None), P("ring"),
-                P("ring"), P(),
+                P("ring"), P(), P(), P(), P(),
             ),
             out_specs=(
                 P("ring", sample_axis), P("ring", None), P("ring"),
-                P("ring"), P(),
+                P("ring"), P(), P(), P(), P(),
             ),
             check_vma=False,
         )
@@ -195,6 +227,9 @@ def _make_ring_order_fn(mesh: Mesh, sample_axis: str | None, p: int, n: int,
     @jax.jit
     def run(xn, c):
         order = jnp.zeros((p,), jnp.int32)
+        comps_it = jnp.zeros((p,), cdtype)
+        rounds_it = jnp.zeros((p,), jnp.int32)
+        conv_it = jnp.ones((p,), bool)
         idx_g = jnp.arange(p, dtype=jnp.int32)
         xb, cb = xn, c
         mloc = jnp.ones((p,), bool)
@@ -212,11 +247,13 @@ def _make_ring_order_fn(mesh: Mesh, sample_axis: str | None, p: int, n: int,
                 cb = cb[sel][:, sel]
                 mloc = jnp.arange(m) < live
                 m_cur = m
-            xb, cb, mloc, idx_g, order = stage(xb, cb, mloc, idx_g, order)
+            xb, cb, mloc, idx_g, order, comps_it, rounds_it, conv_it = stage(
+                xb, cb, mloc, idx_g, order, comps_it, rounds_it, conv_it
+            )
             pos += cnt
         # One live row remains; no find-root needed (matches the host driver).
         order = order.at[p - 1].set(idx_g[jnp.argmax(mloc)])
-        return order
+        return order, comps_it, rounds_it, conv_it
 
     return run
 
@@ -257,25 +294,26 @@ def causal_order_ring(x, config=None, mesh=None):
     over all devices; any shape is canonicalized by :func:`_canonical_mesh`
     (``model`` axis -> sample sharding, everything else -> ring). Degenerate
     configurations (non-power-of-two ring) fall back to
-    ``causal_order_scan`` — same order, single shard.
+    ``causal_order_scan`` — same order (and same dense/threshold inner
+    evaluation), single shard.
 
-    Returns the same ``ParaLiNGAMResult`` contract as the dense scan driver:
-    analytic per-iteration comparison counts (the ring evaluates every live
-    pair once, messaging-credited to both endpoints), zero threshold rounds.
+    ``config.threshold`` selects the per-iteration evaluation: the dense
+    messaging ring sweep (every live pair evaluated once, both endpoints
+    credited), or the per-shard threshold state machine
+    (``dist.ring._ring_threshold_body``) whose comparison savings compose
+    with the ring's 1/(R*M) HBM/wire scaling. Either way the
+    ``ParaLiNGAMResult`` counters are uniform with the host/scan drivers:
+    per-iteration device-measured ``comparisons``/``rounds``/``converged``
+    (analytic r(r-1)/2, 0, True for the dense sweep — measured on device
+    from the live mask, not host bookkeeping).
     """
     from repro.core.paralingam import (
         ParaLiNGAMConfig,
-        ParaLiNGAMResult,
+        _result_from_counters,
         causal_order_scan,
     )
 
     cfg = config or ParaLiNGAMConfig()
-    if cfg.threshold or cfg.method == "threshold":
-        raise ValueError(
-            "causal_order_ring runs the dense messaging evaluation; "
-            "threshold-in-ring is not implemented (use method='scan' with "
-            "threshold=True, or ring=False)"
-        )
     x = jnp.asarray(x, cfg.dtype)
     p, n = x.shape
     canon, big_r, sample_axis = _canonical_mesh(mesh, n)
@@ -289,22 +327,10 @@ def causal_order_ring(x, config=None, mesh=None):
     c = cov_matrix(xn)
     run = _make_ring_order_fn(
         canon, sample_axis, p, n, next_pow2(max(cfg.min_bucket, 1)),
-        backend=backend,
+        backend=backend, threshold=cfg.threshold, chunk=cfg.chunk,
+        gamma0=float(cfg.gamma0), gamma_growth=float(cfg.gamma_growth),
+        max_rounds=cfg.max_rounds,
     )
-    order = run(xn, c)
-
-    comps_dense = sum(r * (r - 1) // 2 for r in range(2, p + 1))
-    per_iter = [
-        {"r": r, "comparisons": r * (r - 1) // 2, "rounds": 0,
-         "converged": True}
-        for r in range(p, 1, -1)
-    ]
-    return ParaLiNGAMResult(
-        order=[int(v) for v in np.asarray(order)],
-        comparisons=comps_dense,
-        comparisons_dense=comps_dense,
-        comparisons_serial=2 * comps_dense,
-        rounds=0,
-        per_iteration=per_iter,
-        converged=True,
-    )
+    order, comps_it, rounds_it, conv_it = run(xn, c)
+    return _result_from_counters(order, comps_it, rounds_it, conv_it, p,
+                                 cfg.max_rounds)

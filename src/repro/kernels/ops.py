@@ -143,7 +143,7 @@ def score_batch(xb, cb, maskb, *, block: int = 8, block_n: int = 512,
     )
 
 
-def pair_moments(xn, c_vals, xj):
+def pair_moments(xn, c_vals, xj, n_valid=None, psum_axis: str | None = None):
     """Both-direction residual entropies for the threshold scheduler's
     gathered comparison chunks (``(m, B)`` each; see
     ``repro.core.pairwise.pair_moments``).
@@ -158,7 +158,7 @@ def pair_moments(xn, c_vals, xj):
     ``SCORE_BACKENDS`` entry) is part of adding that kernel."""
     from repro.core.pairwise import pair_moments as _pair_moments
 
-    return _pair_moments(xn, c_vals, xj)
+    return _pair_moments(xn, c_vals, xj, n_valid=n_valid, psum_axis=psum_axis)
 
 
 def update_data(x, x_root, b, *, block_i: int = 8, block_n: int = 512):

@@ -34,7 +34,7 @@ from dataclasses import dataclass
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.paralingam import ParaLiNGAMConfig, fit_batch
+from repro.core.paralingam import ParaLiNGAMConfig, fit_batch, resolve_order_backend
 from repro.core.validate import require_valid
 
 # Re-export shims: the bucket-grid family's canonical home is serve.buckets
@@ -81,11 +81,11 @@ def check_engine_config(config: ParaLiNGAMConfig | None) -> ParaLiNGAMConfig:
     engines: fail at construction, not at the first flush — fit_batch has no
     batched ring form (the batch axis shards via ``rules`` instead)."""
     config = config or ParaLiNGAMConfig()
-    if config.ring:
+    if resolve_order_backend(config) == "ring":
         raise ValueError(
             "the LiNGAM engines dispatch through fit_batch, which has no "
-            "ring form — use config.ring=False and shard the batch axis "
-            "via rules=make_rules(cfg, mesh)"
+            "ring form — use order_backend='host' or 'scan' and shard the "
+            "batch axis via rules=make_rules(cfg, mesh)"
         )
     return config
 

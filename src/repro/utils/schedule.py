@@ -1,0 +1,128 @@
+"""Topology-aware bucket schedule shared by every causal-order driver.
+
+The ParaLiNGAM outer loop shrinks the remaining set U from p rows to 1; to
+keep the number of compiled specializations logarithmic, rows are compacted
+into power-of-two *buckets*: each stage runs some iterations at a fixed
+buffer size m, and the <= log2 p stage transitions compact live rows into
+the next smaller buffer. Historically the host driver, the device-resident
+scan driver (``core.paralingam._scan_order_impl``) and the ring driver
+(``dist.ring_order``) each derived this plan separately — and the ring's
+extra constraint (m must stay a multiple of the ring size R so the per-shard
+row blocks stay equal and non-empty) lived only in the ring module, so the
+scan and ring plans could silently drift.
+
+:class:`Schedule` is the single source of truth: one object that knows the
+problem size p, the bucket floor, and the topology (ring size R, sample
+shards M), and emits the stage plan every driver consumes. Invariants
+(enforced at construction, property-tested in tests/test_schedule.py):
+
+  * every stage size m is a power of two and a multiple of ``ring``;
+  * stage m covers every iteration it spans: m >= live-row count r for each
+    of its iterations (coverage — no compaction ever drops a live row);
+  * iteration counts sum to p - 1 (the last live row needs no find-root);
+  * ``ring=1`` reproduces the scan driver's plan exactly (scan == ring at
+    R=1), so the two drivers cannot diverge.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+from repro.utils.shapes import next_pow2
+
+
+@dataclass(frozen=True)
+class Schedule:
+    """Static stage plan of one causal-order recovery.
+
+    ``stages`` is a tuple of ``(m, count)`` pairs: run ``count`` outer
+    iterations at buffer size ``m``, then compact into the next stage's
+    buffer. Hashable and immutable so jitted drivers can key their caches on
+    it directly."""
+
+    p: int  # problem size (number of variables)
+    min_bucket: int  # bucket floor requested by the config
+    ring: int = 1  # ring shard count R the buffers must stay divisible by
+    sample_shards: int = 1  # model-axis shard count M (bookkeeping only —
+    #   the samples axis never compacts, but the (R, M) pair identifies the
+    #   topology a plan was built for, and the analytic HBM/wire model in
+    #   EXPERIMENTS.md reads both factors off the schedule)
+    stages: tuple[tuple[int, int], ...] = field(default=())
+
+    def __post_init__(self):
+        if self.ring < 1 or self.ring & (self.ring - 1):
+            raise ValueError(f"ring size must be a power of two, got {self.ring}")
+        if self.sample_shards < 1:
+            raise ValueError(f"sample_shards must be >= 1, got {self.sample_shards}")
+        # Coverage + divisibility invariants: cheap, and they turn schedule
+        # bugs into construction-time errors instead of silent wrong orders.
+        r = self.p
+        for m, cnt in self.stages:
+            if m & (m - 1):
+                raise ValueError(f"stage size {m} is not a power of two")
+            if m % self.ring:
+                raise ValueError(
+                    f"stage size {m} is not a multiple of ring={self.ring}")
+            if m < r:
+                raise ValueError(
+                    f"stage size {m} cannot cover {r} live rows")
+            r -= cnt
+        if sum(c for _, c in self.stages) != max(self.p - 1, 0):
+            raise ValueError(
+                f"stage counts {self.stages} do not sum to p-1={self.p - 1}")
+
+    @property
+    def total_iterations(self) -> int:
+        """Find-root iterations the plan covers (p - 1; the final live row
+        retires without one)."""
+        return sum(cnt for _, cnt in self.stages)
+
+    @property
+    def num_compactions(self) -> int:
+        """Stage transitions where rows move (bounded by log2 p)."""
+        return max(len(self.stages) - 1, 0)
+
+    def block(self, m: int) -> int:
+        """Per-shard row-block size at stage buffer size ``m``."""
+        return m // self.ring
+
+    def walk(self):
+        """Yield ``(m, count, pos)`` per stage, ``pos`` the index of the
+        stage's first outer iteration — the loop shape both the scan and
+        ring drivers are written around."""
+        pos = 0
+        for m, cnt in self.stages:
+            yield m, cnt, pos
+            pos += cnt
+
+    def live_at(self, pos: int) -> int:
+        """Live-row count entering outer iteration ``pos`` (full buffers;
+        padded datasets may run with fewer — they drain early)."""
+        return self.p - pos
+
+
+def make_schedule(p: int, min_bucket: int, ring: int = 1,
+                  sample_shards: int = 1) -> Schedule:
+    """Build the power-of-two bucket schedule for one recovery.
+
+    The plan mirrors the host driver's bucketing: iteration at r live rows
+    runs in a buffer of size ``next_pow2(r)``, floored at
+    ``next_pow2(max(min_bucket, ring))`` (the ring floor keeps every shard's
+    block non-empty) and capped at ``next_pow2(p)``. Consecutive equal sizes
+    merge into stages. A ring wider than the padded problem degenerates to a
+    single stage of size ``ring`` — one row (or less) per shard, the excess
+    dead from the start. ``ring=1`` is exactly the scan plan."""
+    if ring < 1 or ring & (ring - 1):
+        raise ValueError(f"ring size must be a power of two, got {ring}")
+    if p <= 1:
+        stages: tuple[tuple[int, int], ...] = ()
+    elif ring > next_pow2(p):
+        stages = ((ring, p - 1),)
+    else:
+        cap = next_pow2(p)
+        floor = next_pow2(max(min_bucket, ring, 1))
+        ms = [min(cap, max(floor, next_pow2(r))) for r in range(p, 1, -1)]
+        stages = tuple((m, len(list(g))) for m, g in itertools.groupby(ms))
+    return Schedule(p=p, min_bucket=min_bucket, ring=ring,
+                    sample_shards=sample_shards, stages=stages)

@@ -172,7 +172,7 @@ def test_nan_result_exhausts_retries_to_typed_error(fake_clock):
 
 def test_construction_contracts():
     with pytest.raises(ValueError, match="ring"):
-        AsyncLingamEngine(ParaLiNGAMConfig(ring=True), start=False)
+        AsyncLingamEngine(ParaLiNGAMConfig(order_backend="ring"), start=False)
     with pytest.raises(ValueError, match="max_batch"):
         AsyncLingamEngine(CFG, LingamServeConfig(max_batch=4),
                           batch_cfg=BatchingConfig(max_batch=8), start=False)

@@ -30,7 +30,7 @@ def _gen(p, n, seed, density="sparse"):
 def test_fit_single_dispatch_parity():
     x = _gen(10, 3000, seed=0)
     res, b = fit(x)
-    host = causal_order(x, ParaLiNGAMConfig(method="dense"))
+    host = causal_order(x, ParaLiNGAMConfig(order_backend="host"))
     assert res.order == host.order
     b_np = pruning.estimate_adjacency(x, res.order)
     om_np = pruning.regression_residual_variances(x, res.order)
@@ -40,7 +40,7 @@ def test_fit_single_dispatch_parity():
 
 def test_fit_threshold_inner_matches_serial():
     x = _gen(9, 2500, seed=4)
-    res, _ = fit(x, ParaLiNGAMConfig(method="threshold", chunk=4, min_bucket=8))
+    res, _ = fit(x, ParaLiNGAMConfig(order_backend="host", threshold=True, chunk=4, min_bucket=8))
     assert res.order == direct_lingam.causal_order(x)
     assert res.comparisons <= res.comparisons_dense
     assert res.rounds > 0
@@ -51,7 +51,7 @@ def test_fit_order_counters_match_scan():
     from repro.core.paralingam import causal_order_scan
 
     x = _gen(17, 1500, seed=2)
-    cfg = ParaLiNGAMConfig(method="scan", threshold=True, chunk=8, min_bucket=8)
+    cfg = ParaLiNGAMConfig(order_backend="scan", threshold=True, chunk=8, min_bucket=8)
     res_fit, _ = fit(x, cfg)
     res_scan = causal_order_scan(x, cfg)
     assert res_fit.order == res_scan.order
@@ -80,7 +80,7 @@ def test_fit_batch_matches_per_dataset_loop(p, n, min_bucket):
 
 
 def test_fit_batch_threshold_counters():
-    cfg = ParaLiNGAMConfig(method="scan", threshold=True, chunk=8,
+    cfg = ParaLiNGAMConfig(order_backend="scan", threshold=True, chunk=8,
                            gamma0=1e-6, min_bucket=16)
     xs = np.stack([_gen(16, 1000, seed=i) for i in range(3)])
     res = fit_batch(xs, cfg)
@@ -112,7 +112,7 @@ def test_causal_order_batch_matches_scan():
 def test_fit_batch_padded_parity(threshold):
     """Ragged (p, n) datasets zero-padded into one (B, 32, 2048) bucket give
     the same orders as dedicated unpadded fits and B within tolerance."""
-    cfg = ParaLiNGAMConfig(method="scan", min_bucket=8, threshold=threshold,
+    cfg = ParaLiNGAMConfig(order_backend="scan", min_bucket=8, threshold=threshold,
                            chunk=16, gamma0=1e-6)
     raw = [_gen(17, 1800, seed=1), _gen(32, 2048, seed=2), _gen(8, 1000, seed=3)]
     xs = np.zeros((3, 32, 2048))
@@ -156,9 +156,9 @@ def test_batch_rejects_ring_config():
     ring form; the batch axis shards via `rules` instead)."""
     xs = np.zeros((2, 4, 8))
     with pytest.raises(ValueError, match="ring"):
-        fit_batch(xs, ParaLiNGAMConfig(ring=True))
+        fit_batch(xs, ParaLiNGAMConfig(order_backend="ring"))
     with pytest.raises(ValueError, match="ring"):
-        causal_order_batch(xs, ParaLiNGAMConfig(ring=True))
+        causal_order_batch(xs, ParaLiNGAMConfig(order_backend="ring"))
 
 
 # ---------------------------------------------------------------------------

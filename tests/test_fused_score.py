@@ -142,7 +142,7 @@ def test_fused_order_matches_serial_oracle(seed):
     data = sem.generate(sem.SemSpec(p=8, n=2500, density="sparse", seed=seed))
     serial = direct_lingam.causal_order(data["x"])
     res = causal_order(
-        data["x"], ParaLiNGAMConfig(method="dense", score_backend="xla_fused", min_bucket=8)
+        data["x"], ParaLiNGAMConfig(order_backend="host", score_backend="xla_fused", min_bucket=8)
     )
     assert res.order == serial
 
@@ -165,16 +165,16 @@ def test_fused_and_scan_match_dense_driver(p):
     return the host dense driver's exact order (which the p=8 suites pin to
     the serial numpy oracle)."""
     data = sem.generate(sem.SemSpec(p=p, n=1500, density="sparse", seed=13))
-    r_dense = causal_order(data["x"], ParaLiNGAMConfig(method="dense"))
-    r_fused = causal_order(data["x"], ParaLiNGAMConfig(method="dense", score_backend="xla_fused"))
-    r_scan = causal_order(data["x"], ParaLiNGAMConfig(method="scan"))
+    r_dense = causal_order(data["x"], ParaLiNGAMConfig(order_backend="host"))
+    r_fused = causal_order(data["x"], ParaLiNGAMConfig(order_backend="host", score_backend="xla_fused"))
+    r_scan = causal_order(data["x"], ParaLiNGAMConfig(order_backend="scan"))
     assert r_fused.order == r_dense.order
     assert r_scan.order == r_dense.order
 
 
 def test_scan_kernel_backed_matches():
     data = sem.generate(sem.SemSpec(p=8, n=1024, density="sparse", seed=6))
-    r_dense = causal_order(data["x"], ParaLiNGAMConfig(method="dense"))
+    r_dense = causal_order(data["x"], ParaLiNGAMConfig(order_backend="host"))
     r_scan_k = causal_order_scan(
         data["x"], ParaLiNGAMConfig(score_backend="pallas_fused", min_bucket=8)
     )
@@ -192,9 +192,9 @@ def test_threshold_chunk_not_divisor_of_p():
     data = sem.generate(sem.SemSpec(p=10, n=1500, density="sparse", seed=4))
     r_thr = causal_order(
         data["x"],
-        ParaLiNGAMConfig(method="threshold", bucket=False, chunk=16),
+        ParaLiNGAMConfig(order_backend="host", threshold=True, bucket=False, chunk=16),
     )
     r_dense = causal_order(
-        data["x"], ParaLiNGAMConfig(method="dense", bucket=False)
+        data["x"], ParaLiNGAMConfig(order_backend="host", bucket=False)
     )
     assert r_thr.order == r_dense.order

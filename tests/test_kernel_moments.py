@@ -267,7 +267,7 @@ def _ring_mesh(r, msize=1):
 
 def _assert_ring_kernel_parity(p, mesh):
     x, serial, min_bucket = _ring_problem(p)
-    cfg = ParaLiNGAMConfig(ring=True, min_bucket=min_bucket,
+    cfg = ParaLiNGAMConfig(order_backend="ring", min_bucket=min_bucket,
                            score_backend="pallas")
     res = causal_order_ring(x, cfg, mesh=mesh)
     assert res.order == list(serial)

@@ -95,7 +95,7 @@ def test_max_batch_splits_dispatches():
 
 
 def test_threshold_config_flows_through():
-    cfg = ParaLiNGAMConfig(method="scan", threshold=True, chunk=8,
+    cfg = ParaLiNGAMConfig(order_backend="scan", threshold=True, chunk=8,
                            gamma0=1e-6, min_bucket=8)
     eng = LingamEngine(cfg)
     x = _gen(16, 800, seed=40)
@@ -114,7 +114,7 @@ def test_submit_rejects_bad_rank():
 
 def test_ring_config_rejected_at_construction():
     with pytest.raises(ValueError, match="ring"):
-        LingamEngine(ParaLiNGAMConfig(ring=True))
+        LingamEngine(ParaLiNGAMConfig(order_backend="ring"))
 
 
 @pytest.mark.parametrize("fail_call,pending_after", [(1, 3), (2, 1)])

@@ -25,7 +25,7 @@ def _data(p=8, n=3000, seed=0, density="sparse"):
 def test_dense_matches_serial_oracle(seed, density):
     data = _data(p=7, n=2500, seed=seed, density=density)
     serial = direct_lingam.causal_order(data["x"])
-    res = causal_order(data["x"], ParaLiNGAMConfig(method="dense", min_bucket=8))
+    res = causal_order(data["x"], ParaLiNGAMConfig(order_backend="host", min_bucket=8))
     assert res.order == serial
 
 
@@ -35,7 +35,7 @@ def test_threshold_matches_serial_oracle(seed):
     serial = direct_lingam.causal_order(data["x"])
     res = causal_order(
         data["x"],
-        ParaLiNGAMConfig(method="threshold", chunk=4, min_bucket=8),
+        ParaLiNGAMConfig(order_backend="host", threshold=True, chunk=4, min_bucket=8),
     )
     assert res.order == serial
     # threshold must never do more work than the messaging-only baseline
@@ -47,7 +47,7 @@ def test_threshold_saves_comparisons():
     data = _data(p=16, n=2000, seed=5)
     res = causal_order(
         data["x"],
-        ParaLiNGAMConfig(method="threshold", chunk=4, min_bucket=16, gamma0=1e-6),
+        ParaLiNGAMConfig(order_backend="host", threshold=True, chunk=4, min_bucket=16, gamma0=1e-6),
     )
     assert 0.0 < res.saving_vs_serial < 1.0
     # messaging alone halves comparisons; threshold should add on top
@@ -56,7 +56,7 @@ def test_threshold_saves_comparisons():
 
 def test_recovers_true_causal_order():
     data = _data(p=10, n=6000, seed=7)
-    res = causal_order(data["x"], ParaLiNGAMConfig(method="dense"))
+    res = causal_order(data["x"], ParaLiNGAMConfig(order_backend="host"))
     assert sem.is_valid_causal_order(res.order, data["b_true"])
 
 
@@ -102,8 +102,8 @@ def test_threshold_order_and_savings_p64(seed):
     path while saving more than half the serial-DirectLiNGAM comparisons
     (messaging alone gives exactly 0.5; the threshold must beat it)."""
     data = sem.generate(sem.SemSpec(p=64, n=1500, density="sparse", seed=seed))
-    r_dense = causal_order(data["x"], ParaLiNGAMConfig(method="dense"))
-    r_thr = causal_order(data["x"], ParaLiNGAMConfig(method="threshold", chunk=16))
+    r_dense = causal_order(data["x"], ParaLiNGAMConfig(order_backend="host"))
+    r_thr = causal_order(data["x"], ParaLiNGAMConfig(order_backend="host", threshold=True, chunk=16))
     assert r_thr.order == r_dense.order
     # > 0.5 == strictly better than the messaging-only baseline (which saves
     # exactly half of serial: comparisons_serial == 2 * comparisons_dense)
@@ -123,7 +123,7 @@ def test_threshold_truncation_surfaced():
     with pytest.warns(UserWarning, match="max_rounds"):
         res = causal_order(
             data["x"],
-            ParaLiNGAMConfig(method="threshold", chunk=2, max_rounds=1,
+            ParaLiNGAMConfig(order_backend="host", threshold=True, chunk=2, max_rounds=1,
                              min_bucket=8),
         )
     assert not res.converged
@@ -131,7 +131,7 @@ def test_threshold_truncation_surfaced():
 
     # ample rounds -> converged, recorded per iteration
     res_ok = causal_order(
-        data["x"], ParaLiNGAMConfig(method="threshold", chunk=2, min_bucket=8)
+        data["x"], ParaLiNGAMConfig(order_backend="host", threshold=True, chunk=2, min_bucket=8)
     )
     assert res_ok.converged
     assert all(it["converged"] for it in res_ok.per_iteration)
@@ -139,13 +139,13 @@ def test_threshold_truncation_surfaced():
 
 def test_bucketing_equivalence():
     data = _data(p=10, n=1500, seed=4)
-    r1 = causal_order(data["x"], ParaLiNGAMConfig(method="dense", bucket=True, min_bucket=4))
-    r2 = causal_order(data["x"], ParaLiNGAMConfig(method="dense", bucket=False))
+    r1 = causal_order(data["x"], ParaLiNGAMConfig(order_backend="host", bucket=True, min_bucket=4))
+    r2 = causal_order(data["x"], ParaLiNGAMConfig(order_backend="host", bucket=False))
     assert r1.order == r2.order
 
 
 def test_kernel_backed_dense_matches():
     data = _data(p=8, n=1024, seed=6)
-    r1 = causal_order(data["x"], ParaLiNGAMConfig(method="dense", score_backend="xla"))
-    r2 = causal_order(data["x"], ParaLiNGAMConfig(method="dense", score_backend="pallas"))
+    r1 = causal_order(data["x"], ParaLiNGAMConfig(order_backend="host", score_backend="xla"))
+    r2 = causal_order(data["x"], ParaLiNGAMConfig(order_backend="host", score_backend="pallas"))
     assert r1.order == r2.order

@@ -49,7 +49,7 @@ def _ring_mesh(r: int, msize: int = 1) -> Mesh:
 
 def _assert_ring_parity(p: int, mesh: Mesh):
     x, serial, min_bucket = _problem(p)
-    cfg = ParaLiNGAMConfig(ring=True, min_bucket=min_bucket)
+    cfg = ParaLiNGAMConfig(order_backend="ring", min_bucket=min_bucket)
     res = causal_order_ring(x, cfg, mesh=mesh)
     assert res.order == list(serial)
     r_scan = causal_order_scan(x, ParaLiNGAMConfig(min_bucket=min_bucket))
@@ -110,7 +110,7 @@ def test_config_ring_routes_through_causal_order():
     """cfg.ring routes causal_order to the ring driver using the active (or
     default all-devices) mesh — same order as the scan path."""
     x, serial, min_bucket = _problem(17)
-    res = causal_order(x, ParaLiNGAMConfig(ring=True, min_bucket=min_bucket))
+    res = causal_order(x, ParaLiNGAMConfig(order_backend="ring", min_bucket=min_bucket))
     assert res.order == list(serial)
 
 
@@ -120,18 +120,25 @@ def test_config_ring_uses_active_mesh():
     mesh = _ring_mesh(4, msize=2)
     with jax.set_mesh(mesh):
         res = causal_order(
-            x, ParaLiNGAMConfig(ring=True, min_bucket=min_bucket)
+            x, ParaLiNGAMConfig(order_backend="ring", min_bucket=min_bucket)
         )
     assert res.order == list(serial)
 
 
-def test_ring_threshold_combination_rejected():
-    x, _, _ = _problem(8)
-    with pytest.raises(ValueError, match="threshold"):
-        causal_order(x, ParaLiNGAMConfig(ring=True, threshold=True))
-    # method="threshold" must not silently degrade to the dense evaluation
-    with pytest.raises(ValueError, match="threshold"):
-        causal_order(x, ParaLiNGAMConfig(ring=True, method="threshold"))
+def test_ring_threshold_combination_now_supported():
+    """order_backend="ring" + threshold=True is a first-class combination
+    since the threshold-inside-ring redesign: same order as the dense ring,
+    fewer device-measured comparisons (the deep parity matrix lives in
+    tests/test_ring_threshold.py)."""
+    x, serial, min_bucket = _problem(8)
+    res = causal_order(
+        x,
+        ParaLiNGAMConfig(order_backend="ring", threshold=True,
+                         min_bucket=min_bucket),
+    )
+    assert res.order == list(serial)
+    assert res.converged
+    assert res.comparisons <= res.comparisons_dense
 
 
 @pytest.mark.requires_multidevice(3)
@@ -142,7 +149,7 @@ def test_ring_order_nonpow2_ring_falls_back_to_scan():
     devs = np.array(jax.devices()[:3])
     mesh = Mesh(devs.reshape(3, 1), ("ring", "model"))
     res = causal_order_ring(
-        x, ParaLiNGAMConfig(ring=True, min_bucket=min_bucket), mesh=mesh
+        x, ParaLiNGAMConfig(order_backend="ring", min_bucket=min_bucket), mesh=mesh
     )
     assert res.order == list(serial)
 

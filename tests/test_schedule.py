@@ -1,0 +1,107 @@
+"""Property tests of the topology-aware bucket schedule
+(``repro.utils.schedule``) — the single stage plan consumed by the scan and
+ring order drivers.
+
+Invariants checked over a grid of (p, min_bucket, ring) shapes:
+coverage (every stage buffer holds all its live rows), power-of-two and
+ring-divisibility of every stage size, iteration counts summing to p - 1,
+scan == ring at R = 1, and the degenerate wide-ring plan. Violations must be
+construction-time ``ValueError``s, never silent wrong orders.
+"""
+
+import itertools
+
+import pytest
+
+from repro.utils.schedule import Schedule, make_schedule
+from repro.utils.shapes import next_pow2
+
+PS = (2, 3, 5, 8, 16, 17, 31, 64, 85, 100, 129)
+MIN_BUCKETS = (1, 4, 8, 32)
+RINGS = (1, 2, 4, 8)
+
+
+@pytest.mark.parametrize(
+    "p,min_bucket,ring", itertools.product(PS, MIN_BUCKETS, RINGS)
+)
+def test_schedule_invariants(p, min_bucket, ring):
+    sched = make_schedule(p, min_bucket, ring=ring)
+    assert sched.total_iterations == p - 1
+    r = p
+    for m, cnt, pos in sched.walk():
+        assert m & (m - 1) == 0, "stage size must be a power of two"
+        assert m % ring == 0, "stage size must divide evenly over the ring"
+        assert sched.block(m) * ring == m
+        assert sched.block(m) >= 1
+        assert sched.live_at(pos) == r
+        # coverage: the buffer holds every live row at every iteration it
+        # spans (live rows only shrink within a stage)
+        assert m >= min(r, p), f"stage m={m} cannot hold r={r} live rows"
+        if ring <= next_pow2(p):
+            assert m <= next_pow2(p)
+        r -= cnt
+    assert r == 1
+    # stage sizes strictly decrease (compactions only shrink buffers)
+    sizes = [m for m, _ in sched.stages]
+    assert sizes == sorted(sizes, reverse=True)
+    assert sched.num_compactions <= max(p.bit_length(), 1)
+
+
+@pytest.mark.parametrize("p,min_bucket", itertools.product(PS, MIN_BUCKETS))
+def test_ring1_is_the_scan_plan(p, min_bucket):
+    """R=1 must reproduce the scan driver's historical plan exactly — the
+    host bucketing law m(r) = clamp(next_pow2(r), floor, next_pow2(p))."""
+    sched = make_schedule(p, min_bucket, ring=1)
+    cap = next_pow2(p)
+    floor = next_pow2(max(min_bucket, 1))
+    expect = [min(cap, max(floor, next_pow2(r))) for r in range(p, 1, -1)]
+    got = [m for m, cnt, _ in sched.walk() for _ in range(cnt)]
+    assert got == expect
+
+
+@pytest.mark.parametrize("p", PS)
+@pytest.mark.parametrize("ring", (2, 4, 8))
+def test_ring_floor_clamps_stage_sizes(p, ring):
+    """The ring floor: no stage may be smaller than the ring (every shard
+    keeps a non-empty block), even when min_bucket asks for less."""
+    sched = make_schedule(p, 1, ring=ring)
+    assert all(m >= ring for m, _ in sched.stages)
+
+
+def test_wide_ring_degenerates_to_single_stage():
+    """ring wider than the padded problem: one stage of size ring — one row
+    (or zero) per shard, no compactions."""
+    sched = make_schedule(5, 4, ring=16)
+    assert sched.stages == ((16, 4),)
+    assert sched.num_compactions == 0
+
+
+def test_trivial_problems_have_empty_plans():
+    assert make_schedule(1, 8).stages == ()
+    assert make_schedule(0, 8).stages == ()
+    assert make_schedule(1, 8).total_iterations == 0
+
+
+def test_schedule_is_hashable_and_cacheable():
+    a = make_schedule(64, 8, ring=4, sample_shards=2)
+    b = make_schedule(64, 8, ring=4, sample_shards=2)
+    assert a == b and hash(a) == hash(b)
+    assert a != make_schedule(64, 8, ring=2, sample_shards=2)
+
+
+def test_invalid_ring_sizes_rejected():
+    with pytest.raises(ValueError, match="power of two"):
+        make_schedule(16, 8, ring=3)
+    with pytest.raises(ValueError, match="power of two"):
+        Schedule(p=4, min_bucket=2, ring=0, stages=((4, 3),))
+
+
+def test_invariant_violations_rejected_at_construction():
+    with pytest.raises(ValueError, match="power of two"):
+        Schedule(p=4, min_bucket=2, stages=((3, 3),))
+    with pytest.raises(ValueError, match="multiple of ring"):
+        Schedule(p=8, min_bucket=2, ring=4, stages=((2, 7),))
+    with pytest.raises(ValueError, match="cover"):
+        Schedule(p=8, min_bucket=2, stages=((4, 7),))
+    with pytest.raises(ValueError, match="sum to"):
+        Schedule(p=8, min_bucket=2, stages=((8, 3),))

@@ -16,7 +16,7 @@ from repro.train.trainer import TrainerConfig, train
 def test_full_causal_pipeline():
     """SEM generate -> ParaLiNGAM order -> B estimation -> graph recovered."""
     data = sem.generate(sem.SemSpec(p=10, n=8000, density="sparse", seed=21))
-    res, b = fit(data["x"], ParaLiNGAMConfig(method="threshold", chunk=4))
+    res, b = fit(data["x"], ParaLiNGAMConfig(order_backend="host", threshold=True, chunk=4))
     assert sem.is_valid_causal_order(res.order, data["b_true"])
     # edge recovery: thresholded support matches the truth
     support_true = np.abs(data["b_true"]) > 0.25
@@ -28,8 +28,8 @@ def test_full_causal_pipeline():
 
 def test_dense_and_threshold_agree_end_to_end():
     data = sem.generate(sem.SemSpec(p=12, n=3000, density="dense", seed=5))
-    r1 = causal_order(data["x"], ParaLiNGAMConfig(method="dense"))
-    r2 = causal_order(data["x"], ParaLiNGAMConfig(method="threshold", chunk=4))
+    r1 = causal_order(data["x"], ParaLiNGAMConfig(order_backend="host"))
+    r2 = causal_order(data["x"], ParaLiNGAMConfig(order_backend="host", threshold=True, chunk=4))
     assert r1.order == r2.order
     assert r2.comparisons < r1.comparisons_serial
 

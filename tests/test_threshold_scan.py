@@ -1,7 +1,7 @@
 """Thresholded device-resident scan: parity with the host threshold driver
 and the serial DirectLiNGAM oracle, plus device-counter sanity.
 
-``method="scan"`` + ``threshold=True`` runs the threshold state machine
+``order_backend="scan"`` + ``threshold=True`` runs the threshold state machine
 inside the single-dispatch outer loop; by the paper's Section 3.2 argument
 (any worker scoring below gamma has a *complete* score, any unfinished
 worker's partial score already exceeds gamma and only grows) the returned
@@ -32,12 +32,12 @@ def test_scan_threshold_parity(p, n, min_bucket):
     serial = direct_lingam.causal_order(x)
     r_host = causal_order(
         x,
-        ParaLiNGAMConfig(method="threshold", chunk=16, gamma0=1e-6,
+        ParaLiNGAMConfig(order_backend="host", threshold=True, chunk=16, gamma0=1e-6,
                          min_bucket=min_bucket),
     )
     r_scan = causal_order(
         x,
-        ParaLiNGAMConfig(method="scan", threshold=True, chunk=16, gamma0=1e-6,
+        ParaLiNGAMConfig(order_backend="scan", threshold=True, chunk=16, gamma0=1e-6,
                          min_bucket=min_bucket),
     )
     assert r_scan.order == r_host.order
@@ -50,7 +50,7 @@ def test_scan_threshold_counters_p64():
     paper's messaging-only halving, with real round counts threaded out."""
     x = _x(64, 1200, seed=13)
     res = causal_order(
-        x, ParaLiNGAMConfig(method="scan", threshold=True, chunk=16,
+        x, ParaLiNGAMConfig(order_backend="scan", threshold=True, chunk=16,
                             gamma0=1e-6)
     )
     assert res.comparisons < res.comparisons_dense
@@ -72,7 +72,7 @@ def test_scan_dense_counters_match_analytic():
     """The dense scan now reports device-derived counters too — they must
     equal the analytic messaging-only counts it used to hardcode."""
     x = _x(12, 1000, seed=3)
-    res = causal_order(x, ParaLiNGAMConfig(method="scan", min_bucket=8))
+    res = causal_order(x, ParaLiNGAMConfig(order_backend="scan", min_bucket=8))
     assert res.comparisons == res.comparisons_dense
     assert res.rounds == 0
     assert [it["comparisons"] for it in res.per_iteration] == [
@@ -84,7 +84,7 @@ def test_scan_threshold_truncation_warns():
     with pytest.warns(UserWarning, match="max_rounds"):
         res = causal_order(
             _x(8, 800, seed=5),
-            ParaLiNGAMConfig(method="scan", threshold=True, chunk=2,
+            ParaLiNGAMConfig(order_backend="scan", threshold=True, chunk=2,
                              max_rounds=1, min_bucket=8),
         )
     assert not res.converged
@@ -96,11 +96,11 @@ def test_scan_threshold_fused_config_independent():
     scan — same order, same device-counted comparisons."""
     x = _x(10, 1200, seed=7)
     base = causal_order(
-        x, ParaLiNGAMConfig(method="scan", threshold=True, min_bucket=8)
+        x, ParaLiNGAMConfig(order_backend="scan", threshold=True, min_bucket=8)
     )
     via_kernel = causal_order(
         x,
-        ParaLiNGAMConfig(method="scan", threshold=True, min_bucket=8,
+        ParaLiNGAMConfig(order_backend="scan", threshold=True, min_bucket=8,
                          score_backend="pallas_fused"),
     )
     assert base.order == via_kernel.order
