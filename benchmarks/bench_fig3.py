@@ -27,6 +27,13 @@ The ``ringthr_*`` lanes run the threshold state machine *inside* the ring at
 the same shard counts; their guarded metric is the device-measured
 comparison saving vs serial, zeroed on any order mismatch (benchmarks/
 trend.py ``ringthr_``).
+
+The ``hier_p{P}r{R}_*`` lanes run the two-level (pod, ring) messaging ring
+at equal total shards and report the device-measured wire model from
+``ParaLiNGAMResult.wire``: sequential cross-pod ppermute rounds per
+iteration (the flat ring pays S/2 of them; the hier plan strictly fewer),
+the overlapped-hop fraction, and an upper bound on bytes moved. Guarded
+metric (trend.py ``hier_``) is again saved_vs_serial x order parity.
 """
 
 from __future__ import annotations
@@ -199,4 +206,47 @@ def _ring_lanes(smoke: bool):
             f"comparisons={res.comparisons};rounds={res.rounds};"
             f"shards={r};dispatches_per_fit=1",
             p=p, n=n, shards=r, path="ring_threshold",
+        )
+
+    # Two-level (pod, ring) lanes at equal total shards. (2, 2) is excluded:
+    # its cross_seq equals the flat ring's S/2 = 2, so it demonstrates no
+    # wire win (the parity matrix in tests/test_hier_ring.py still covers
+    # it). The wire counters are *device-measured* (tallied at the ppermute
+    # call sites, validated per-iteration against HierPlan.hop_counts by the
+    # tests), so the printed cross-pod saving is what actually ran.
+    from repro.utils.shapes import next_pow2
+
+    for pods, big_r in ((2, 4), (4, 2), (4, 4)):
+        shards = pods * big_r
+        if shards > len(devs):
+            continue
+        mesh = Mesh(np.array(devs[:shards]).reshape(pods, big_r, 1),
+                    ("pod", "ring", "model"))
+        cfg_h = ParaLiNGAMConfig(order_backend="ring", threshold=True,
+                                 chunk=16, gamma0=1e-6, min_bucket=8,
+                                 ring_topology=(pods, big_r))
+        res = causal_order_ring(x, cfg_h, mesh=mesh)
+        us = time_fn(
+            lambda x: causal_order_ring(x, cfg_h, mesh=mesh).order, x,
+            iters=2 if smoke else 3,
+        )
+        match = int(res.order == res_scan.order
+                    and res.order == res_scanthr.order)
+        w = res.wire
+        # sequential cross-pod rounds per iteration vs the flat ring's S/2
+        # (per threshold round); upper bound on bytes moved: every hop
+        # carries at most the first-stage per-shard block of f32 samples.
+        iters_total = max(p - 1, 1)
+        hops_total = w["hops_intra"] + w["hops_cross"]
+        wire_mb = hops_total * (next_pow2(p) // shards) * n * 4 / 1e6
+        row(
+            f"hier_p{pods}r{big_r}_p{p}", us,
+            f"saved_vs_serial={100.0 * res.saving_vs_serial * match:.1f}%;"
+            f"match={match};shards={shards};"
+            f"seq_cross_hops={w['seq_cross_hops']};"
+            f"flat_seq_cross={res.rounds * (shards // 2)};"
+            f"overlap_frac={w['overlap_frac']:.3f};"
+            f"hops_per_iter={hops_total / iters_total:.1f};"
+            f"wire_mb<={wire_mb:.1f};dispatches_per_fit=1",
+            p=p, n=n, shards=shards, path="hier_ring",
         )

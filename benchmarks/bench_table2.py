@@ -65,3 +65,31 @@ def run(smoke: bool = False):
     row(f"table2_ijr904_slice_p{p_big}_para", t_para770 * 1e6,
         f"serial_est_s={t_serial_est:.0f};speedup_est={t_serial_est / t_para770:.0f}x;"
         f"paper_speedup=3152x_on_V100", p=p_big)
+
+    # Genome-scale slice through the two-level (pod, ring) messaging ring:
+    # the tentpole's target shape. Needs >= 8 devices (forced host devices
+    # count) for the (2, 4) topology; on smaller runners the row is simply
+    # absent and the trend gate reports SKIP. Guarded metric is order
+    # parity with the host driver (trend.py ``table2_ijr904_slice_hier``).
+    import jax
+
+    if len(jax.devices()) >= 8:
+        from jax.sharding import Mesh
+
+        from repro.dist.ring_order import causal_order_ring
+
+        mesh = Mesh(np.array(jax.devices()[:8]).reshape(2, 4, 1),
+                    ("pod", "ring", "model"))
+        cfg_h = ParaLiNGAMConfig(order_backend="ring", threshold=True,
+                                 chunk=32, ring_topology=(2, 4))
+        t0 = time.time()
+        res_h = causal_order_ring(x770, cfg_h, mesh=mesh)
+        t_hier = time.time() - t0
+        w = res_h.wire
+        row(f"table2_ijr904_slice_hier_p{p_big}", t_hier * 1e6,
+            f"match={int(res_h.order == res770.order)};"
+            f"converged={int(res_h.converged)};topology=2x4;"
+            f"seq_cross_hops={w['seq_cross_hops']};"
+            f"overlap_frac={w['overlap_frac']:.3f};"
+            f"saved_vs_serial={100.0 * res_h.saving_vs_serial:.1f}%",
+            p=p_big)

@@ -23,6 +23,14 @@ run's artifacts) against committed baselines and fails on a >``--factor``
     parity bit*: a mismatch zeroes the metric and trips the gate, a
     savings collapse below half the baseline trips it too — the PR-9
     threshold-in-ring win;
+  * ``hier_`` — the two-level (pod, ring) messaging ring at equal total
+    shards: threshold savings x order-parity bit, same contract as
+    ``ringthr_`` (the wire counters — sequential cross-pod rounds,
+    overlap fraction — are printed in the row for the human reader and
+    asserted against the analytic plan by tests/test_hier_ring.py);
+  * ``table2_ijr904_slice_hier`` — the genome-scale Table-2 slice driven
+    through the hierarchical ring: order parity with the host driver
+    (``metrics.match``), a pure correctness trend like ``ring_``;
   * ``batch_`` — batched one-dispatch ``fit_batch`` (and the mixed-shape
     serving engine) throughput vs the serial per-dataset ``fit`` loop
     (``metrics.vs_serial_loop``), the PR-5 dispatch-amortization win;
@@ -79,6 +87,8 @@ GUARDED = {
     "fig4_scanthr_": "vs_dense_host",
     "ring_": "match",
     "ringthr_": "saved_vs_serial",
+    "hier_": "saved_vs_serial",
+    "table2_ijr904_slice_hier": "match",
     "batch_": "vs_serial_loop",
     "serve_": "vs_serial_loop",
     "serve_prewarm": "cold_vs_prewarmed",

@@ -213,6 +213,14 @@ class ParaLiNGAMConfig:
     method: str | None = None  # DEPRECATED -> order_backend ("dense" ->
     #   "host", "threshold" -> "host"+threshold, "scan" -> "scan")
     ring: bool | None = None  # DEPRECATED -> order_backend="ring"
+    ring_topology: tuple | None = None  # (P, R) pod/ring split of the
+    #   messaging ring's row shards (``order_backend="ring"`` only): P pods
+    #   of R intra-pod shards run the two-level hop plan from
+    #   ``utils.schedule.make_hier_plan`` — intra-pod hop every step,
+    #   cross-pod exchange once per revolution. None derives the split from
+    #   the mesh (its ``pod`` axis, else flat); (1, R) forces the flat ring.
+    #   Both factors must be powers of two, and P*R must equal the mesh's
+    #   row-shard count at dispatch (``ConfigError`` otherwise).
     # dense path
     block_j: int = 32  # j-block for the HR matrix (bounds the (p,bj,n) buffer)
     score_backend: str = "auto"  # "xla" | "xla_fused" | "pallas" |
@@ -251,6 +259,19 @@ class ParaLiNGAMConfig:
                 f"order_backend={self.order_backend!r} is not one of "
                 f"{ORDER_BACKENDS}"
             )
+        if self.ring_topology is not None:
+            topo = tuple(self.ring_topology)
+            if (len(topo) != 2
+                    or any(not isinstance(v, int) or v < 1 or v & (v - 1)
+                           for v in topo)):
+                raise ConfigError(
+                    f"ring_topology={self.ring_topology!r} must be a (pods, "
+                    "ring) pair of power-of-two positive ints")
+            if self.order_backend != "ring":
+                raise ConfigError(
+                    "ring_topology is only meaningful with "
+                    f"order_backend='ring' (got {self.order_backend!r})")
+            object.__setattr__(self, "ring_topology", topo)
         if self.use_kernel is None and self.fused is None:
             return
         object.__setattr__(
@@ -273,6 +294,12 @@ class ParaLiNGAMResult:
     noise_var: np.ndarray | None = None  # Omega diagonal (set by ``fit``)
     diagnostics: object | None = None  # core.validate.DatasetDiagnostics
     #   when the fit ran with validate=True (admission guardrail record)
+    wire: dict | None = None  # ring-backend only: device-measured ppermute
+    #   round counters summed over the recovery — {"pods", "ring",
+    #   "hops_intra", "hops_cross", "hops_overlapped", "seq_hops",
+    #   "seq_cross_hops", "overlap_frac"} (see utils.schedule.HOP_* and
+    #   HierPlan.hop_counts, whose analytic per-iteration model these
+    #   validate). None for the host/scan drivers.
 
     @property
     def saving_vs_serial(self) -> float:
@@ -645,24 +672,52 @@ def _scan_order(xn, c, gamma0, gamma_growth, **kw):
 
 
 def _result_from_counters(order, comps_it, rounds_it, conv_it, p: int,
-                          max_rounds: int,
-                          stacklevel: int = 3) -> ParaLiNGAMResult:
+                          max_rounds: int, stacklevel: int = 3,
+                          hops_it=None,
+                          topology: tuple | None = None) -> ParaLiNGAMResult:
     """Host-side ParaLiNGAMResult from the device-measured per-iteration
     counters of the scan/fit pipeline (the one host readback point).
     ``stacklevel`` points the max_rounds warning at the caller of the public
-    entry point (3 = one public frame above this helper)."""
+    entry point (3 = one public frame above this helper). The ring driver
+    additionally passes ``hops_it`` — the (p, 4) per-iteration ppermute
+    round counters (``utils.schedule.HOP_*``) — and its (pods, ring)
+    ``topology``; they aggregate into ``ParaLiNGAMResult.wire`` and ride
+    each ``per_iteration`` record as a ``hops`` tuple."""
     comps_np = np.asarray(comps_it)
     rounds_np = np.asarray(rounds_it)
     conv_np = np.asarray(conv_it)
+    hops_np = None if hops_it is None else np.asarray(hops_it)
     per_iter = [
         {
             "r": r,
             "comparisons": int(comps_np[i]),
             "rounds": int(rounds_np[i]),
             "converged": bool(conv_np[i]),
+            **({} if hops_np is None
+               else {"hops": tuple(int(v) for v in hops_np[i])}),
         }
         for i, r in enumerate(range(p, 1, -1))
     ]
+    wire = None
+    if hops_np is not None:
+        from repro.utils.schedule import (
+            HOP_CROSS_OVL, HOP_CROSS_SEQ, HOP_INTRA_OVL, HOP_INTRA_SEQ,
+        )
+
+        tot = hops_np[: max(p - 1, 0)].sum(axis=0)
+        io, is_ = int(tot[HOP_INTRA_OVL]), int(tot[HOP_INTRA_SEQ])
+        co, cs = int(tot[HOP_CROSS_OVL]), int(tot[HOP_CROSS_SEQ])
+        all_hops = io + is_ + co + cs
+        wire = {
+            "pods": int(topology[0]) if topology else 1,
+            "ring": int(topology[1]) if topology else 1,
+            "hops_intra": io + is_,
+            "hops_cross": co + cs,
+            "hops_overlapped": io + co,
+            "seq_hops": is_ + cs,
+            "seq_cross_hops": cs,
+            "overlap_frac": (io + co) / all_hops if all_hops else 0.0,
+        }
     converged = bool(conv_np.all())
     if not converged:
         warnings.warn(
@@ -680,6 +735,7 @@ def _result_from_counters(order, comps_it, rounds_it, conv_it, p: int,
         rounds=int(rounds_np.sum()),
         per_iteration=per_iter,
         converged=converged,
+        wire=wire,
     )
 
 

@@ -23,8 +23,25 @@ with its atomicCAS flags, done here statically). The accumulator then rides
 the remaining hops home: total hops = R, so each block's credits arrive back
 at its owner, which adds them to its locally accumulated scores.
 
-Wire traffic per device is O(p/R * n) per step — the same as one block of
-compute input — and the p x p statistic matrix is never materialized
+Two-level form (``pod_axis``/``pod_size``): P pods of R shards each, the
+hop plan from ``repro.utils.schedule.make_hier_plan``. Blocks circulate the
+intra-pod ring every hop (neighbor-local wire) and cross the pod boundary
+once per intra-pod revolution; because the intra rotation has period R, the
+epoch-entry packet IS the packet the next epoch starts from, so the
+cross-pod ppermute is issued at epoch *start* and a full revolution of
+block compute hides its latency. The intra-pod block shifts stay
+double-buffered (hop k+1's ppermute issued before hop k's compute); only
+the credit/done riders — which depend on each hop's compute — move
+sequentially, and they are 1/n the packet size. Both bodies count their
+ppermute rounds at the call sites into a (4,) hop vector
+(``schedule.HOP_*``: intra/cross x overlapped/sequential) that the order
+driver threads out as device-measured wire counters; the counts equal the
+plan's analytic ``hop_counts`` model by construction of the shared walk.
+``pod_size=1`` is op-identical to the flat ring (same shifts, same
+summation order — bit-identical scores).
+
+Wire traffic per device is O(p/(P*R) * n) per step — the same as one block
+of compute input — and the p x p statistic matrix is never materialized
 globally. ``ring_find_root`` matches ``find_root_dense`` to f32 roundoff
 (identical per-entry math; only the summation order differs).
 """
@@ -42,6 +59,13 @@ from repro.core.pairwise import (
     pair_stat_matrix,
     residual_entropy_block,
     row_entropies,
+)
+from repro.utils.schedule import (
+    HOP_CROSS_OVL,
+    HOP_CROSS_SEQ,
+    HOP_INTRA_OVL,
+    HOP_INTRA_SEQ,
+    make_hier_plan,
 )
 
 
@@ -138,17 +162,29 @@ def _block_stat(x_own, x_vis, c_block, hx_own, hx_vis,
 
 
 def _ring_body(x_loc, c_loc, mask_loc, *, ring_axes: tuple, ring_sizes: tuple,
+               pod_axis: str | None = None, pod_size: int = 1,
                sample_axis: str | None = None, backend: str = "xla"):
     """Per-device ring schedule. x_loc: (m, n_loc); c_loc: (m, p); mask: (m,).
 
-    Returns the (m,) score shard (inf on dead rows). ``sample_axis`` names
-    the mesh axis the samples dimension is sharded over (None = replicated):
-    every entropy moment reduction then runs on n/|sample_axis| local samples
-    and is pmean'd — the packets that circulate shrink by the same factor, so
-    both HBM *and* ring wire traffic drop with the sample shard count."""
+    Returns ``(score, hops)``: the (m,) score shard (inf on dead rows) and
+    the static (4,) tuple of ppermute-round counts this trace issued (indexed
+    by ``schedule.HOP_*``). ``sample_axis`` names the mesh axis the samples
+    dimension is sharded over (None = replicated): every entropy moment
+    reduction then runs on n/|sample_axis| local samples and is pmean'd — the
+    packets that circulate shrink by the same factor, so both HBM *and* ring
+    wire traffic drop with the sample shard count.
+
+    ``pod_axis``/``pod_size`` select the two-level walk: blocks take one
+    intra-pod hop per processed step (over ``ring_axes``) and one cross-pod
+    hop per intra-pod revolution, per ``make_hier_plan(pod_size, R)``. The
+    default ``pod_size=1`` plan IS the flat schedule — same shifts, same
+    summation order as the pre-hierarchical body, bit-identical scores."""
     m = x_loc.shape[0]
     big_r = math.prod(ring_sizes)
-    r_idx = _flat_index(ring_axes, ring_sizes)
+    plan = make_hier_plan(pod_size, big_r)
+    q_idx = jax.lax.axis_index(pod_axis) if pod_axis is not None else 0
+    i_idx = _flat_index(ring_axes, ring_sizes)
+    d_idx = q_idx * big_r + i_idx  # flat block index, pod-major
 
     hx_loc = row_entropies(x_loc, mask_loc, psum_axis=sample_axis)
 
@@ -158,54 +194,92 @@ def _ring_body(x_loc, c_loc, mask_loc, *, ring_axes: tuple, ring_sizes: tuple,
         k = keep.astype(fwd.dtype)
         return k * jnp.sum(fwd, axis=1), k * jnp.sum(rev, axis=0)
 
-    # Step 0: intra-block pairs. One entropy pass gives the full HR block;
-    # the antisymmetric stat is hr - hr.T (as in the dense path), so the
-    # row-sum alone credits every ordered pair.
-    c_intra = jax.lax.dynamic_slice_in_dim(c_loc, r_idx * m, m, axis=1)
+    # Offset (0, 0): intra-block pairs. One entropy pass gives the full HR
+    # block; the antisymmetric stat is hr - hr.T (as in the dense path), so
+    # the row-sum alone credits every ordered pair.
+    c_intra = jax.lax.dynamic_slice_in_dim(c_loc, d_idx * m, m, axis=1)
     hr = residual_entropy_block(x_loc, c_intra, x_loc, sample_axis,
                                 backend=backend)
     stat = pair_stat_matrix(hx_loc, hr)
     pm = mask_loc[:, None] & mask_loc[None, :] & ~jnp.eye(m, dtype=bool)
     score, _ = credit(stat, pm, jnp.asarray(True))
 
-    # Steps 1..R//2: the visiting block (data + entropies + mask) arrives from
-    # one hop upstream each step. Double-buffered: the block packet is
-    # immutable, so the hop for step t+1 is issued *before* step t's compute —
-    # its ppermute has no data dependence on the running block compute, which
-    # lets the scheduler overlap transfer with the entropy evaluation. The
+    tally = [0, 0, 0, 0]
+
+    def shift(x, s, axes, sizes, kind):
+        tally[kind] += 1
+        return _shift_by(x, s, axes, sizes)
+
+    # The plan walk. The visiting block (data + entropies + mask) is
+    # immutable, so its movement is all *overlapped*: the intra-pod hop for
+    # step t+1 is issued before step t's compute (double-buffering — the
+    # ppermute has no data dependence on the running block compute), and the
+    # cross-pod exchange for the next epoch is issued at this epoch's START
+    # (the epoch-entry packet IS the next epoch's packet, because the intra
+    # rotation has period R) so a full revolution of compute hides it. The
     # credit accumulator (the part compute mutates) travels as its own tiny
     # (m,) packet shifted after each step's credits are known; its wire cost
     # is 1/n of the block's, so serializing it hides nothing.
-    n_steps = ring_steps(big_r)
-    pkt0 = {"x": x_loc, "hx": hx_loc, "mask": mask_loc}
-    acc = jnp.zeros((m,), jnp.float32)
-    pkt = _shift_by(pkt0, 1, ring_axes, ring_sizes)
-    for t in range(1, n_steps + 1):
-        nxt = (
-            _shift_by(pkt, 1, ring_axes, ring_sizes) if t < n_steps else None
+    acc = None
+    prev = None
+    cur = {"x": x_loc, "hx": hx_loc, "mask": mask_loc}
+    for eidx, (e, ts) in enumerate(plan.epochs):
+        nxt_entry = (
+            shift(cur, 1, (pod_axis,), (pod_size,), HOP_CROSS_OVL)
+            if eidx + 1 < len(plan.epochs) else None
         )
-        src = (r_idx - t) % big_r
-        keep = jnp.asarray(process_pair(big_r, t, r_idx, src))
-        c_vis = jax.lax.dynamic_slice_in_dim(c_loc, src * m, m, axis=1)
-        stat = _block_stat(x_loc, pkt["x"], c_vis, hx_loc, pkt["hx"],
-                           sample_axis, backend=backend)
-        pm = mask_loc[:, None] & pkt["mask"][None, :]
-        fwd, rev = credit(stat, pm, keep)
-        score = score + fwd
-        # acc rides with the block: shift last step's credits along, add this
-        # step's. After step t it holds all credits for block (r_idx - t).
-        acc = _shift_by(acc, 1, ring_axes, ring_sizes) + rev if t > 1 else rev
-        pkt = nxt
+        pos = 0
+        for j, (t, dedup) in enumerate(ts):
+            if pos != t:  # advance the packet to this hop's offset
+                cur = shift(cur, 1, ring_axes, ring_sizes, HOP_INTRA_OVL)
+                pos = t
+            nxt = (
+                shift(cur, 1, ring_axes, ring_sizes, HOP_INTRA_OVL)
+                if j + 1 < len(ts) else None
+            )
+            src = plan.src(e, t, q_idx, i_idx)
+            keep = jnp.asarray(plan.keep(dedup, d_idx, src))
+            c_vis = jax.lax.dynamic_slice_in_dim(c_loc, src * m, m, axis=1)
+            stat = _block_stat(x_loc, cur["x"], c_vis, hx_loc, cur["hx"],
+                               sample_axis, backend=backend)
+            pm = mask_loc[:, None] & cur["mask"][None, :]
+            fwd, rev = credit(stat, pm, keep)
+            score = score + fwd
+            # acc rides with the block: shift the previous hops' credits to
+            # the block's new position, add this hop's. After hop (e, t) it
+            # holds all credits for block (q - e, i - t).
+            if acc is None:
+                acc = rev
+            else:
+                dt = (t - prev[1]) % big_r
+                de = (e - prev[0]) % pod_size
+                if dt:
+                    acc = shift(acc, dt, ring_axes, ring_sizes, HOP_INTRA_SEQ)
+                if de:
+                    acc = shift(acc, de, (pod_axis,), (pod_size,),
+                                HOP_CROSS_SEQ)
+                acc = acc + rev
+            prev = (e, t)
+            if nxt is not None:
+                cur, pos = nxt, t + 1
+        cur = nxt_entry
 
-    # Ride the accumulator the rest of the way home in one multi-hop shift
-    # (total hops == R, so each block's credits land back at its owner).
-    acc = _shift_by(acc, big_r - n_steps, ring_axes, ring_sizes)
-    score = score + acc
-    return jnp.where(mask_loc, score, jnp.inf)
+    # Ride the accumulator the rest of the way home (one multi-hop round per
+    # level: each block's credits land back at its owner).
+    if acc is not None:
+        dt = (-prev[1]) % big_r
+        de = (-prev[0]) % pod_size
+        if dt:
+            acc = shift(acc, dt, ring_axes, ring_sizes, HOP_INTRA_SEQ)
+        if de:
+            acc = shift(acc, de, (pod_axis,), (pod_size,), HOP_CROSS_SEQ)
+        score = score + acc
+    return jnp.where(mask_loc, score, jnp.inf), tuple(tally)
 
 
 def _ring_threshold_body(x_loc, c_loc, mask_loc, *, ring_axes: tuple,
-                         ring_sizes: tuple, sample_axis: str | None = None,
+                         ring_sizes: tuple, pod_axis: str | None = None,
+                         pod_size: int = 1, sample_axis: str | None = None,
                          gamma0: float = 1e-5, gamma_growth: float = 2.0,
                          chunk: int = 16, max_rounds: int = 100_000):
     """The paper's threshold state machine (Algorithms 4-6) run per ring
@@ -251,19 +325,37 @@ def _ring_threshold_body(x_loc, c_loc, mask_loc, *, ring_axes: tuple,
     scores is the true root no matter how the chunks were scheduled across
     shards.
 
-    Returns ``(scores, comparisons, rounds, converged)``: the ``(m_l,)``
-    score shard (inf on dead rows; partial above gamma — fine for the
-    argmin) plus replicated device-measured counters. ``converged`` is
-    False iff ``max_rounds`` cut the loop before termination held.
+    In the two-level form (``pod_axis``/``pod_size``) one cycle walks
+    ``make_hier_plan(pod_size, R)`` instead of the flat hop sequence: the
+    immutable block packet (data, entropies, mask, departure-time score and
+    finished snapshot) moves on the overlapped schedule — next intra hop
+    prefetched before this hop's compute, the cross-pod exchange issued a
+    full intra revolution ahead — while the credit/done riders, which DO
+    depend on each hop's compute, catch up sequentially right before the hop
+    that consumes them. Rider values are bit-identical to shifting the whole
+    packet at once (the immutable parts carry no state, and a rider at hop k
+    is exactly the rider updated at hop k-1 moved by the same block delta),
+    so threshold credits/done-marks/finished-bits ride unchanged.
+
+    Returns ``(scores, comparisons, rounds, converged, hops)``: the
+    ``(m_l,)`` score shard (inf on dead rows; partial above gamma — fine for
+    the argmin) plus replicated device-measured counters; ``hops`` is the
+    (4,) int32 ppermute-round tally (``schedule.HOP_*``) = rounds x the
+    per-cycle walk. ``converged`` is False iff ``max_rounds`` cut the loop
+    before termination held.
     """
     m_l = x_loc.shape[0]
     big_r = math.prod(ring_sizes)
-    m = m_l * big_r
-    r_idx = _flat_index(ring_axes, ring_sizes)
-    n_steps = ring_steps(big_r)
+    plan = make_hier_plan(pod_size, big_r)
+    m = m_l * pod_size * big_r
+    all_axes = ((pod_axis,) + tuple(ring_axes) if pod_axis is not None
+                else tuple(ring_axes))
+    q_idx = jax.lax.axis_index(pod_axis) if pod_axis is not None else 0
+    i_idx = _flat_index(ring_axes, ring_sizes)
+    r_idx = q_idx * big_r + i_idx  # flat block index, pod-major
 
     hx_loc = row_entropies(x_loc, mask_loc, psum_axis=sample_axis)
-    mask_all = jax.lax.all_gather(mask_loc, ring_axes, tiled=True)  # (m,)
+    mask_all = jax.lax.all_gather(mask_loc, all_axes, tiled=True)  # (m,)
     own_gid = r_idx * m_l + jnp.arange(m_l, dtype=jnp.int32)  # global row ids
     pv = (mask_loc[:, None] & mask_all[None, :]
           & (own_gid[:, None] != jnp.arange(m, dtype=jnp.int32)[None, :]))
@@ -279,9 +371,11 @@ def _ring_threshold_body(x_loc, c_loc, mask_loc, *, ring_axes: tuple,
     rows = jnp.broadcast_to(jnp.arange(m_l)[:, None], (m_l, b))
 
     def hop(s, d, gamma, comps, credit, done, x_vis, hx_vis, mask_vis,
-            s_vis, fin_vis, src, t: int):
-        """Process one visiting block (t=0: own block). Returns the updated
-        own state and the visitor's riders."""
+            s_vis, fin_vis, src, keep_flag, intra: bool):
+        """Process one visiting block (``intra``: own block). ``keep_flag``
+        is the plan's dedup predicate for this hop (True off the
+        self-conjugate offsets). Returns the updated own state and the
+        visitor's riders."""
         col0 = src * m_l
         vis_gid = col0 + jnp.arange(m_l, dtype=jnp.int32)
         d_vis = jax.lax.dynamic_slice(d, (0, col0), (m_l, m_l))
@@ -291,8 +385,6 @@ def _ring_threshold_body(x_loc, c_loc, mask_loc, *, ring_axes: tuple,
 
         fin = jnp.all(d, axis=1)
         active = (s < gamma) & ~fin & mask_loc
-        keep_flag = (jnp.asarray(True) if t == 0
-                     else process_pair(big_r, t, r_idx, src))
 
         # --- host-initiated: each active own row's first pending chunk of
         # the visiting columns.
@@ -307,16 +399,16 @@ def _ring_threshold_body(x_loc, c_loc, mask_loc, *, ring_axes: tuple,
         stat = (hx_vis[cols] - hx_loc[:, None]) + (hr_fwd - hr_rev)
 
         proc = active[:, None] & jnp.take_along_axis(pending, cols, axis=1)
-        if t == 0:
+        if intra:
             # Intra-block: both endpoints resident, so simultaneous mutual
             # proposals are possible — lower index keeps (host dedup rule).
             prop = jnp.zeros((m_l, m_l), bool).at[rows, cols].max(proc)
             partner_also = jnp.take_along_axis(prop.T, cols, axis=1)
             keep = proc & (~partner_also | (rows < cols))
         else:
-            # Cross-block: the antipodal schedule assigns each unordered
-            # block pair to exactly one hosting endpoint per cycle (even R,
-            # t == R/2: the lower-indexed device keeps both directions).
+            # Cross-block: the plan assigns each unordered block pair to
+            # exactly one hosting endpoint per cycle (at self-conjugate
+            # offsets the lower flat-indexed device keeps both directions).
             keep = proc & keep_flag
 
         fwd = jnp.where(keep, jnp.square(jnp.minimum(0.0, stat)), 0.0)
@@ -324,7 +416,7 @@ def _ring_threshold_body(x_loc, c_loc, mask_loc, *, ring_axes: tuple,
         s2 = s + jnp.sum(fwd, axis=1)
         d2 = d.at[rows, cols_g].max(keep)
         comps2 = comps + jnp.sum(keep).astype(comps.dtype)
-        if t == 0:
+        if intra:
             # Both endpoints are own rows: credit + symmetric done locally.
             # Intra-block is already bidirectional (every active own row
             # initiates), so there is no visitor-initiated pass.
@@ -378,52 +470,99 @@ def _ring_threshold_body(x_loc, c_loc, mask_loc, *, ring_axes: tuple,
         terminal=jnp.asarray(False),
     )
 
+    cycle_tally = {"v": (0, 0, 0, 0)}
+
     def cycle(st):
         s, d, gamma = st["s"], st["d"], st["gamma"]
         comps = jnp.asarray(0, cdtype)
         zero_credit = jnp.zeros((m_l,), x_loc.dtype)
         zero_done = jnp.zeros((m_l, m), bool)
 
-        # Hop 0: intra-block pairs (no packet, no riders; the visitor
-        # arguments are unused at t=0).
+        tally = [0, 0, 0, 0]
+
+        def shift(x, sft, axes, sizes, kind):
+            tally[kind] += 1
+            return _shift_by(x, sft, axes, sizes)
+
+        # Offset (0, 0): intra-block pairs (no packet, no riders; the
+        # visitor arguments are unused on the intra hop).
         s, d, comps, _, _ = hop(s, d, gamma, comps, zero_credit, zero_done,
                                 x_loc, hx_loc, mask_loc, s, jnp.all(d, axis=1),
-                                r_idx, 0)
+                                r_idx, jnp.asarray(True), True)
 
-        # Hops 1..R//2: the block packet circulates with its riders. The
-        # departure-time score + finished snapshot ride along so remote
-        # hosts can gate visitor-initiated work on (stale score + in-flight
-        # credits) < gamma.
-        pkt = {"x": x_loc, "hx": hx_loc, "mask": mask_loc,
-               "s0": s, "fin": jnp.all(d, axis=1),
-               "credit": zero_credit, "done": zero_done}
-        if n_steps:
-            pkt = _shift_by(pkt, 1, ring_axes, ring_sizes)
-        for t in range(1, n_steps + 1):
-            src = (r_idx - t) % big_r
-            s, d, comps, cr, dn = hop(
-                s, d, gamma, comps, pkt["credit"], pkt["done"],
-                pkt["x"], pkt["hx"], pkt["mask"], pkt["s0"], pkt["fin"],
-                src, t,
+        # The plan walk. The *immutable* part of the packet — block data,
+        # entropies, mask, plus the departure-time score and finished
+        # snapshot remote hosts gate visitor-initiated work on — moves on
+        # the overlapped schedule (next intra hop prefetched before this
+        # hop's compute; the cross-pod exchange issued an epoch early). The
+        # credit/done riders depend on each hop's compute, so they catch up
+        # sequentially: shifted by the same block delta right before the
+        # hop that consumes them — values bit-identical to moving the whole
+        # packet at once, at 1/n the overlapped wire cost.
+        cur = {"x": x_loc, "hx": hx_loc, "mask": mask_loc,
+               "s0": s, "fin": jnp.all(d, axis=1)}
+        credit_r, done_r = zero_credit, zero_done
+        prev = None
+        for eidx, (e, ts) in enumerate(plan.epochs):
+            nxt_entry = (
+                shift(cur, 1, (pod_axis,), (pod_size,), HOP_CROSS_OVL)
+                if eidx + 1 < len(plan.epochs) else None
             )
-            pkt = {**pkt, "credit": cr, "done": dn}
-            if t < n_steps:
-                pkt = _shift_by(pkt, 1, ring_axes, ring_sizes)
-        if n_steps:
-            # Ride the riders the rest of the way home (total hops == R).
-            home = _shift_by({"credit": pkt["credit"], "done": pkt["done"]},
-                             big_r - n_steps, ring_axes, ring_sizes)
-            s = s + home["credit"]
-            d = d | home["done"]
+            pos = 0
+            for j, (t, dedup) in enumerate(ts):
+                if pos != t:  # advance the packet to this hop's offset
+                    cur = shift(cur, 1, ring_axes, ring_sizes, HOP_INTRA_OVL)
+                    pos = t
+                nxt = (
+                    shift(cur, 1, ring_axes, ring_sizes, HOP_INTRA_OVL)
+                    if j + 1 < len(ts) else None
+                )
+                if prev is not None:  # riders catch up to this hop
+                    riders = {"credit": credit_r, "done": done_r}
+                    dt = (t - prev[1]) % big_r
+                    de = (e - prev[0]) % pod_size
+                    if dt:
+                        riders = shift(riders, dt, ring_axes, ring_sizes,
+                                       HOP_INTRA_SEQ)
+                    if de:
+                        riders = shift(riders, de, (pod_axis,), (pod_size,),
+                                       HOP_CROSS_SEQ)
+                    credit_r, done_r = riders["credit"], riders["done"]
+                src = plan.src(e, t, q_idx, i_idx)
+                keep_flag = jnp.asarray(plan.keep(dedup, r_idx, src))
+                s, d, comps, credit_r, done_r = hop(
+                    s, d, gamma, comps, credit_r, done_r,
+                    cur["x"], cur["hx"], cur["mask"], cur["s0"], cur["fin"],
+                    src, keep_flag, False,
+                )
+                prev = (e, t)
+                if nxt is not None:
+                    cur, pos = nxt, t + 1
+            cur = nxt_entry
+        if prev is not None:
+            # Ride the riders the rest of the way home (one multi-hop round
+            # per level: every rider lands back at its owner).
+            riders = {"credit": credit_r, "done": done_r}
+            dt = (-prev[1]) % big_r
+            de = (-prev[0]) % pod_size
+            if dt:
+                riders = shift(riders, dt, ring_axes, ring_sizes,
+                               HOP_INTRA_SEQ)
+            if de:
+                riders = shift(riders, de, (pod_axis,), (pod_size,),
+                               HOP_CROSS_SEQ)
+            s = s + riders["credit"]
+            d = d | riders["done"]
+        cycle_tally["v"] = tuple(tally)
 
         # Cycle epilogue: globally consistent gamma/termination bookkeeping.
-        processed = jax.lax.psum(comps, ring_axes)
+        processed = jax.lax.psum(comps, all_axes)
         gamma2 = jnp.where(processed > 0, gamma,
                            gamma * jnp.asarray(gamma_growth, gamma.dtype))
         fin = jnp.all(d, axis=1)
         below = (s < gamma2) & mask_loc
-        n_bf = jax.lax.psum(jnp.sum(below & fin), ring_axes)
-        n_bu = jax.lax.psum(jnp.sum(below & ~fin), ring_axes)
+        n_bf = jax.lax.psum(jnp.sum(below & fin), all_axes)
+        n_bu = jax.lax.psum(jnp.sum(below & ~fin), all_axes)
         return dict(
             s=s, d=d, gamma=gamma2,
             comparisons=st["comparisons"] + processed,
@@ -436,8 +575,13 @@ def _ring_threshold_body(x_loc, c_loc, mask_loc, *, ring_axes: tuple,
 
     final = jax.lax.while_loop(cond, cycle, state0)
     scores = jnp.where(mask_loc, final["s"], jnp.inf)
+    # Device-measured wire counters: the per-cycle walk is static (tallied
+    # while tracing ``cycle``), the cycle count is not — total rounds x the
+    # per-cycle (4,) tally, zero when the loop never ran.
+    hops = (final["rounds"].astype(jnp.int32)
+            * jnp.asarray(cycle_tally["v"], jnp.int32))
     return (scores, final["comparisons"], final["rounds"],
-            final["terminal"] | ~has_pairs)
+            final["terminal"] | ~has_pairs, hops)
 
 
 # ---------------------------------------------------------------------------
@@ -466,6 +610,14 @@ def ring_find_root(xn, c, mask, mesh, row_axes: tuple | None = None,
     moments-emitting square kernel — the fused triangular kernel finalizes
     its scores in-kernel and therefore has nothing to psum, so the ring's
     kernel route is always the raw-sum emitter + ``finalize_moments``.
+
+    A *leading* ``"pod"`` axis of size > 1 in ``row_axes`` selects the
+    two-level ring (pods are NOT flattened away): blocks circulate the
+    remaining axes as the intra-pod ring every hop and cross the pod
+    boundary once per intra-pod revolution, per
+    ``utils.schedule.make_hier_plan``. Block ownership is pod-major
+    (flat index q * R + i), so the sharding layout — and the recovered
+    scores' row order — match the flat ring over the same axes.
     """
     del unroll
     from repro.kernels import ops as kops
@@ -475,12 +627,18 @@ def ring_find_root(xn, c, mask, mesh, row_axes: tuple | None = None,
     if row_axes is None:
         row_axes = tuple(a for a in ("pod", "data") if a in sizes)
     row_axes = tuple(a for a in row_axes if sizes.get(a, 1) > 1)
+    pod_axis = None
+    pod_size = 1
+    ring_axes = row_axes
+    if len(row_axes) >= 2 and row_axes[0] == "pod":
+        pod_axis, ring_axes = row_axes[0], row_axes[1:]
+        pod_size = sizes[pod_axis]
     big_r = 1
     for a in row_axes:
         big_r *= sizes[a]
     p, n = xn.shape
 
-    if big_r <= 1 or p % big_r != 0 or len(row_axes) > 2:
+    if big_r <= 1 or p % big_r != 0 or len(ring_axes) > 2:
         from repro.core.pairwise import dense_scores
 
         s, _, _ = dense_scores(xn, c, mask, block_j=min(32, p))
@@ -494,14 +652,15 @@ def ring_find_root(xn, c, mask, mesh, row_axes: tuple | None = None,
         sample_axis = None
     x_spec = P(row_axes, sample_axis)
 
-    ring_sizes = tuple(sizes[a] for a in row_axes)
+    ring_sizes = tuple(sizes[a] for a in ring_axes)
     # jax.shard_map is the compat-installed surface on 0.4.x and the real
     # API on newer JAX (where jax.experimental.shard_map no longer exists).
     body = jax.shard_map(
         lambda x, cm, mk: _ring_body(
-            x, cm, mk, ring_axes=row_axes, ring_sizes=ring_sizes,
+            x, cm, mk, ring_axes=ring_axes, ring_sizes=ring_sizes,
+            pod_axis=pod_axis, pod_size=pod_size,
             sample_axis=sample_axis, backend=backend,
-        ),
+        )[0],
         mesh=mesh,
         in_specs=(x_spec, P(row_axes, None), P(row_axes)),
         out_specs=P(row_axes),
@@ -511,18 +670,37 @@ def ring_find_root(xn, c, mask, mesh, row_axes: tuple | None = None,
     return jnp.argmin(scores), scores
 
 
-def ring_find_root_jit(mesh, score_backend: str = "auto"):
+def ring_find_root_jit(mesh, score_backend: str = "auto",
+                       topology: tuple | None = None):
     """jit-compiled ring find-root over *all* devices of ``mesh``.
 
-    The (possibly multi-dim) mesh is flattened to a single ``ring`` axis so
-    every device owns one row block — the paper's worker decomposition with
-    workers == devices.
+    By default a mesh WITHOUT a ``"pod"`` axis (or with a size-1 one) is
+    flattened to a single ``ring`` axis so every device owns one row block —
+    the paper's worker decomposition with workers == devices. A mesh whose
+    ``"pod"`` axis has size > 1 keeps it: the remaining devices flatten into
+    the intra-pod ``ring`` axis and the find-root runs the two-level plan.
+    ``topology=(P, R)`` overrides both (must factor the device count);
+    ``(1, R)`` forces the flat ring — the degenerate-axis escape hatch the
+    pod=1 bit-identity test pins.
     """
-    flat = Mesh(mesh.devices.reshape(-1), ("ring",))
+    n_dev = mesh.devices.size
+    if topology is None:
+        pods = dict(mesh.shape).get("pod", 1)
+        topology = (pods, n_dev // pods)
+    pods, ring = topology
+    if pods * ring != n_dev:
+        raise ValueError(
+            f"topology {topology} does not factor {n_dev} devices")
+    if pods > 1:
+        hier = Mesh(mesh.devices.reshape(pods, ring), ("pod", "ring"))
+        row_axes = ("pod", "ring")
+    else:
+        hier = Mesh(mesh.devices.reshape(-1), ("ring",))
+        row_axes = ("ring",)
 
     @jax.jit
     def fn(xn, c, mask):
-        return ring_find_root(xn, c, mask, flat, row_axes=("ring",),
+        return ring_find_root(xn, c, mask, hier, row_axes=row_axes,
                               score_backend=score_backend)
 
     return fn

@@ -3,18 +3,21 @@ promoted from a find-root helper (dist/ring.py) to the driver of all p
 DirectLiNGAM iterations.
 
 ``causal_order_ring`` keeps the per-device row blocks, correlation rows and
-credit accumulators device-resident across the whole recovery on a 2-axis
-``("ring", "model")`` mesh:
+credit accumulators device-resident across the whole recovery on a 3-axis
+``("pod", "ring", "model")`` mesh:
 
-  * **ring axis** — the p rows (and the matching correlation rows) shard into
-    contiguous blocks, exactly as in ``ring_find_root``. Each outer iteration
-    runs the messaging ring schedule (blocks circulate, one evaluation
-    credits both endpoints, antipodal dedup via ``process_pair``), picks the
-    global root from the all-gathered (m,)-score vector, then applies the
-    Eq. (10)/(11) rank-1 data + covariance updates *in place on each shard* —
-    only the root's data row (n/|model| floats) and correlation row (m
-    floats) cross the wire, never the blocks themselves. The ordered row is
-    re-masked, not re-sharded.
+  * **pod x ring axes** — the p rows (and the matching correlation rows)
+    shard into contiguous blocks over the P x R row grid (flat block index
+    q * R + i, pod-major), exactly as in ``ring_find_root``. Each outer
+    iteration runs the two-level messaging schedule from
+    ``utils.schedule.make_hier_plan`` (blocks circulate the intra-pod ring
+    every hop, cross the pod boundary once per intra-pod revolution, one
+    evaluation credits both endpoints, antipodal dedup across both levels;
+    P=1 IS the flat ring), picks the global root from the all-gathered
+    (m,)-score vector, then applies the Eq. (10)/(11) rank-1 data +
+    covariance updates *in place on each shard* — only the root's data row
+    (n/|model| floats) and correlation row (m floats) cross the wire, never
+    the blocks themselves. The ordered row is re-masked, not re-sharded.
   * **model axis** — the samples axis n shards over ``model`` inside the ring
     body: every entropy moment reduction (``pairwise.stream_entropy``) runs
     on n/|model| local samples and the two Hyvarinen moments are pmean'd
@@ -101,48 +104,56 @@ def _make_ring_order_fn(mesh: Mesh, sample_axis: str | None, p: int, n: int,
     (``dist.ring._ring_threshold_body``) — same argmin-root contract, with
     device-measured comparison/round/convergence counters instead of the
     dense path's analytic ones."""
+    pods = int(dict(mesh.shape).get("pod", 1))
     big_r = mesh.shape["ring"]
-    sched = make_schedule(p, min_bucket, ring=big_r,
+    shards = pods * big_r
+    row_axes = ("pod", "ring")
+    sched = make_schedule(p, min_bucket, ring=big_r, pods=pods,
                           sample_shards=int(dict(mesh.shape).get("model", 1)))
     stages = list(sched.stages)
     cdtype = jnp.int32
 
     def make_stage(m: int, cnt: int, pos: int):
-        m_l = m // big_r
+        m_l = m // shards
 
         def iteration(k, st, ig_all):
-            x_loc, c_loc, mk, ig, order, comps_it, rounds_it, conv_it = st
-            mk_all = jax.lax.all_gather(mk, "ring", tiled=True)
+            (x_loc, c_loc, mk, ig, order, comps_it, rounds_it, conv_it,
+             hops_it) = st
+            mk_all = jax.lax.all_gather(mk, row_axes, tiled=True)
             # --- find root: messaging ring over the live blocks ---
             if threshold:
-                scores, comps, rounds, conv = _ring_threshold_body(
+                scores, comps, rounds, conv, hops = _ring_threshold_body(
                     x_loc, c_loc, mk, ring_axes=("ring",),
-                    ring_sizes=(big_r,), sample_axis=sample_axis,
+                    ring_sizes=(big_r,), pod_axis="pod", pod_size=pods,
+                    sample_axis=sample_axis,
                     gamma0=gamma0, gamma_growth=gamma_growth,
                     chunk=chunk, max_rounds=max_rounds,
                 )
             else:
-                scores = _ring_body(
+                scores, hop_tally = _ring_body(
                     x_loc, c_loc, mk, ring_axes=("ring",),
-                    ring_sizes=(big_r,),
+                    ring_sizes=(big_r,), pod_axis="pod", pod_size=pods,
                     sample_axis=sample_axis, backend=backend,
                 )
+                hops = jnp.asarray(hop_tally, jnp.int32)
                 r = jnp.sum(mk_all).astype(cdtype)  # live rows this iteration
                 comps = r * (r - 1) // 2
                 rounds = jnp.asarray(0, jnp.int32)
                 conv = jnp.asarray(True)
-            s_all = jax.lax.all_gather(scores, "ring", tiled=True)  # (m,)
+            s_all = jax.lax.all_gather(scores, row_axes, tiled=True)  # (m,)
             root = jnp.argmin(s_all).astype(jnp.int32)  # stage-buffer index
             order = order.at[pos + k].set(ig_all[root])
             comps_it = comps_it.at[pos + k].set(comps)
             rounds_it = rounds_it.at[pos + k].set(rounds.astype(jnp.int32))
             conv_it = conv_it.at[pos + k].set(conv)
+            hops_it = hops_it.at[pos + k].set(hops)
 
             # --- broadcast the root's rows: the only per-iteration wire
             # traffic besides the (m,) score/mask gathers. x_root is the
             # *local sample shard* of the root row ((n/|model|,)), c_root its
             # full correlation row ((m,)).
-            my = jax.lax.axis_index("ring")
+            my = (jax.lax.axis_index("pod") * big_r
+                  + jax.lax.axis_index("ring"))
             owns = (my == root // m_l)
             r_l = root % m_l
             x_root = jax.lax.psum(
@@ -150,14 +161,14 @@ def _make_ring_order_fn(mesh: Mesh, sample_axis: str | None, p: int, n: int,
                     owns, jax.lax.dynamic_index_in_dim(x_loc, r_l, 0, False),
                     0.0,
                 ),
-                "ring",
+                row_axes,
             )
             c_root = jax.lax.psum(
                 jnp.where(
                     owns, jax.lax.dynamic_index_in_dim(c_loc, r_l, 0, False),
                     0.0,
                 ),
-                "ring",
+                row_axes,
             )
 
             # --- UpdateData (Alg. 7, Eq. 10) on own rows, in place.
@@ -191,29 +202,30 @@ def _make_ring_order_fn(mesh: Mesh, sample_axis: str | None, p: int, n: int,
 
             # --- retire the root: re-mask, don't re-shard.
             mk2 = mk & (row_ids != root)
-            return x2, c2, mk2, ig, order, comps_it, rounds_it, conv_it
+            return (x2, c2, mk2, ig, order, comps_it, rounds_it, conv_it,
+                    hops_it)
 
         def body(x_loc, c_loc, mk_loc, ig_loc, order, comps_it, rounds_it,
-                 conv_it):
+                 conv_it, hops_it):
             # The row-id -> variable-id map only changes at compactions, so
             # its gather runs once per stage, not once per iteration.
-            ig_all = jax.lax.all_gather(ig_loc, "ring", tiled=True)
+            ig_all = jax.lax.all_gather(ig_loc, row_axes, tiled=True)
             return jax.lax.fori_loop(
                 0, cnt, lambda k, st: iteration(k, st, ig_all),
                 (x_loc, c_loc, mk_loc, ig_loc, order, comps_it, rounds_it,
-                 conv_it),
+                 conv_it, hops_it),
             )
 
         return jax.shard_map(
             body,
             mesh=mesh,
             in_specs=(
-                P("ring", sample_axis), P("ring", None), P("ring"),
-                P("ring"), P(), P(), P(), P(),
+                P(row_axes, sample_axis), P(row_axes, None), P(row_axes),
+                P(row_axes), P(), P(), P(), P(), P(),
             ),
             out_specs=(
-                P("ring", sample_axis), P("ring", None), P("ring"),
-                P("ring"), P(), P(), P(), P(),
+                P(row_axes, sample_axis), P(row_axes, None), P(row_axes),
+                P(row_axes), P(), P(), P(), P(), P(),
             ),
             check_vma=False,
         )
@@ -230,6 +242,7 @@ def _make_ring_order_fn(mesh: Mesh, sample_axis: str | None, p: int, n: int,
         comps_it = jnp.zeros((p,), cdtype)
         rounds_it = jnp.zeros((p,), jnp.int32)
         conv_it = jnp.ones((p,), bool)
+        hops_it = jnp.zeros((p, 4), jnp.int32)
         idx_g = jnp.arange(p, dtype=jnp.int32)
         xb, cb = xn, c
         mloc = jnp.ones((p,), bool)
@@ -247,13 +260,15 @@ def _make_ring_order_fn(mesh: Mesh, sample_axis: str | None, p: int, n: int,
                 cb = cb[sel][:, sel]
                 mloc = jnp.arange(m) < live
                 m_cur = m
-            xb, cb, mloc, idx_g, order, comps_it, rounds_it, conv_it = stage(
-                xb, cb, mloc, idx_g, order, comps_it, rounds_it, conv_it
+            (xb, cb, mloc, idx_g, order, comps_it, rounds_it, conv_it,
+             hops_it) = stage(
+                xb, cb, mloc, idx_g, order, comps_it, rounds_it, conv_it,
+                hops_it
             )
             pos += cnt
         # One live row remains; no find-root needed (matches the host driver).
         order = order.at[p - 1].set(idx_g[jnp.argmax(mloc)])
-        return order, comps_it, rounds_it, conv_it
+        return order, comps_it, rounds_it, conv_it, hops_it
 
     return run
 
@@ -263,13 +278,18 @@ def _make_ring_order_fn(mesh: Mesh, sample_axis: str | None, p: int, n: int,
 # ---------------------------------------------------------------------------
 
 
-def _canonical_mesh(mesh, n: int):
-    """Flatten any mesh to the 2-axis ``("ring", "model")`` form.
+def _canonical_mesh(mesh, n: int, pods: int | None = None):
+    """Canonicalize any mesh to the 3-axis ``("pod", "ring", "model")`` form.
 
     The model size is taken from the given mesh's ``model`` axis (1 when
-    absent); every other axis folds into the ring. Returns
-    ``(canon_mesh, ring_size, sample_axis)`` with ``sample_axis`` None when
-    the samples axis cannot shard (no model axis, or n not divisible)."""
+    absent); the remaining devices split into ``pods`` rings (``pods``
+    defaults to the mesh's own ``pod`` axis size, 1 when absent — a flat
+    ring with a degenerate pod axis). Returns
+    ``(canon_mesh, pods, ring_size, sample_axis)`` with ``sample_axis`` None
+    when the samples axis cannot shard (no model axis, or n not divisible).
+    Raises ``ValueError`` when ``pods`` does not divide the row-shard
+    count — the caller turns an explicit-topology mismatch into a
+    ``ConfigError``."""
     if mesh is None:
         from repro.dist import compat
 
@@ -277,14 +297,22 @@ def _canonical_mesh(mesh, n: int):
     if mesh is None:
         devs = np.array(jax.devices())
         msize = 1
+        mesh_pods = 1
     else:
         devs = np.asarray(mesh.devices).reshape(-1)
         msize = int(dict(mesh.shape).get("model", 1))
+        mesh_pods = int(dict(mesh.shape).get("pod", 1))
     total = devs.size
-    big_r = total // msize
-    canon = Mesh(devs.reshape(big_r, msize), ("ring", "model"))
+    rows = total // msize
+    if pods is None:
+        pods = mesh_pods if rows % mesh_pods == 0 else 1
+    if pods < 1 or rows % pods:
+        raise ValueError(
+            f"pod count {pods} does not divide the {rows} row shards")
+    big_r = rows // pods
+    canon = Mesh(devs.reshape(pods, big_r, msize), ("pod", "ring", "model"))
     sample_axis = "model" if (msize > 1 and n % msize == 0) else None
-    return canon, big_r, sample_axis
+    return canon, pods, big_r, sample_axis
 
 
 def causal_order_ring(x, config=None, mesh=None):
@@ -292,22 +320,29 @@ def causal_order_ring(x, config=None, mesh=None):
 
     ``mesh`` defaults to the active ``jax.set_mesh`` mesh, else a flat ring
     over all devices; any shape is canonicalized by :func:`_canonical_mesh`
-    (``model`` axis -> sample sharding, everything else -> ring). Degenerate
-    configurations (non-power-of-two ring) fall back to
-    ``causal_order_scan`` — same order (and same dense/threshold inner
-    evaluation), single shard.
+    (``model`` axis -> sample sharding, ``pod`` axis -> the two-level ring's
+    pod level, everything else -> ring). ``config.ring_topology = (P, R)``
+    overrides the pod/ring split explicitly — it must factor the row-shard
+    count (``ConfigError`` otherwise); ``P=1`` forces the flat ring.
+    Degenerate configurations (non-power-of-two pod or ring count) fall
+    back to ``causal_order_scan`` — same order (and same dense/threshold
+    inner evaluation), single shard.
 
     ``config.threshold`` selects the per-iteration evaluation: the dense
     messaging ring sweep (every live pair evaluated once, both endpoints
     credited), or the per-shard threshold state machine
     (``dist.ring._ring_threshold_body``) whose comparison savings compose
-    with the ring's 1/(R*M) HBM/wire scaling. Either way the
+    with the ring's 1/(P*R*M) HBM/wire scaling. Either way the
     ``ParaLiNGAMResult`` counters are uniform with the host/scan drivers:
     per-iteration device-measured ``comparisons``/``rounds``/``converged``
     (analytic r(r-1)/2, 0, True for the dense sweep — measured on device
-    from the live mask, not host bookkeeping).
+    from the live mask, not host bookkeeping) — plus the ring-only ``wire``
+    surface: per-iteration ppermute-round counters (intra/cross x
+    overlapped/sequential) aggregated into the hop/exchange/overlap model
+    EXPERIMENTS.md quotes.
     """
     from repro.core.paralingam import (
+        ConfigError,
         ParaLiNGAMConfig,
         _result_from_counters,
         causal_order_scan,
@@ -316,8 +351,18 @@ def causal_order_ring(x, config=None, mesh=None):
     cfg = config or ParaLiNGAMConfig()
     x = jnp.asarray(x, cfg.dtype)
     p, n = x.shape
-    canon, big_r, sample_axis = _canonical_mesh(mesh, n)
-    if big_r & (big_r - 1):
+    want_pods = cfg.ring_topology[0] if cfg.ring_topology else None
+    try:
+        canon, pods, big_r, sample_axis = _canonical_mesh(mesh, n, want_pods)
+    except ValueError as e:
+        raise ConfigError(
+            f"ring_topology={cfg.ring_topology} does not fit the device "
+            f"mesh: {e}") from e
+    if cfg.ring_topology and cfg.ring_topology[1] != big_r:
+        raise ConfigError(
+            f"ring_topology={cfg.ring_topology} does not fit the device "
+            f"mesh: {pods} pods leave {big_r} ring shards")
+    if (big_r & (big_r - 1)) or (pods & (pods - 1)):
         return causal_order_scan(x, cfg)
 
     from repro.kernels import ops as kops
@@ -331,6 +376,7 @@ def causal_order_ring(x, config=None, mesh=None):
         gamma0=float(cfg.gamma0), gamma_growth=float(cfg.gamma_growth),
         max_rounds=cfg.max_rounds,
     )
-    order, comps_it, rounds_it, conv_it = run(xn, c)
+    order, comps_it, rounds_it, conv_it, hops_it = run(xn, c)
     return _result_from_counters(order, comps_it, rounds_it, conv_it, p,
-                                 cfg.max_rounds)
+                                 cfg.max_rounds, hops_it=hops_it,
+                                 topology=(pods, big_r))

@@ -122,17 +122,22 @@ NO_SHARDING = ShardingRules()
 
 
 def make_rules(cfg, mesh, batch_axes: tuple | None = None) -> ShardingRules:
-    """Build the rules for ``cfg`` on ``mesh`` (axes ``pod``/``data``/``model``).
+    """Build the rules for ``cfg`` on ``mesh`` (axes ``pod``/``data``/
+    ``ring``/``model``).
 
-    * batch axes default to every present DP axis with size > 1; pass
-      ``batch_axes=()`` to replicate the batch (e.g. global_batch=1 cells).
+    * batch axes default to every present DP axis with size > 1 — including
+      the two-level messaging ring's 3-axis ``("pod", "ring", "model")``
+      form, whose leading pod axis is kept as an outer DP axis rather than
+      flattened away; pass ``batch_axes=()`` to replicate the batch (e.g.
+      global_batch=1 cells).
     * ``model`` becomes the TP axis when present with size > 1 — except for
       MoE configs whose expert count does not divide it (expert parallelism
       requires e % shards == 0), which fall back to replicated compute.
     """
     sizes = _mesh_sizes(mesh)
     if batch_axes is None:
-        batch_axes = tuple(a for a in ("pod", "data") if sizes.get(a, 1) > 1)
+        batch_axes = tuple(
+            a for a in ("pod", "data", "ring") if sizes.get(a, 1) > 1)
     model_axis = "model" if sizes.get("model", 1) > 1 else None
     n_experts = getattr(cfg, "n_experts", 0) or 0
     if model_axis is not None and n_experts and n_experts % sizes["model"] != 0:

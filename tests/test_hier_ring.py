@@ -1,0 +1,253 @@
+"""Two-level ("pod", "ring") hierarchical messaging ring: the parity matrix
+of ISSUE 10.
+
+Orders from ``causal_order_ring`` on (P, R) pod/ring grids must be
+bit-identical to the host driver, the device-resident scan, the *flat* ring
+at equal total shards, and the serial numpy oracle — threshold mode on and
+off, with and without 2-way sample sharding — and the device-measured hop
+counters (``ParaLiNGAMResult.wire`` + the per-iteration ``hops`` tuples)
+must equal the analytic ``HierPlan.hop_counts`` wire model, so the
+EXPERIMENTS.md hop-latency-hiding model is validated by the same runs that
+prove order parity.
+
+Multi-shard cases carry ``requires_multidevice(n)`` and auto-skip below n
+devices; the CI ``multidevice`` lanes force 8 and 16 host devices so every
+grid — including the 16-device sample-sharded ones — runs on every PR.
+"""
+
+import functools
+import types
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import direct_lingam, sem
+from repro.core.covariance import cov_matrix, normalize
+from repro.core.paralingam import (
+    ConfigError,
+    ParaLiNGAMConfig,
+    causal_order,
+    causal_order_scan,
+    find_root_dense,
+)
+from repro.dist.ring import ring_find_root_jit
+from repro.dist.ring_order import causal_order_ring
+from repro.dist.sharding import make_rules
+from repro.utils.schedule import make_hier_plan
+
+# p -> (n, min_bucket); problems and seeds shared with tests/test_ring_order.py
+CASES = {8: (2500, 8), 17: (1800, 8), 64: (1000, 32)}
+# (pods, ring) grids of the ISSUE's parity matrix; device need is P*R
+GRIDS = ((1, 2), (2, 2), (2, 4), (4, 2))
+
+
+@functools.lru_cache(maxsize=None)
+def _problem(p: int):
+    n, min_bucket = CASES[p]
+    x = sem.generate(sem.SemSpec(p=p, n=n, density="sparse", seed=p))["x"]
+    serial = direct_lingam.causal_order(x)
+    return x, tuple(serial), min_bucket
+
+
+def _hier_mesh(pods: int, ring: int, msize: int = 1) -> Mesh:
+    devs = np.array(jax.devices()[: pods * ring * msize])
+    return Mesh(devs.reshape(pods, ring, msize), ("pod", "ring", "model"))
+
+
+def _hop_model(pods: int, ring: int):
+    hc = make_hier_plan(pods, ring).hop_counts()
+    return (hc["intra_ovl"], hc["intra_seq"], hc["cross_ovl"],
+            hc["cross_seq"])
+
+
+def _assert_hier_parity(p: int, pods: int, ring: int, msize: int = 1,
+                        threshold: bool = False):
+    x, serial, min_bucket = _problem(p)
+    cfg = ParaLiNGAMConfig(order_backend="ring", min_bucket=min_bucket,
+                           threshold=threshold, ring_topology=(pods, ring))
+    res = causal_order_ring(x, cfg, mesh=_hier_mesh(pods, ring, msize))
+    assert res.order == list(serial)
+    # scan driver parity (dense and thresholded alike)
+    r_scan = causal_order_scan(
+        x, ParaLiNGAMConfig(min_bucket=min_bucket, threshold=threshold))
+    assert res.order == r_scan.order
+    # flat ring at equal total shards: same orders, same compaction points
+    # (the bucket plan depends only on the shard product)
+    flat = causal_order_ring(
+        x,
+        ParaLiNGAMConfig(order_backend="ring", min_bucket=min_bucket,
+                         threshold=threshold,
+                         ring_topology=(1, pods * ring)),
+        mesh=_hier_mesh(pods, ring, msize),
+    )
+    assert res.order == flat.order
+    assert res.converged
+    # device-measured hop counters == the analytic plan, per iteration:
+    # the dense sweep walks the plan once, the threshold machine once per
+    # round — the wire model is validated by the parity run itself
+    model = _hop_model(pods, ring)
+    for it in res.per_iteration:
+        want = tuple(v * (it["rounds"] if threshold else 1) for v in model)
+        assert it["hops"] == want
+    assert res.wire["pods"] == pods and res.wire["ring"] == ring
+    if pods * ring > 1:
+        assert res.wire["hops_overlapped"] > 0
+        assert res.wire["overlap_frac"] > 0
+    return res
+
+
+# ---------------------------------------------------------------------------
+# the parity matrix: dense + threshold on every (P, R) grid
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pods,ring", GRIDS)
+@pytest.mark.parametrize("p", sorted(CASES))
+def test_hier_order_parity_dense(p, pods, ring, request):
+    request.applymarker(pytest.mark.requires_multidevice(pods * ring))
+    if len(jax.devices()) < pods * ring:
+        pytest.skip(f"needs {pods * ring} devices")
+    _assert_hier_parity(p, pods, ring)
+
+
+@pytest.mark.parametrize("pods,ring", GRIDS)
+@pytest.mark.parametrize("p", sorted(CASES))
+def test_hier_order_parity_threshold(p, pods, ring):
+    if len(jax.devices()) < pods * ring:
+        pytest.skip(f"needs {pods * ring} devices")
+    res = _assert_hier_parity(p, pods, ring, threshold=True)
+    assert res.comparisons <= res.comparisons_dense
+
+
+@pytest.mark.requires_multidevice(8)
+@pytest.mark.parametrize("p", sorted(CASES))
+def test_hier_order_sample_sharded(p):
+    """(2, 2, 2) mesh: two pods of two shards AND 2-way sample sharding —
+    psum'd entropy moments compose with the two-level hop plan."""
+    _assert_hier_parity(p, 2, 2, msize=2)
+
+
+@pytest.mark.requires_multidevice(16)
+@pytest.mark.parametrize("pods,ring", ((2, 4), (4, 2)))
+@pytest.mark.parametrize("threshold", (False, True))
+def test_hier_order_sample_sharded_16dev(pods, ring, threshold, p=64):
+    _assert_hier_parity(p, pods, ring, msize=2, threshold=threshold)
+
+
+@pytest.mark.requires_multidevice(16)
+def test_hier_order_four_by_four(p=64):
+    _assert_hier_parity(p, 4, 4)
+
+
+# ---------------------------------------------------------------------------
+# find-root: degenerate pod axis + dense parity
+# ---------------------------------------------------------------------------
+
+
+def _find_root_problem(p=16, n=512, seed=0):
+    rng = np.random.default_rng(seed)
+    xn = normalize(jnp.asarray(rng.standard_normal((p, n)), jnp.float32))
+    return xn, cov_matrix(xn), jnp.ones((p,), bool)
+
+
+@pytest.mark.requires_multidevice(8)
+def test_pod1_topology_bit_identical_to_flat_ring():
+    """The degenerate-axis contract: a 3-axis mesh with its pod level forced
+    to P=1 via ``topology=(1, R)`` must produce bit-identical scores to the
+    flat ring — the two-level walk at P=1 IS the flat schedule."""
+    xn, c, mask = _find_root_problem()
+    flat = ring_find_root_jit(
+        Mesh(np.array(jax.devices()[:8]).reshape(8, 1), ("ring", "model")))
+    hier_mesh = Mesh(np.array(jax.devices()[:8]).reshape(2, 4),
+                     ("pod", "ring"))
+    deg = ring_find_root_jit(hier_mesh, topology=(1, 8))
+    r_f, s_f = flat(xn, c, mask)
+    r_d, s_d = deg(xn, c, mask)
+    assert int(r_f) == int(r_d)
+    assert np.array_equal(np.asarray(s_f), np.asarray(s_d))
+
+
+@pytest.mark.requires_multidevice(8)
+@pytest.mark.parametrize("pods,ring", ((2, 4), (4, 2), (2, 2), (8, 1)))
+def test_hier_find_root_matches_dense(pods, ring):
+    """ring_find_root_jit keeps a pod axis (no flattening): every (P, R)
+    split matches the dense oracle to f32 summation order."""
+    xn, c, mask = _find_root_problem()
+    root_d, s_d = find_root_dense(xn, c, mask, block_j=16)
+    mesh = Mesh(np.array(jax.devices()[: pods * ring]).reshape(pods, ring),
+                ("pod", "ring"))
+    fn = ring_find_root_jit(mesh, topology=(pods, ring))
+    root_h, s_h = fn(xn, c, mask)
+    assert int(root_d) == int(root_h)
+    np.testing.assert_allclose(np.asarray(s_d), np.asarray(s_h), rtol=2e-4)
+
+
+@pytest.mark.requires_multidevice(8)
+def test_find_root_jit_defaults_to_mesh_pod_axis():
+    """Without an explicit topology the mesh's own pod axis selects the
+    two-level ring — the 3-axis production shape is consumed as-is."""
+    xn, c, mask = _find_root_problem()
+    root_d, s_d = find_root_dense(xn, c, mask, block_j=16)
+    mesh = Mesh(np.array(jax.devices()[:8]).reshape(2, 2, 2),
+                ("pod", "data", "model"))
+    root_h, s_h = ring_find_root_jit(mesh)(xn, c, mask)
+    assert int(root_d) == int(root_h)
+    np.testing.assert_allclose(np.asarray(s_d), np.asarray(s_h), rtol=2e-4)
+
+
+def test_find_root_jit_rejects_bad_topology():
+    with pytest.raises(ValueError, match="does not factor"):
+        ring_find_root_jit(
+            Mesh(np.array(jax.devices()[:1]).reshape(1), ("ring",)),
+            topology=(2, 4))
+
+
+# ---------------------------------------------------------------------------
+# config + sharding-rules surface
+# ---------------------------------------------------------------------------
+
+
+def test_make_rules_keeps_pod_axis_on_3axis_mesh():
+    """make_rules on the ("pod", "ring", "model") mesh: pods stay a leading
+    DP axis (not flattened away), ring joins the batch axes, model is TP."""
+    mesh = types.SimpleNamespace(shape={"pod": 2, "ring": 4, "model": 2})
+    rules = make_rules(types.SimpleNamespace(), mesh)
+    assert rules.batch_axes == ("pod", "ring")
+    assert rules.model_axis == "model"
+    assert rules.batch_shards == 8
+    # degenerate pod axis drops out, exactly like a size-1 data axis
+    mesh1 = types.SimpleNamespace(shape={"pod": 1, "ring": 4, "model": 2})
+    assert make_rules(types.SimpleNamespace(), mesh1).batch_axes == ("ring",)
+
+
+def test_ring_topology_config_validation():
+    with pytest.raises(ConfigError, match="power-of-two"):
+        ParaLiNGAMConfig(order_backend="ring", ring_topology=(3, 2))
+    with pytest.raises(ConfigError, match="power-of-two"):
+        ParaLiNGAMConfig(order_backend="ring", ring_topology=(2, 0))
+    with pytest.raises(ConfigError, match="power-of-two"):
+        ParaLiNGAMConfig(order_backend="ring", ring_topology=(2,))
+    with pytest.raises(ConfigError, match="order_backend"):
+        ParaLiNGAMConfig(order_backend="scan", ring_topology=(2, 2))
+
+
+@pytest.mark.requires_multidevice(4)
+def test_ring_topology_mesh_mismatch_raises():
+    x, _, min_bucket = _problem(8)
+    cfg = ParaLiNGAMConfig(order_backend="ring", min_bucket=min_bucket,
+                           ring_topology=(4, 4))
+    with pytest.raises(ConfigError, match="does not fit"):
+        causal_order_ring(x, cfg, mesh=_hier_mesh(2, 2))
+
+
+def test_ring_topology_routes_through_causal_order():
+    """cfg.ring_topology rides causal_order's ring routing end to end on the
+    default all-devices mesh — a flat (1, n_devices) split, same order."""
+    x, serial, min_bucket = _problem(8)
+    res = causal_order(
+        x, ParaLiNGAMConfig(order_backend="ring", min_bucket=min_bucket,
+                            ring_topology=(1, len(jax.devices()))))
+    assert res.order == list(serial)

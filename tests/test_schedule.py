@@ -1,11 +1,18 @@
 """Property tests of the topology-aware bucket schedule
 (``repro.utils.schedule``) — the single stage plan consumed by the scan and
-ring order drivers.
+ring order drivers — and of the two-level ``("pod", "ring")`` hop plan
+(``make_hier_plan``) the hierarchical messaging ring executes.
 
-Invariants checked over a grid of (p, min_bucket, ring) shapes:
+Invariants checked over a grid of (p, min_bucket, ring[, pods]) shapes:
 coverage (every stage buffer holds all its live rows), power-of-two and
-ring-divisibility of every stage size, iteration counts summing to p - 1,
-scan == ring at R = 1, and the degenerate wide-ring plan. Violations must be
+pod*ring-divisibility of every stage size, iteration counts summing to
+p - 1, scan == ring at R = 1, plan invariance across (P, R) factorizations
+of one shard count, and the degenerate wide-ring plan. For the hop plan:
+exactly-once coverage of every unordered block pair across both levels,
+P = 1 reproducing the flat ``process_pair`` schedule, and the analytic
+``hop_counts`` wire model (P=1 == the flat body's hop count; cross-pod
+sequential rounds at hier topologies strictly below the flat ring's
+sequential rounds at equal total shards). Violations must be
 construction-time ``ValueError``s, never silent wrong orders.
 """
 
@@ -13,12 +20,21 @@ import itertools
 
 import pytest
 
-from repro.utils.schedule import Schedule, make_schedule
+from repro.utils.schedule import (
+    HOP_CROSS_OVL,
+    HOP_CROSS_SEQ,
+    HOP_INTRA_OVL,
+    HOP_INTRA_SEQ,
+    Schedule,
+    make_hier_plan,
+    make_schedule,
+)
 from repro.utils.shapes import next_pow2
 
 PS = (2, 3, 5, 8, 16, 17, 31, 64, 85, 100, 129)
 MIN_BUCKETS = (1, 4, 8, 32)
 RINGS = (1, 2, 4, 8)
+PODS = (1, 2, 4, 8)
 
 
 @pytest.mark.parametrize(
@@ -105,3 +121,140 @@ def test_invariant_violations_rejected_at_construction():
         Schedule(p=8, min_bucket=2, stages=((4, 7),))
     with pytest.raises(ValueError, match="sum to"):
         Schedule(p=8, min_bucket=2, stages=((8, 3),))
+
+
+# ---------------------------------------------------------------------------
+# the pod level of the bucket schedule
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "p,pods,ring", itertools.product(PS, (2, 4), (1, 2, 4))
+)
+def test_schedule_pod_invariants(p, pods, ring):
+    """With pods > 1 every stage size stays pow-2 AND a multiple of the
+    total shard count P*R (every shard of both levels keeps an equal
+    non-empty block)."""
+    sched = make_schedule(p, 4, ring=ring, pods=pods)
+    shards = pods * ring
+    assert sched.shards == shards
+    assert sched.total_iterations == p - 1
+    for m, _cnt, _pos in sched.walk():
+        assert m & (m - 1) == 0
+        assert m % shards == 0
+        assert sched.block(m) * shards == m
+        assert sched.block(m) >= 1
+
+
+@pytest.mark.parametrize("p,min_bucket", itertools.product(PS, MIN_BUCKETS))
+@pytest.mark.parametrize("shards", (2, 4, 8, 16))
+def test_schedule_depends_only_on_shard_product(p, min_bucket, shards):
+    """Every (P, R) factorization of one shard count shares ONE stage plan —
+    the hierarchical and flat rings of equal width compact at the same
+    iterations, which is what makes their orders comparable bit-for-bit."""
+    plans = {
+        make_schedule(p, min_bucket, ring=shards // pods, pods=pods).stages
+        for pods in (1, 2, 4, 8, 16)
+        if pods <= shards and shards % pods == 0
+    }
+    assert len(plans) == 1
+
+
+def test_schedule_pod_rejections():
+    with pytest.raises(ValueError, match="power of two"):
+        make_schedule(16, 8, ring=2, pods=3)
+    with pytest.raises(ValueError, match="multiple of ring"):
+        Schedule(p=16, min_bucket=2, ring=2, pods=4, stages=((4, 15),))
+
+
+# ---------------------------------------------------------------------------
+# the two-level hop plan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pods,ring", itertools.product(PODS, RINGS))
+def test_hier_plan_exactly_once_pair_coverage(pods, ring):
+    """Simulate the walk on every device: each unordered block pair must be
+    processed exactly once per iteration, across BOTH ring levels."""
+    plan = make_hier_plan(pods, ring)
+    s = pods * ring
+    seen = {}
+    for q in range(pods):
+        for i in range(ring):
+            d = q * ring + i
+            for e, t, dedup in plan.processed_offsets():
+                src = plan.src(e, t, q, i)
+                if plan.keep(dedup, d, src):
+                    assert src != d, "a processed offset may never be (0, 0)"
+                    key = (min(d, src), max(d, src))
+                    seen[key] = seen.get(key, 0) + 1
+    want = {(a, b) for a in range(s) for b in range(a + 1, s)}
+    assert set(seen) == want
+    assert all(v == 1 for v in seen.values())
+
+
+@pytest.mark.parametrize("ring", (1, 2, 4, 8, 16))
+def test_hier_plan_p1_is_the_flat_ring_schedule(ring):
+    """P=1 must reproduce ``dist.ring.process_pair`` exactly: one epoch,
+    hops t = 1..R/2, the antipodal dedup only at t = R/2 (even R)."""
+    from repro.dist.ring import process_pair, ring_steps
+
+    plan = make_hier_plan(1, ring)
+    assert plan.exchange_cadence == ring
+    assert len(plan.epochs) == 1
+    offsets = plan.processed_offsets()
+    assert [t for _e, t, _dd in offsets] == list(range(1, ring_steps(ring) + 1))
+    for _e, t, dedup in offsets:
+        # dedup hops are exactly those where process_pair tie-breaks on the
+        # device index (the higher-indexed endpoint drops the pair)
+        assert dedup == (not process_pair(ring, t, 1, 0))
+
+
+@pytest.mark.parametrize("pods,ring", itertools.product(PODS, RINGS))
+def test_hier_plan_dedup_offsets_are_self_conjugate(pods, ring):
+    for e, t, dedup in make_hier_plan(pods, ring).processed_offsets():
+        conj = ((pods - e) % pods, (ring - t) % ring)
+        assert dedup == ((e, t) == conj)
+
+
+@pytest.mark.parametrize("ring", (2, 4, 8, 16))
+def test_hop_counts_flat_matches_the_flat_body(ring):
+    """P=1 wire model == the flat ``_ring_body``: R/2 overlapped packet
+    rounds (1 pre-shift + R/2 - 1 prefetches), R/2 sequential rider rounds
+    (R/2 - 1 catch-ups + 1 ride home), nothing cross-pod."""
+    hc = make_hier_plan(1, ring).hop_counts()
+    assert hc["intra_ovl"] == ring // 2
+    assert hc["intra_seq"] == ring // 2
+    assert hc["cross_ovl"] == hc["cross_seq"] == 0
+    assert hc["overlap_frac"] == 0.5
+
+
+@pytest.mark.parametrize("pods,ring", ((2, 4), (4, 2), (4, 4), (2, 8), (8, 2)))
+def test_hop_counts_hier_beats_flat_sequential_cross_hops(pods, ring):
+    """The tentpole's wire win: at equal total shards S = P*R, a flat ring
+    spanning the pods pays cross-pod latency on ALL S/2 sequential rider
+    rounds; the two-level plan pays it on strictly fewer (the riders cross
+    pods only at epoch transitions + the ride home), with every block
+    packet round overlapped behind compute."""
+    hc = make_hier_plan(pods, ring).hop_counts()
+    flat_seq_cross = (pods * ring) // 2  # flat ring: every rider round may
+    #   cross a pod boundary when the S shards span the pods
+    assert hc["cross_seq"] < flat_seq_cross
+    assert hc["overlap_frac"] > 0
+    # totals are conserved: the plan still moves every packet R/2-equivalent
+    # times — only *where* the hops land (overlapped vs sequential, intra vs
+    # cross) changes
+    assert hc["total"] == (hc["intra_ovl"] + hc["intra_seq"]
+                           + hc["cross_ovl"] + hc["cross_seq"])
+
+
+def test_hop_counts_indices_cover_the_vector():
+    assert sorted((HOP_INTRA_OVL, HOP_INTRA_SEQ,
+                   HOP_CROSS_OVL, HOP_CROSS_SEQ)) == [0, 1, 2, 3]
+
+
+def test_hier_plan_rejects_non_pow2():
+    with pytest.raises(ValueError, match="power of two"):
+        make_hier_plan(3, 4)
+    with pytest.raises(ValueError, match="power of two"):
+        make_hier_plan(2, 5)
